@@ -1,0 +1,65 @@
+"""E5 — paper Table 5 / Figs 9-11: the CONV evaluation suite (DeepBench
+subset spanning DeepSpeech / OCR / Face Recognition / Vision / Speaker ID /
+ResNet)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.backend import SimulatedTPUBackend
+from repro.core.heuristics import VendorHeuristicLibrary
+from repro.core.search import oracle_search
+from repro.core.space import CONV_SPACE, conv_input
+from .common import get_trained_tuner, save, table
+
+# paper Table 5: (N, P(H), Q(W), K, C, R, S, name)
+TABLE5 = [
+    (16, 79, 341, 32, 1, 5, 20, "Conv1-DeepSpeech"),
+    (16, 38, 166, 32, 32, 5, 10, "Conv2-DeepSpeech"),
+    (16, 24, 240, 32, 16, 3, 3, "Conv3-OCR"),
+    (16, 12, 120, 64, 32, 3, 3, "Conv4-OCR"),
+    (8, 54, 54, 64, 64, 3, 3, "Conv5-Face"),
+    (8, 27, 27, 128, 128, 3, 3, "Conv6-Face"),
+    (16, 14, 14, 48, 512, 5, 5, "Conv7-Face"),
+    (16, 7, 7, 128, 832, 5, 5, "Conv8-Face"),
+    (8, 112, 112, 128, 64, 3, 3, "Conv9-Vision"),
+    (8, 56, 56, 256, 128, 3, 3, "Conv10-Vision"),
+    (16, 128, 39, 174, 64, 5, 5, "Conv11-Speaker"),
+    (16, 256, 19, 87, 128, 5, 5, "Conv12-Speaker"),
+    (16, 7, 7, 512, 512, 3, 3, "Conv13-ResNET"),
+    (16, 7, 7, 2048, 1024, 1, 1, "Conv14-ResNET"),
+]
+
+
+def run(fast: bool = True, dtype_bits: int = 16) -> dict:
+    be = SimulatedTPUBackend(noise=0.0)
+    tuner = get_trained_tuner("conv", fast=fast)
+    vendor = VendorHeuristicLibrary.conv(CONV_SPACE)
+
+    rows, speedups = [], []
+    for n, h, w, k, c, r, s, name in TABLE5:
+        inputs = conv_input(n, h, w, c, k, r, s, dtype_bits=dtype_bits)
+        meas = lambda cfg: be.measure("conv", cfg, inputs)
+        v = be.measure("conv", vendor.select(inputs), inputs)
+        _, bk = vendor.best_kernel(inputs, meas)
+        res = tuner.search(inputs)
+        ours = be.measure("conv", res.best, inputs)
+        speedups.append(ours / v)
+        rows.append({"conv": name, "NPQ": n * h * w, "CRS": c * r * s,
+                     "vendor": f"{v:.1f}", "best-kernel": f"{bk:.1f}",
+                     "isaac": f"{ours:.1f}",
+                     "vs vendor": f"{ours / v:.2f}x"})
+
+    dt = {16: "bf16", 32: "fp32"}[dtype_bits]
+    print(table(rows, ["conv", "NPQ", "CRS", "vendor", "best-kernel",
+                       "isaac", "vs vendor"],
+                f"E5 / Table 5 + Fig 9-11 — CONV TFLOPS ({dt}, "
+                f"simulated TPU v5e)"))
+    print(f"\ngeo-mean speedup vs vendor heuristic: "
+          f"{np.exp(np.mean(np.log(speedups))):.2f}x")
+    save(f"conv_{dt}", {"rows": rows})
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""E2/E3 — paper Table 2 (MLP architecture sweep, +/- log transform) and
+Fig. 5 (cross-validation MSE vs dataset size)."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core.backend import SimulatedTPUBackend
+from repro.core.dataset import generate_dataset
+from repro.core.features import Featurizer, target_transform
+from repro.core.mlp import MLP, TABLE2_ARCHS
+from repro.core.space import GEMM_SPACE
+from .common import save, table
+
+
+def _fit_mse(ds_tr, ds_val, hidden, log, epochs, seed=0):
+    f = Featurizer(GEMM_SPACE, log=log)
+    X_raw = f.raw_batch(list(zip(ds_tr.inputs, ds_tr.configs)))
+    f.fit(X_raw)
+    X, y = f.transform(X_raw), target_transform(ds_tr.tflops)
+    Xv = f.transform(f.raw_batch(list(zip(ds_val.inputs, ds_val.configs))))
+    yv = target_transform(ds_val.tflops)
+    m = MLP.create(jax.random.PRNGKey(seed), f.dim, hidden=hidden)
+    m.fit(X, y, epochs=epochs, verbose=False)
+    return m.mse(Xv, yv)
+
+
+def run(fast: bool = True) -> dict:
+    n = 20000 if fast else 200000
+    epochs = 25 if fast else 60
+    ds, _ = generate_dataset(GEMM_SPACE, n, seed=0,
+                             backend=SimulatedTPUBackend(noise=0.03))
+    tr, val = ds.split(val_frac=0.08)
+
+    # -- Table 2: architecture sweep, with and without log features --------
+    archs = TABLE2_ARCHS if not fast else TABLE2_ARCHS[:5]
+    rows = []
+    for hidden in archs:
+        mse_log = _fit_mse(tr, val, hidden, True, epochs)
+        mse_raw = (_fit_mse(tr, val, hidden, False, epochs)
+                   if len(hidden) <= 3 else None)   # paper leaves '-' too
+        nw = sum(a * b for a, b in zip(
+            (val.featurize()[0].dim,) + hidden, hidden + (1,)))
+        rows.append({"hidden layers": str(list(hidden)),
+                     "#weights": f"{nw/1e3:.0f}k",
+                     "MSE (log)": f"{mse_log:.3f}",
+                     "MSE (no log)": ("-" if mse_raw is None
+                                      else f"{mse_raw:.3f}")})
+    print(table(rows, ["hidden layers", "#weights", "MSE (log)",
+                       "MSE (no log)"],
+                "E2 / Table 2 — MLP architecture sweep"))
+
+    # -- Fig. 5: MSE vs dataset size ----------------------------------------
+    sizes = [1000, 4000, 16000, len(tr)] if fast else \
+        [5000, 20000, 50000, 100000, len(tr)]
+    curve = []
+    for s in sizes:
+        mse = _fit_mse(tr.subset(s), val, (64, 128, 64), True, epochs)
+        curve.append({"n_train": s, "MSE": f"{mse:.3f}"})
+    print()
+    print(table(curve, ["n_train", "MSE"],
+                "E3 / Fig. 5 — cross-validation MSE vs dataset size"))
+    save("mlp", {"table2": rows, "fig5": curve})
+    return {"table2": rows, "fig5": curve}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""E8/E9 — roofline tables from the dry-run artifacts (results/dryrun/).
+
+Reads the JSON artifacts produced by ``python -m repro.launch.dryrun`` —
+never recompiles.  Emits the per-cell three-term roofline table used by
+EXPERIMENTS.md §Roofline."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.analysis.roofline import format_table, roofline_from_artifacts
+from .common import save
+
+DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load_artifacts(tag: str = ""):
+    arts = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        a = json.loads(p.read_text())
+        if a.get("tag", "") != tag:
+            continue
+        arts.append(a)
+    return arts
+
+
+def run(fast: bool = True, tag: str = "") -> dict:
+    arts = load_artifacts(tag)
+    if not arts:
+        print("no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return {}
+    rows, skipped = [], []
+    for a in arts:
+        if "skipped" in a:
+            skipped.append(a)
+            continue
+        rows.append(roofline_from_artifacts(a))
+    rows.sort(key=lambda r: (r.mesh, r.arch, r.shape))
+    print(format_table(rows, title="E9 — roofline terms per (arch x shape "
+                                   "x mesh), from compiled dry-run"))
+    print(f"\nskipped cells (rule): {len(skipped)}")
+    for a in skipped:
+        print(f"  {a['arch']} x {a['shape']} x {a['mesh']}: {a['skipped']}")
+    save("roofline" + (f"_{tag}" if tag else ""),
+         {"rows": [r.to_dict() for r in rows],
+          "skipped": [{k: a[k] for k in ("arch", "shape", "mesh", "skipped")}
+                      for a in skipped]})
+    return {"n": len(rows)}
+
+
+if __name__ == "__main__":
+    run()

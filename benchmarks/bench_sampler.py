@@ -1,0 +1,42 @@
+"""E1 — paper Table 1: generative-model acceptance vs uniform sampling.
+
+Paper (GPU space): GEMM 20% vs 0.1%, CONV 15% vs 0.1%.  Our TPU legality is
+less hostile (VMEM is MiB not KiB), so uniform acceptance starts higher and
+the attainable ratio is smaller; the mechanism and direction reproduce.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.generative import CategoricalSampler, workload_inputs
+from repro.core.space import SPACES
+from .common import save, table
+
+
+def run(fast: bool = True) -> dict:
+    n_fit = 20000 if fast else 100000
+    n_eval = 4000 if fast else 20000
+    rows = []
+    for name in ("gemm", "conv", "attention", "ssd"):
+        space = SPACES[name]
+        rng = np.random.default_rng(0)
+        inputs = workload_inputs(space, 128, rng)
+        sampler = CategoricalSampler(space=space).fit(inputs, n_fit, rng)
+        cat = sampler.acceptance_rate(inputs, n_eval, rng)
+        uni = sampler.acceptance_rate(inputs, n_eval, rng, uniform=True)
+        rows.append({"space": name, "categorical": f"{cat:.1%}",
+                     "uniform": f"{uni:.1%}",
+                     "ratio": f"{cat / max(uni, 1e-6):.1f}x",
+                     "paper (GPU)": {"gemm": "20% vs 0.1% (200x)",
+                                     "conv": "15% vs 0.1% (150x)"}.get(
+                                         name, "-")})
+    print(table(rows, ["space", "categorical", "uniform", "ratio",
+                       "paper (GPU)"],
+                "E1 / Table 1 — sampler acceptance (categorical vs uniform)"))
+    save("sampler", {"rows": rows})
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

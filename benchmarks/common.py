@@ -1,0 +1,50 @@
+"""Shared benchmark infrastructure: tuner training cache, result sinks."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "bench"
+
+
+def save(name: str, payload: dict) -> None:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(json.dumps(payload, indent=1))
+
+
+def table(rows: List[Dict], cols: List[str], title: str = "") -> str:
+    out = []
+    if title:
+        out.append(f"### {title}\n")
+    out.append("| " + " | ".join(cols) + " |")
+    out.append("|" + "---|" * len(cols))
+    for r in rows:
+        out.append("| " + " | ".join(str(r.get(c, "")) for c in cols) + " |")
+    return "\n".join(out)
+
+
+_TUNERS = {}
+
+
+def get_trained_tuner(space_name: str, *, fast: bool = True, seed: int = 0):
+    """Train (once per process) an InputAwareTuner for a space."""
+    from repro.core.backend import SimulatedTPUBackend
+    from repro.core.space import SPACES
+    from repro.core.tuner import InputAwareTuner
+    key = (space_name, fast, seed)
+    if key not in _TUNERS:
+        n = 8000 if fast else 50000
+        epochs = 25 if fast else 60
+        hidden = (64, 128, 64) if fast else (64, 128, 256, 128, 64)
+        t0 = time.time()
+        _TUNERS[key] = InputAwareTuner.train(
+            SPACES[space_name], n_samples=n, hidden=hidden, epochs=epochs,
+            backend=SimulatedTPUBackend(noise=0.03), seed=seed)
+        print(f"[tuner:{space_name}] trained on {n} samples "
+              f"in {time.time()-t0:.1f}s")
+    return _TUNERS[key]

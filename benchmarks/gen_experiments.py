@@ -1,0 +1,99 @@
+"""Generate the data-driven sections of EXPERIMENTS.md from dry-run
+artifacts + bench results.  ``python -m benchmarks.gen_experiments``"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.analysis.roofline import roofline_from_artifacts
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DRYRUN = ROOT / "results" / "dryrun"
+
+
+def load(tag=""):
+    out = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        a = json.loads(p.read_text())
+        if a.get("tag", "") == tag:
+            out.append(a)
+    return out
+
+
+def dryrun_table() -> str:
+    rows = ["| arch | shape | mesh | FLOPs/dev | peak/dev (meas / bf16-est)"
+            " | collective/dev | compile |",
+            "|---|---|---|---|---|---|---|"]
+    skipped = []
+    for a in load():
+        if "skipped" in a:
+            skipped.append(a)
+            continue
+        m = a["memory"]
+        rows.append(
+            f"| {a['arch']} | {a['shape']} | {a['mesh']} "
+            f"| {a['cost']['flops']:.2e} "
+            f"| {m['peak_per_device']/2**30:.1f} / "
+            f"{m['peak_per_device_bf16_est']/2**30:.1f} GiB "
+            f"| {a['collectives']['total']/2**30:.1f} GiB "
+            f"| {a['compile_s']:.0f}s |")
+    sk = [f"- **{a['arch']} × {a['shape']} × {a['mesh']}** — skipped: "
+          f"{a['skipped']}" for a in skipped]
+    return "\n".join(rows) + "\n\n**Rule-skipped cells (" + str(len(sk)) + \
+        "):**\n" + "\n".join(sk)
+
+
+def roofline_table() -> str:
+    rows = ["| arch | shape | mesh | t_compute | t_memory† | t_collective |"
+            " bottleneck | MODEL/HLO | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    rts = []
+    for a in load():
+        if "skipped" in a:
+            continue
+        rts.append(roofline_from_artifacts(a))
+    rts.sort(key=lambda r: (-r.roofline_fraction))
+    for r in rts:
+        f = lambda s: f"{s*1e3:,.1f} ms" if s < 10 else f"{s:,.2f} s"
+        rows.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {f(r.t_compute)} "
+            f"| {f(r.t_memory)} | {f(r.t_collective)} | {r.bottleneck} "
+            f"| {r.useful_ratio:.2f} | {r.roofline_fraction:.2%} |")
+    return "\n".join(rows)
+
+
+def perf_compare(arch, shape, mesh, tags):
+    rows = [f"| config | t_compute | t_memory | t_collective | bottleneck |"
+            f" roofline frac | coll GiB/dev |",
+            "|---|---|---|---|---|---|---|"]
+    for tag in tags:
+        t = f"--{tag}" if tag else ""
+        p = DRYRUN / f"{arch}--{shape}--{mesh}{t}.json"
+        if not p.exists():
+            continue
+        a = json.loads(p.read_text())
+        r = roofline_from_artifacts(a)
+        f = lambda s: f"{s*1e3:,.1f} ms" if s < 10 else f"{s:,.2f} s"
+        rows.append(f"| {tag or 'baseline'} | {f(r.t_compute)} "
+                    f"| {f(r.t_memory)} | {f(r.t_collective)} "
+                    f"| {r.bottleneck} | {r.roofline_fraction:.2%} "
+                    f"| {a['collectives']['total']/2**30:.1f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    print("## §Dry-run table\n")
+    print(dryrun_table())
+    print("\n\n## §Roofline table\n")
+    print(roofline_table())
+    print("\n\n## §Perf H1 (dbrx-132b × train_4k × pod)\n")
+    print(perf_compare("dbrx-132b", "train_4k", "pod",
+                       ["", "h1i1", "h1i2", "h1i3", "h1i4"]))
+    print("\n\n## §Perf H2 (llama3-405b × decode_32k × multipod)\n")
+    print(perf_compare("llama3-405b", "decode_32k", "multipod",
+                       ["", "h2i1", "h2i2", "h2i3", "h2i4", "h2i5", "h2i6"]))
+    print("\n\n## §Perf H3 (smollm-135m × train_4k × pod)\n")
+    print(perf_compare("smollm-135m", "train_4k", "pod",
+                       ["", "h3i1", "h3i2", "h3i3", "h3i4", "h3i5", "h3i6",
+                        "h3i7"]))

@@ -1,0 +1,49 @@
+"""Benchmark orchestrator: ``python -m benchmarks.run [--full]``.
+
+One benchmark per paper table/figure (DESIGN.md §8 experiment index):
+  E1 sampler   — Table 1        E5 conv      — Table 5 / Fig 9-11
+  E2/E3 mlp    — Table 2 / Fig5 E6 selection — Table 6
+  E4 gemm      — Table 4 / Fig 6-8 (bf16 + fp32 dtype study)
+  E7 kernels   — §3 correctness harness
+  E9 roofline  — from dry-run artifacts (run launch.dryrun first)
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true",
+                   help="paper-scale dataset sizes (hours)")
+    p.add_argument("--only", default=None,
+                   help="comma-separated subset, e.g. gemm,conv")
+    args = p.parse_args()
+    fast = not args.full
+
+    from . import (bench_conv, bench_gemm, bench_kernels, bench_mlp,
+                   bench_roofline, bench_sampler, bench_selection)
+    suites = {
+        "sampler": lambda: bench_sampler.run(fast),
+        "mlp": lambda: bench_mlp.run(fast),
+        "gemm": lambda: bench_gemm.run(fast),
+        "gemm_fp32": lambda: bench_gemm.run(fast, dtype_bits=32),
+        "conv": lambda: bench_conv.run(fast),
+        "selection": lambda: bench_selection.run(fast),
+        "kernels": lambda: bench_kernels.run(fast),
+        "roofline": lambda: bench_roofline.run(fast),
+    }
+    chosen = (args.only.split(",") if args.only else list(suites))
+    t_all = time.time()
+    for name in chosen:
+        print(f"\n{'='*72}\n== {name}\n{'='*72}")
+        t0 = time.time()
+        suites[name]()
+        print(f"[{name} done in {time.time()-t0:.1f}s]")
+    print(f"\nall benchmarks done in {time.time()-t_all:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

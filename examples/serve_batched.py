@@ -1,0 +1,33 @@
+"""Batched serving example: continuous-batching engine over a small LM.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models import init_params
+from repro.serve import Engine, ServeConfig
+
+cfg = smoke_config("glm4-9b")
+params = init_params(cfg, jax.random.PRNGKey(0))
+engine = Engine(cfg, params, ServeConfig(max_len=128, slots=4))
+
+rng = np.random.default_rng(0)
+prompts = [rng.integers(0, cfg.vocab, int(n))
+           for n in rng.integers(8, 24, size=10)]
+
+t0 = time.perf_counter()
+outs = engine.generate(prompts, max_new=24)
+dt = time.perf_counter() - t0
+
+tok = sum(len(o) for o in outs)
+print(f"{len(prompts)} requests (lens {[len(p) for p in prompts]})")
+print(f"{tok} tokens in {dt:.2f}s = {tok/dt:.1f} tok/s; "
+      f"{engine.ticks} decode ticks -> {tok/engine.ticks:.2f} tokens/tick "
+      f"(continuous batching keeps slots busy)")
+for i, o in enumerate(outs[:3]):
+    print(f"request {i}: {o[:12]} ...")

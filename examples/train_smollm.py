@@ -1,0 +1,58 @@
+"""End-to-end training driver: smollm-135m (the assigned ~100M-class arch)
+on the synthetic pipeline, with checkpoint/resume + compression enabled.
+
+Demo default (CPU-sized):   PYTHONPATH=src python examples/train_smollm.py
+Full 135M, few hundred steps (the deliverable command; hours on CPU, minutes
+on a real accelerator):
+    PYTHONPATH=src python examples/train_smollm.py --full --steps 300
+"""
+
+import argparse
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke_config
+from repro.data import DataConfig
+from repro.optim import AdamWConfig
+from repro.train import Trainer, TrainConfig
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true",
+                   help="the real 135M config (30L x 576)")
+    p.add_argument("--steps", type=int, default=120)
+    p.add_argument("--seq-len", type=int, default=256)
+    p.add_argument("--global-batch", type=int, default=8)
+    p.add_argument("--checkpoint-dir", default="/tmp/repro-smollm-ckpt")
+    args = p.parse_args()
+
+    if args.full:
+        cfg = dataclasses.replace(get_config("smollm-135m"),
+                                  dtype=jnp.float32)
+    else:
+        # same family, laptop-sized: 6L x 192 (~8M params)
+        cfg = dataclasses.replace(
+            smoke_config("smollm-135m"), n_layers=6, d_model=192, n_heads=6,
+            n_kv=2, d_ff=512, vocab=4096, head_dim=32, dtype=jnp.float32)
+
+    trainer = Trainer(
+        cfg,
+        AdamWConfig(lr=6e-4, warmup_steps=max(args.steps // 20, 1),
+                    total_steps=args.steps),
+        TrainConfig(steps=args.steps, microbatches=2, compress_grads=True,
+                    checkpoint_dir=args.checkpoint_dir, checkpoint_every=50,
+                    log_every=10),
+        DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                   global_batch=args.global_batch),
+    )
+    res = trainer.run()
+    h = res["history"]
+    print(f"\nloss {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f} over "
+          f"{len(h)} steps  (resume-safe: rerun this command to continue "
+          f"from {args.checkpoint_dir})")
+
+
+if __name__ == "__main__":
+    main()

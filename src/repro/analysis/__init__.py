@@ -1,0 +1,5 @@
+from .hlo import collective_bytes, parse_collectives
+from .roofline import RooflineTerms, roofline_from_artifacts, HW
+
+__all__ = ["collective_bytes", "parse_collectives", "RooflineTerms",
+           "roofline_from_artifacts", "HW"]

@@ -1,0 +1,89 @@
+"""HLO text parsing: collective-communication byte accounting.
+
+``compiled.cost_analysis()`` does not expose collective traffic, so we parse
+the (SPMD-partitioned, hence per-device) HLO text and sum the bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Byte counting: per instruction we take the RESULT shape — in partitioned HLO
+that is the per-device buffer the collective produces, i.e. the data that
+crossed links into each chip (all-gather: the gathered buffer; all-reduce:
+the reduced buffer ~ ring traffic within a small constant; reduce-scatter:
+the shard).  The CPU backend upcasts bf16 compute to f32, dragging some
+collectives to f32 — `normalize_bits` rescales any f32 collective down to the
+deployment dtype so the roofline is not distorted by a CPU lowering artifact
+(recorded in EXPERIMENTS.md §Dry-run notes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BITS = {
+    "pred": 8, "s8": 8, "u8": 8, "s16": 16, "u16": 16, "bf16": 16, "f16": 16,
+    "s32": 32, "u32": 32, "f32": 32, "s64": 64, "u64": 64, "f64": 64,
+    "c64": 64, "c128": 128,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# e.g.:  %ag = f32[512,1024]{1,0} all-gather(%x), channel_id=1, ...
+#        ROOT %ar = (f32[8,128]{...}, f32[8,128]{...}) all-reduce(...)
+_INSTR = re.compile(
+    r"=\s*(?P<shape>\(?[a-z0-9]+\[[^=]*?)\s*"
+    r"(?P<kind>all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(")
+
+_SHAPE = re.compile(r"(?P<dtype>[a-z][a-z0-9]*)\[(?P<dims>[0-9,]*)\]")
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    dtype: str
+    shape: Tuple[int, ...]
+    bytes: int
+
+
+def _shape_bytes(dtype: str, dims_s: str) -> Tuple[Tuple[int, ...], int]:
+    dims = tuple(int(d) for d in dims_s.split(",") if d) or (1,)
+    n = 1
+    for d in dims:
+        n *= d
+    bits = _DTYPE_BITS.get(dtype, 32)
+    return dims, n * bits // 8
+
+
+def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
+    out: List[CollectiveOp] = []
+    for m in _INSTR.finditer(hlo_text):
+        kind = m.group("kind").replace("-start", "")
+        # result may be a tuple shape: sum every component
+        total = 0
+        shape: Tuple[int, ...] = ()
+        for sm in _SHAPE.finditer(m.group("shape")):
+            dims, b = _shape_bytes(sm.group("dtype"), sm.group("dims"))
+            total += b
+            shape = dims
+        if total:
+            out.append(CollectiveOp(kind=kind, dtype=sm.group("dtype"),
+                                    shape=shape, bytes=total))
+    return out
+
+
+def collective_bytes(hlo_text: str, *, normalize_bits: Optional[int] = None
+                     ) -> Dict[str, int]:
+    """Per-kind byte totals (+ 'total').  normalize_bits: rescale f32
+    collectives to the deployment dtype width (CPU-upcast correction)."""
+    totals: Dict[str, int] = {k: 0 for k in COLLECTIVE_KINDS}
+    for op in parse_collectives(hlo_text):
+        b = op.bytes
+        if normalize_bits and _DTYPE_BITS.get(op.dtype, 32) == 32 \
+                and normalize_bits < 32:
+            b = b * normalize_bits // 32
+        totals[op.kind] = totals.get(op.kind, 0) + b
+    totals["total"] = sum(totals[k] for k in COLLECTIVE_KINDS)
+    return totals

@@ -1,0 +1,154 @@
+"""Three-term roofline model from dry-run artifacts (TPU v5e target).
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+cost_analysis() of an SPMD-partitioned executable is already per-device
+(verified empirically — see EXPERIMENTS.md §Dry-run notes), so no /chips is
+applied to the parsed numbers; the spec's "HLO_FLOPs / (chips x peak)" is the
+same quantity expressed with global FLOPs.
+
+MODEL_FLOPS accounting: 6*N*D for training (fwd 2ND + bwd 4ND), 2*N*D for
+inference-only lowerings (prefill/decode), with N = active params (MoE).
+The ratio MODEL_FLOPS / (HLO_FLOPs * chips) flags remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional
+
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link (spec formula: 1 link)
+
+HW = {"peak_flops_bf16": PEAK_FLOPS_BF16, "hbm_bw": HBM_BW, "ici_bw": ICI_BW}
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device raw quantities
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    # the three terms, in seconds
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    # accounting
+    model_flops_global: float = 0.0
+    useful_ratio: float = 0.0         # MODEL_FLOPS / (HLO_FLOPs * chips)
+    bottleneck: str = ""
+    roofline_fraction: float = 0.0    # t_compute / max(all terms)
+    note: str = ""
+
+    def finalize(self) -> "RooflineTerms":
+        self.t_compute = self.flops_per_device / PEAK_FLOPS_BF16
+        self.t_memory = self.bytes_per_device / HBM_BW
+        self.t_collective = self.collective_bytes_per_device / ICI_BW
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        self.bottleneck = max(terms, key=terms.get)
+        bound = max(max(terms.values()), 1e-30)
+        # fraction of the step spent doing useful MXU work if perfectly
+        # overlapped: the closer the dominant term is to the compute term,
+        # the closer to roofline
+        useful_t = (self.model_flops_global / self.chips) / PEAK_FLOPS_BF16
+        self.roofline_fraction = useful_t / bound
+        if self.flops_per_device * self.chips > 0:
+            self.useful_ratio = (self.model_flops_global
+                                 / (self.flops_per_device * self.chips))
+        return self
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def model_flops(cfg, shape, *, kind: str) -> float:
+    """Useful-work FLOPs, PaLM-style MFU accounting: parameter FLOPs
+    (2*N_active per token forward) PLUS attention score/PV FLOPs (the S^2
+    term, causal-halved) and SSD chunk FLOPs — at 32k context the quadratic
+    term dominates every transformer, so 6ND alone would make the
+    MODEL/HLO ratio meaningless there."""
+    n = cfg.active_param_count
+    B, S = shape.global_batch, shape.seq_len
+    n_attn = sum(1 for mix, _ in cfg.pattern if mix == "attn") \
+        * cfg.n_repeats
+    n_ssd = cfg.n_layers - n_attn
+    H, hd = cfg.n_heads, cfg.hd
+    if cfg.is_encdec:
+        n_attn += cfg.encoder_layers          # + cross attn below
+
+    if kind in ("train", "prefill"):
+        tokens = B * S
+        param_f = 2.0 * n * tokens
+        # causal self-attention: 2 matmuls x 2BHS^2*hd x 1/2 (causal)
+        attn_f = 2.0 * B * H * S * S * hd * n_attn
+        if cfg.is_encdec:
+            attn_f += 4.0 * B * H * S * cfg.encoder_len * hd * cfg.n_layers
+        ssd_f = 0.0
+        if n_ssd:
+            Q = cfg.ssd_chunk
+            di = 2 * cfg.d_model
+            Hs = di // cfg.ssm_head_dim
+            P, St = cfg.ssm_head_dim, cfg.ssm_state
+            # intra-chunk (masked quadratic) + chunk states + inter-chunk
+            ssd_f = n_ssd * B * Hs * (S * Q * (P + St)      # intra
+                                      + 2 * S * P * St * 2)  # states+inter
+        fwd = param_f + attn_f + ssd_f
+        return 3.0 * fwd if kind == "train" else fwd
+    # decode: one token per sequence against an S-long cache
+    param_f = 2.0 * n * B
+    attn_f = 4.0 * B * H * S * hd * n_attn
+    return param_f + attn_f
+
+
+def roofline_from_artifacts(artifact: Dict[str, Any],
+                            recompute_model_flops: bool = True
+                            ) -> RooflineTerms:
+    """Build terms from one dry-run JSON artifact (launch/dryrun.py).
+
+    bytes_accessed is halved: all assigned full configs run bf16 on TPU but
+    XLA:CPU lowers their compute in f32 (collective bytes get the same
+    correction, per-op, in analysis/hlo.py).  It remains an HLO-op-
+    granularity UPPER BOUND on HBM traffic — TPU fusion coalesces
+    elementwise chains this count charges individually (EXPERIMENTS.md
+    §Roofline notes).
+    """
+    mf = artifact["model_flops"]
+    if recompute_model_flops:
+        from repro.configs import SHAPES, get_config
+        cfg = get_config(artifact["arch"])
+        mf = model_flops(cfg, SHAPES[artifact["shape"]],
+                         kind=artifact["kind"])
+    rt = RooflineTerms(
+        arch=artifact["arch"], shape=artifact["shape"], mesh=artifact["mesh"],
+        chips=artifact["chips"],
+        flops_per_device=artifact["cost"]["flops"],
+        bytes_per_device=artifact["cost"]["bytes_accessed"] / 2.0,
+        collective_bytes_per_device=artifact["collectives"]["total"],
+        model_flops_global=mf,
+        note=artifact.get("note", ""),
+    )
+    return rt.finalize()
+
+
+def format_table(rows, *, title: str = "") -> str:
+    """Markdown table for EXPERIMENTS.md."""
+    hdr = ("| arch | shape | mesh | t_compute | t_memory | t_collective | "
+           "bottleneck | MODEL/HLO | roofline frac |")
+    sep = "|" + "---|" * 9
+    lines = [f"### {title}", "", hdr, sep] if title else [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.t_compute*1e3:.2f} ms "
+            f"| {r.t_memory*1e3:.2f} ms | {r.t_collective*1e3:.2f} ms "
+            f"| {r.bottleneck} | {r.useful_ratio:.2f} "
+            f"| {r.roofline_fraction:.1%} |")
+    return "\n".join(lines)

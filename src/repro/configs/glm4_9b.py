@@ -1,0 +1,20 @@
+"""glm4-9b [dense] — 40L d_model=4096 32H (GQA kv=2) d_ff=13696 vocab=151552.
+RoPE, extreme GQA (kv=2).  [hf:THUDM/glm-4-9b; hf]"""
+
+import jax.numpy as jnp
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="glm4-9b",
+    n_layers=40, d_model=4096, n_heads=32, n_kv=2, d_ff=13696,
+    vocab=151552, head_dim=128,
+    dtype=jnp.bfloat16,
+    decode_kv_splits=16,
+)
+
+SMOKE = ModelConfig(
+    name="glm4-9b-smoke",
+    n_layers=2, d_model=64, n_heads=4, n_kv=1, d_ff=128,
+    vocab=512, head_dim=16,
+    dtype=jnp.float32, attn_chunk=64, logit_chunk=64,
+)

@@ -1,0 +1,25 @@
+"""ISAAC-TPU core: the paper's contribution as a composable library.
+
+Layout (paper section -> module):
+  §3  space.py        X vs X-hat: parameter spaces + legality predicates
+  §4  generative.py   categorical generative sampler (Dirichlet prior)
+      dataset.py      benchmark-data synthesis
+      backend.py      measurement oracles (simulated TPU / wall-clock / interpret)
+  §5  features.py     log2 feature transform
+      mlp.py          pure-JAX MLP regressor
+  §6  search.py       runtime exhaustive inference + top-k re-measure
+      tuner.py        facade: train once, cached input-aware kernel selection
+  §2/7 heuristics.py  vendor-library baseline (fixed menu + handcrafted select)
+"""
+
+from .backend import (InterpretBackend, SimulatedTPUBackend, WallClockBackend,
+                      PEAK_BF16_TFLOPS, HBM_GBPS, ICI_GBPS)
+from .dataset import Dataset, generate_dataset
+from .features import Featurizer, target_transform, target_untransform
+from .generative import CategoricalSampler, workload_inputs
+from .heuristics import VendorHeuristicLibrary
+from .mlp import MLP, TABLE2_ARCHS
+from .search import SearchResult, enumerate_legal, exhaustive_search, oracle_search
+from .space import (ATTENTION_SPACE, CONV_SPACE, GEMM_SPACE, SSD_SPACE, SPACES,
+                    ParamSpace, conv_input, gemm_input)
+from .tuner import InputAwareTuner, clear_tuners, get_tuner, install_tuner

@@ -1,0 +1,188 @@
+"""Multi-layer perceptron performance regressor, in pure JAX (paper §5).
+
+The paper selects an MLP because (1) it scales to arbitrarily large
+benchmark datasets and (2) ReLU naturally expresses the max()/min()
+structure of roofline-style performance models.  We reproduce:
+
+  * ReLU hidden activations, linear output head;
+  * MSE loss (Gaussian-noise assumption on measurements);
+  * minibatch Adam training;
+  * the architecture sweep of Table 2 (see ``benchmarks/bench_mlp.py``).
+
+The paper also notes (§5, §6) that because the feature vectors are small
+(~20), inference is a chain of highly rectangular matmuls — exactly the
+shape regime ISAAC itself tunes for, so the system "could itself be
+bootstrapped to make its own auto-tuning procedure more efficient".  We
+implement that bootstrap: :meth:`MLP.predict` routes its matmuls through the
+tuned kernel dispatcher when a tuner is installed (see core/tuner.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = List[Dict[str, jax.Array]]
+
+
+def init_mlp(key: jax.Array, sizes: Sequence[int]) -> Params:
+    """He-initialized dense stack: sizes = [in, h0, h1, ..., 1]."""
+    params: Params = []
+    for i, (fan_in, fan_out) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (fan_in, fan_out), jnp.float32)
+        w = w * jnp.sqrt(2.0 / fan_in)
+        params.append({"w": w, "b": jnp.zeros((fan_out,), jnp.float32)})
+    return params
+
+
+def forward(params: Params, x: jax.Array) -> jax.Array:
+    """Algorithm 1 of the paper: a_n = f_n(W_n a_{n-1}), linear last layer."""
+    a = x
+    for layer in params[:-1]:
+        a = jnp.maximum(a @ layer["w"] + layer["b"], 0.0)
+    last = params[-1]
+    return (a @ last["w"] + last["b"])[..., 0]
+
+
+def mse_loss(params: Params, x: jax.Array, y: jax.Array) -> jax.Array:
+    pred = forward(params, x)
+    return jnp.mean((pred - y) ** 2)
+
+
+@dataclasses.dataclass
+class AdamState:
+    m: Params
+    v: Params
+    step: int
+
+
+def adam_init(params: Params) -> AdamState:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    z2 = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return AdamState(m=zeros, v=z2, step=0)
+
+
+@partial(jax.jit, static_argnames=("lr", "b1", "b2", "eps"))
+def _adam_update(params, grads, m, v, step, lr=1e-3, b1=0.9, b2=0.999,
+                 eps=1e-8):
+    step = step + 1
+    m = jax.tree_util.tree_map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree_util.tree_map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    bc1 = 1 - b1 ** step
+    bc2 = 1 - b2 ** step
+    params = jax.tree_util.tree_map(
+        lambda p, mm, vv: p - lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps),
+        params, m, v)
+    return params, m, v, step
+
+
+_loss_and_grad = jax.jit(jax.value_and_grad(mse_loss))
+
+
+@dataclasses.dataclass
+class MLP:
+    """Trained regressor bundling parameters + training loop."""
+
+    sizes: Tuple[int, ...]
+    params: Params
+
+    @classmethod
+    def create(cls, key: jax.Array, in_dim: int,
+               hidden: Sequence[int] = (64, 128, 64)) -> "MLP":
+        sizes = (in_dim, *hidden, 1)
+        return cls(sizes=sizes, params=init_mlp(key, sizes))
+
+    def fit(self, X: np.ndarray, y: np.ndarray, *, epochs: int = 60,
+            batch_size: int = 512, lr: float = 1e-3, seed: int = 0,
+            X_val: Optional[np.ndarray] = None,
+            y_val: Optional[np.ndarray] = None,
+            verbose: bool = False) -> List[float]:
+        """Minibatch Adam on MSE; returns per-epoch validation (or train) MSE."""
+        X = jnp.asarray(X, jnp.float32)
+        y = jnp.asarray(y, jnp.float32)
+        n = X.shape[0]
+        state = adam_init(self.params)
+        m, v, step = state.m, state.v, state.step
+        rng = np.random.default_rng(seed)
+        history: List[float] = []
+        n_batches = max(1, n // batch_size)
+        for epoch in range(epochs):
+            perm = rng.permutation(n)
+            # cosine decay stabilizes the tail of training
+            cur_lr = lr * 0.5 * (1 + math.cos(math.pi * epoch / max(1, epochs)))
+            for b in range(n_batches):
+                idx = perm[b * batch_size:(b + 1) * batch_size]
+                xb, yb = X[idx], y[idx]
+                _, grads = _loss_and_grad(self.params, xb, yb)
+                self.params, m, v, step = _adam_update(
+                    self.params, grads, m, v, step, lr=max(cur_lr, 1e-5))
+            if X_val is not None:
+                val = float(mse_loss(self.params, jnp.asarray(X_val, jnp.float32),
+                                     jnp.asarray(y_val, jnp.float32)))
+            else:
+                val = float(mse_loss(self.params, X, y))
+            history.append(val)
+            if verbose and (epoch % 10 == 0 or epoch == epochs - 1):
+                print(f"  epoch {epoch:3d}  mse {val:.4f}")
+        return history
+
+    def predict(self, X: np.ndarray, batch: int = 65536) -> np.ndarray:
+        """Vectorized inference — one rectangular matmul chain per batch.
+
+        This is the paper's §6 'million configurations per second' path: the
+        exhaustive runtime search calls this with every legal tuning config
+        for the fixed input.
+        """
+        X = np.asarray(X, np.float32)
+        outs = []
+        fwd = jax.jit(forward)
+        for i in range(0, X.shape[0], batch):
+            outs.append(np.asarray(fwd(self.params, jnp.asarray(X[i:i + batch]))))
+        return np.concatenate(outs) if outs else np.zeros((0,), np.float32)
+
+    def mse(self, X: np.ndarray, y: np.ndarray) -> float:
+        return float(np.mean((self.predict(X) - np.asarray(y)) ** 2))
+
+    # -- persistence ----------------------------------------------------------
+    def to_bytes(self) -> bytes:
+        flat, _ = jax.tree_util.tree_flatten(self.params)
+        meta = {"sizes": list(self.sizes)}
+        buf = [json.dumps(meta).encode()]
+        arrs = {f"a{i}": np.asarray(a) for i, a in enumerate(flat)}
+        import io
+        bio = io.BytesIO()
+        np.savez(bio, meta=np.frombuffer(buf[0], dtype=np.uint8), **arrs)
+        return bio.getvalue()
+
+    @classmethod
+    def from_bytes(cls, payload: bytes) -> "MLP":
+        import io
+        with np.load(io.BytesIO(payload)) as z:
+            meta = json.loads(bytes(z["meta"]).decode())
+            sizes = tuple(meta["sizes"])
+            flat = [jnp.asarray(z[f"a{i}"]) for i in range(2 * (len(sizes) - 1))]
+        params: Params = []
+        for i in range(len(sizes) - 1):
+            # tree_flatten sorts dict keys: "b" precedes "w".
+            params.append({"b": flat[2 * i], "w": flat[2 * i + 1]})
+        return cls(sizes=sizes, params=params)
+
+
+# The architecture sweep of Table 2 (hidden layer sizes).
+TABLE2_ARCHS: Tuple[Tuple[int, ...], ...] = (
+    (64,),
+    (512,),
+    (32, 64, 32),
+    (64, 128, 64),
+    (32, 64, 128, 64, 32),
+    (64, 128, 256, 128, 64),
+    (64, 128, 192, 256, 192, 128, 64),
+)

@@ -1,0 +1,329 @@
+"""Parameter spaces for input-aware auto-tuning (paper §3).
+
+The paper distinguishes the space of *possible* configurations X-hat (every
+combination of per-parameter choices) from the space of *legal* configurations
+X (those that compile and run within hardware resource limits).  For GEMM the
+paper has 10 tuning + 6 input parameters; our TPU adaptation has 8 tuning + 6
+input parameters (see DESIGN.md §3 for the PTX->Pallas mapping).
+
+A :class:`ParamSpace` is a small declarative object: an ordered mapping of
+parameter name -> tuple of admissible values, plus a legality predicate over a
+fully instantiated configuration.  Everything downstream (the generative
+sampler, the featurizer, the exhaustive runtime search) is generic over a
+ParamSpace - this genericity is the "more flexible front-end" the paper lists
+as future work (§9).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Callable, Dict, Iterable, List, Mapping, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Hardware constants for legality checks (TPU v5e target; see DESIGN.md §2).
+# ---------------------------------------------------------------------------
+VMEM_BYTES = 128 * 1024 * 1024          # v5e VMEM per TensorCore
+VMEM_USABLE = int(VMEM_BYTES * 0.75)    # leave headroom for spills/semaphores
+SUBLANE = 8                             # fp32 sublane tile
+LANE = 128                              # lane tile
+MXU = 128                               # systolic array dimension
+
+Config = Dict[str, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpace:
+    """Declarative tuning-parameter space with a legality predicate."""
+
+    name: str
+    params: Mapping[str, Tuple[int, ...]]            # tuning parameters
+    input_params: Tuple[str, ...]                    # names of input features
+    is_legal: Callable[[Mapping[str, int], Mapping[str, int]], bool]
+
+    @property
+    def param_names(self) -> Tuple[str, ...]:
+        return tuple(self.params.keys())
+
+    def cardinality(self) -> int:
+        n = 1
+        for v in self.params.values():
+            n *= len(v)
+        return n
+
+    def enumerate(self) -> Iterable[Config]:
+        """Yield every configuration in X-hat (legal or not)."""
+        names = self.param_names
+        for combo in itertools.product(*(self.params[n] for n in names)):
+            yield dict(zip(names, combo))
+
+    def enumerate_legal(self, inputs: Mapping[str, int]) -> List[Config]:
+        """Materialize X for a fixed input (used by runtime inference, §6)."""
+        return [c for c in self.enumerate() if self.is_legal(c, inputs)]
+
+    def contains(self, cfg: Mapping[str, int]) -> bool:
+        return all(cfg.get(k) in v for k, v in self.params.items())
+
+
+# ---------------------------------------------------------------------------
+# GEMM: C[M, N] = A[M, K] @ B[K, N]
+#
+# Tuning parameters (TPU adaptation of the paper's {M_S,N_S,M_L,N_L,U,K_S,K_L,K_G}):
+#   bm, bn      VMEM output-block shape            (paper: M_L x N_L)
+#   bk          K-extent of A/B slabs per grid step (paper: U, prefetch width)
+#   k_unroll    in-kernel unroll of the bk loop     (paper: K_S)
+#   k_split     parallel split-K partial outputs    (paper: K_G; no atomics on
+#               TPU so partials are materialized and reduced - pays the same
+#               "diminished write bandwidth" cost the paper describes)
+#   order       grid iteration order (0: m-major, 1: n-major) - HBM reuse
+#   acc32       accumulate in fp32 (1) or io dtype (0)
+#   prefetch    DMA pipeline depth (1 = no double buffering)
+#
+# Input parameters: M, N, K, dtype_bits, trans_a, trans_b.
+# The sequential K revisits of one output block (paper's K_L) are derived:
+# k_grid = ceil(K / (k_split * bk)).
+# ---------------------------------------------------------------------------
+
+GEMM_PARAMS: Dict[str, Tuple[int, ...]] = {
+    "bm": (8, 16, 32, 64, 128, 256, 512),
+    "bn": (128, 256, 512, 1024),
+    "bk": (32, 64, 128, 256, 512, 1024, 2048),
+    "k_unroll": (1, 2, 4, 8),
+    "k_split": (1, 2, 4, 8, 16, 32, 64),
+    "order": (0, 1),
+    "acc32": (0, 1),
+    "prefetch": (1, 2, 3),
+}
+
+GEMM_INPUTS = ("M", "N", "K", "dtype_bits", "trans_a", "trans_b")
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _round_up(a: int, b: int) -> int:
+    return _ceil_div(a, b) * b
+
+
+def gemm_vmem_bytes(cfg: Mapping[str, int], dtype_bits: int) -> int:
+    """VMEM working set of the Pallas GEMM for a configuration."""
+    bpe = dtype_bits // 8
+    nbuf = 2 if cfg["prefetch"] >= 2 else 1      # double-buffered input slabs
+    a_slab = cfg["bm"] * cfg["bk"] * bpe
+    b_slab = cfg["bk"] * cfg["bn"] * bpe
+    acc_bpe = 4 if cfg["acc32"] else bpe
+    out = cfg["bm"] * cfg["bn"] * acc_bpe
+    return nbuf * (a_slab + b_slab) + out
+
+
+def gemm_is_legal(cfg: Mapping[str, int], inputs: Mapping[str, int]) -> bool:
+    """Membership test for X (paper §4: >99.9% of X-hat is illegal on GPU;
+    our TPU space is less hostile but still majority-illegal for small inputs)."""
+    M, N, K = inputs["M"], inputs["N"], inputs["K"]
+    bits = inputs["dtype_bits"]
+    bm, bn, bk = cfg["bm"], cfg["bn"], cfg["bk"]
+    # -- resource limits ----------------------------------------------------
+    if gemm_vmem_bytes(cfg, bits) > VMEM_USABLE:
+        return False
+    # -- alignment: lane/sublane tiles must be respected by the block shape --
+    if bm % SUBLANE or bn % LANE:
+        return False
+    # bk must pack whole (sublane x lane) input tiles for both operands.
+    if bk % LANE:
+        return False
+    # -- reduction splitting must have something to split --------------------
+    k_steps = _ceil_div(K, bk)
+    if cfg["k_split"] > k_steps:
+        return False
+    # unroll must not exceed the per-split sequential step count
+    if cfg["k_unroll"] > max(1, _ceil_div(k_steps, cfg["k_split"])):
+        return False
+    # fp32 IO requires fp32 accumulation on the MXU
+    if bits == 32 and not cfg["acc32"]:
+        return False
+    # -- gross-waste guards: a block larger than the (tile-padded) problem
+    #    allocates VMEM and MXU passes for pure padding.  The paper's X
+    #    likewise excludes configs that cannot execute safely/meaningfully. --
+    if bm > _round_up(M, SUBLANE) or bn > _round_up(N, LANE) \
+            or bk > _round_up(K, LANE):
+        return False
+    return True
+
+
+GEMM_SPACE = ParamSpace(
+    name="gemm",
+    params=GEMM_PARAMS,
+    input_params=GEMM_INPUTS,
+    is_legal=gemm_is_legal,
+)
+
+
+# ---------------------------------------------------------------------------
+# CONV: O[K,P,Q,N] = sum_c I[C,H,W,N] * F[C,R,S,K]   (paper §3.3)
+#
+# Implicit-GEMM view: (M', N', K') = (N*P*Q, K, C*R*S).  Tiling follows the
+# shifted-window formulation (DESIGN.md §3): the kernel iterates over (r, s)
+# filter offsets with statically shifted VMEM slices, so the tunables are the
+# implicit-GEMM blocks plus the C-reduction split (paper's C_S, C_L, C_G).
+# ---------------------------------------------------------------------------
+
+CONV_PARAMS: Dict[str, Tuple[int, ...]] = {
+    "b_npq": (8, 16, 32, 64, 128, 256, 512),
+    "b_k": (128, 256, 512),
+    "b_c": (32, 64, 128, 256, 512),
+    "rs_unroll": (1, 2, 4),
+    "c_split": (1, 2, 4, 8, 16),
+    "order": (0, 1),
+    "acc32": (0, 1),
+    "prefetch": (1, 2, 3),
+}
+
+CONV_INPUTS = ("N", "H", "W", "C", "K", "R", "S", "dtype_bits")
+
+
+def conv_out_shape(inputs: Mapping[str, int]) -> Tuple[int, int]:
+    """'SAME'-padded unit-stride output spatial shape (DeepBench convention)."""
+    return inputs["H"], inputs["W"]
+
+
+def conv_vmem_bytes(cfg: Mapping[str, int], dtype_bits: int) -> int:
+    bpe = dtype_bits // 8
+    nbuf = 2 if cfg["prefetch"] >= 2 else 1
+    # I slab: b_npq spatial elements x b_c channels, F slab: b_c*rs x b_k.
+    i_slab = cfg["b_npq"] * cfg["b_c"] * bpe * cfg["rs_unroll"]
+    f_slab = cfg["b_c"] * cfg["rs_unroll"] * cfg["b_k"] * bpe
+    acc_bpe = 4 if cfg["acc32"] else bpe
+    out = cfg["b_npq"] * cfg["b_k"] * acc_bpe
+    return nbuf * (i_slab + f_slab) + out
+
+
+def conv_is_legal(cfg: Mapping[str, int], inputs: Mapping[str, int]) -> bool:
+    bits = inputs["dtype_bits"]
+    P, Q = conv_out_shape(inputs)
+    npq = inputs["N"] * P * Q
+    C, K, R, S = inputs["C"], inputs["K"], inputs["R"], inputs["S"]
+    if conv_vmem_bytes(cfg, bits) > VMEM_USABLE:
+        return False
+    if cfg["b_npq"] % SUBLANE or cfg["b_k"] % LANE:
+        return False
+    c_steps = _ceil_div(C, cfg["b_c"])
+    if cfg["c_split"] > c_steps:
+        return False
+    if cfg["rs_unroll"] > R * S:
+        return False
+    if bits == 32 and not cfg["acc32"]:
+        return False
+    if cfg["b_npq"] > _round_up(npq, SUBLANE) or cfg["b_k"] > _round_up(K, LANE) \
+            or cfg["b_c"] > _round_up(C, LANE):
+        return False
+    return True
+
+
+CONV_SPACE = ParamSpace(
+    name="conv",
+    params=CONV_PARAMS,
+    input_params=CONV_INPUTS,
+    is_legal=conv_is_legal,
+)
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper tunable ops (paper §9 future work: "problems beyond GEMM and
+# CONV").  Flash attention and the Mamba-2 SSD chunk scan expose block sizes
+# through the same machinery.
+# ---------------------------------------------------------------------------
+
+ATTENTION_PARAMS: Dict[str, Tuple[int, ...]] = {
+    "b_q": (128, 256, 512, 1024),
+    "b_kv": (128, 256, 512, 1024, 2048),
+    "acc32": (0, 1),
+    "prefetch": (1, 2, 3),
+}
+
+ATTENTION_INPUTS = ("B", "Hq", "Hkv", "Lq", "Lkv", "D", "dtype_bits", "causal")
+
+
+def attention_is_legal(cfg: Mapping[str, int], inputs: Mapping[str, int]) -> bool:
+    bits = inputs["dtype_bits"]
+    bpe = bits // 8
+    d = inputs["D"]
+    nbuf = 2 if cfg["prefetch"] >= 2 else 1
+    q = cfg["b_q"] * d * bpe
+    kv = 2 * cfg["b_kv"] * d * bpe * nbuf
+    scores = cfg["b_q"] * cfg["b_kv"] * 4
+    acc = cfg["b_q"] * d * 4 + 2 * cfg["b_q"] * 4
+    if q + kv + scores + acc > VMEM_USABLE:
+        return False
+    if bits == 32 and not cfg["acc32"]:
+        return False
+    if cfg["b_q"] > _round_up(inputs["Lq"], LANE) \
+            or cfg["b_kv"] > _round_up(inputs["Lkv"], LANE):
+        return False
+    return True
+
+
+ATTENTION_SPACE = ParamSpace(
+    name="attention",
+    params=ATTENTION_PARAMS,
+    input_params=ATTENTION_INPUTS,
+    is_legal=attention_is_legal,
+)
+
+
+SSD_PARAMS: Dict[str, Tuple[int, ...]] = {
+    "chunk": (32, 64, 128, 256, 512),
+    "b_heads": (1, 2, 4, 8),
+    "acc32": (0, 1),
+    "prefetch": (1, 2, 3),
+}
+
+SSD_INPUTS = ("B", "L", "H", "P", "S", "dtype_bits")   # P=head dim, S=state dim
+
+
+def ssd_is_legal(cfg: Mapping[str, int], inputs: Mapping[str, int]) -> bool:
+    bits = inputs["dtype_bits"]
+    bpe = bits // 8
+    c, bh = cfg["chunk"], cfg["b_heads"]
+    p, s = inputs["P"], inputs["S"]
+    nbuf = 2 if cfg["prefetch"] >= 2 else 1
+    x = bh * c * p * bpe * nbuf
+    bc = 2 * bh * c * s * bpe * nbuf
+    state = bh * p * s * 4
+    intra = bh * c * c * 4
+    if x + bc + state + intra + bh * c * p * 4 > VMEM_USABLE:
+        return False
+    if c > _round_up(inputs["L"], LANE):
+        return False
+    if bits == 32 and not cfg["acc32"]:
+        return False
+    return True
+
+
+SSD_SPACE = ParamSpace(
+    name="ssd",
+    params=SSD_PARAMS,
+    input_params=SSD_INPUTS,
+    is_legal=ssd_is_legal,
+)
+
+
+SPACES: Dict[str, ParamSpace] = {
+    "gemm": GEMM_SPACE,
+    "conv": CONV_SPACE,
+    "attention": ATTENTION_SPACE,
+    "ssd": SSD_SPACE,
+}
+
+
+def gemm_input(M: int, N: int, K: int, dtype_bits: int = 16,
+               trans_a: bool = False, trans_b: bool = False) -> Dict[str, int]:
+    return {"M": int(M), "N": int(N), "K": int(K), "dtype_bits": int(dtype_bits),
+            "trans_a": int(trans_a), "trans_b": int(trans_b)}
+
+
+def conv_input(N: int, H: int, W: int, C: int, K: int, R: int, S: int,
+               dtype_bits: int = 16) -> Dict[str, int]:
+    return {"N": int(N), "H": int(H), "W": int(W), "C": int(C), "K": int(K),
+            "R": int(R), "S": int(S), "dtype_bits": int(dtype_bits)}

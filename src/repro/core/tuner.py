@@ -1,0 +1,138 @@
+"""Tuner facade: train-once, infer-anywhere input-aware kernel selection.
+
+Ties the paper's four components together behind one object:
+
+    tuner = InputAwareTuner.train(GEMM_SPACE, n_samples=50_000)
+    cfg   = tuner.best_config(gemm_input(M=2560, N=16, K=2560))   # cached
+
+The result of ``best_config`` is exactly what the paper ships at runtime:
+the tuning-parameter vector the model believes is fastest for this input,
+optionally refined by re-measuring the top-k on the backend (§6), and cached
+on the filesystem so later calls are free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pathlib
+from typing import Callable, Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from .backend import SimulatedTPUBackend
+from .dataset import Dataset, generate_dataset
+from .features import Featurizer
+from .generative import CategoricalSampler
+from .mlp import MLP
+from .search import SearchResult, exhaustive_search
+from .space import SPACES, Config, ParamSpace
+
+DEFAULT_CACHE = os.path.expanduser("~/.cache/repro-isaac")
+
+
+def _input_key(space_name: str, inputs: Mapping[str, int]) -> str:
+    blob = json.dumps({"s": space_name, "i": dict(sorted(inputs.items()))},
+                      sort_keys=True)
+    return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+
+@dataclasses.dataclass
+class InputAwareTuner:
+    """Trained input-aware tuner for one parameter space."""
+
+    space: ParamSpace
+    model: MLP
+    featurizer: Featurizer
+    sampler: CategoricalSampler
+    backend: SimulatedTPUBackend
+    top_k: int = 10
+    cache_dir: Optional[str] = None
+    _mem_cache: Dict[str, Config] = dataclasses.field(default_factory=dict)
+
+    # -- training (the offline hours of §4-§5) --------------------------------
+    @classmethod
+    def train(cls, space: ParamSpace, *, n_samples: int = 20000,
+              hidden: Tuple[int, ...] = (64, 128, 64), epochs: int = 40,
+              backend: Optional[SimulatedTPUBackend] = None,
+              seed: int = 0, cache_dir: Optional[str] = None,
+              verbose: bool = False) -> "InputAwareTuner":
+        import jax
+        backend = backend or SimulatedTPUBackend()
+        ds, sampler = generate_dataset(space, n_samples, backend=backend,
+                                       seed=seed, verbose=verbose)
+        featurizer, X, y = ds.featurize()
+        model = MLP.create(jax.random.PRNGKey(seed), in_dim=featurizer.dim,
+                           hidden=hidden)
+        model.fit(X, y, epochs=epochs, verbose=verbose)
+        return cls(space=space, model=model, featurizer=featurizer,
+                   sampler=sampler, backend=backend, cache_dir=cache_dir)
+
+    # -- runtime inference (§6) ------------------------------------------------
+    def search(self, inputs: Mapping[str, int], *, remeasure: bool = True
+               ) -> SearchResult:
+        measure = (lambda cfg: self.backend.measure(self.space.name, cfg,
+                                                    inputs)) if remeasure else None
+        return exhaustive_search(self.space, inputs, model=self.model,
+                                 featurizer=self.featurizer, top_k=self.top_k,
+                                 measure=measure)
+
+    def best_config(self, inputs: Mapping[str, int], *,
+                    remeasure: bool = True) -> Config:
+        key = _input_key(self.space.name, inputs)
+        if key in self._mem_cache:
+            return self._mem_cache[key]
+        if self.cache_dir:
+            p = pathlib.Path(self.cache_dir) / f"{self.space.name}-{key}.json"
+            if p.exists():
+                cfg = json.loads(p.read_text())
+                self._mem_cache[key] = cfg
+                return cfg
+        cfg = self.search(inputs, remeasure=remeasure).best
+        self._mem_cache[key] = cfg
+        if self.cache_dir:
+            pathlib.Path(self.cache_dir).mkdir(parents=True, exist_ok=True)
+            (pathlib.Path(self.cache_dir) /
+             f"{self.space.name}-{key}.json").write_text(json.dumps(cfg))
+        return cfg
+
+    # -- persistence ------------------------------------------------------------
+    def save(self, directory: str) -> None:
+        d = pathlib.Path(directory)
+        d.mkdir(parents=True, exist_ok=True)
+        (d / f"{self.space.name}.mlp.npz").write_bytes(self.model.to_bytes())
+        (d / f"{self.space.name}.feat.json").write_text(self.featurizer.to_json())
+        (d / f"{self.space.name}.sampler.json").write_text(self.sampler.to_json())
+
+    @classmethod
+    def load(cls, directory: str, space: ParamSpace,
+             backend: Optional[SimulatedTPUBackend] = None,
+             cache_dir: Optional[str] = None) -> "InputAwareTuner":
+        d = pathlib.Path(directory)
+        model = MLP.from_bytes((d / f"{space.name}.mlp.npz").read_bytes())
+        featurizer = Featurizer.from_json(
+            space, (d / f"{space.name}.feat.json").read_text())
+        sampler = CategoricalSampler.from_json(
+            space, (d / f"{space.name}.sampler.json").read_text())
+        return cls(space=space, model=model, featurizer=featurizer,
+                   sampler=sampler, backend=backend or SimulatedTPUBackend(),
+                   cache_dir=cache_dir)
+
+
+_GLOBAL_TUNERS: Dict[str, InputAwareTuner] = {}
+
+
+def install_tuner(tuner: InputAwareTuner) -> None:
+    """Make a tuner visible to the kernel dispatcher (models route GEMMs
+    through it when present — the paper's 'kernel generation backend')."""
+    _GLOBAL_TUNERS[tuner.space.name] = tuner
+
+
+def get_tuner(space_name: str) -> Optional[InputAwareTuner]:
+    return _GLOBAL_TUNERS.get(space_name)
+
+
+def clear_tuners() -> None:
+    _GLOBAL_TUNERS.clear()

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the tuner's parameter spaces.
+
+  matmul.py     paper §3.2 GEMM (bm/bn/bk/k_unroll/k_split/order/acc32)
+  conv.py       paper §3.3 implicit-GEMM conv (shifted-window, c_split)
+  attention.py  flash attention (beyond-paper tunable op)
+  ssd.py        Mamba-2 SSD chunk scan (beyond-paper tunable op)
+  ref.py        pure-jnp oracles
+  ops.py        jit wrappers: padding + partial reduction
+  dispatch.py   tuned-config routing (TPU: Pallas; CPU/dry-run: XLA ops)
+"""
+
+from . import dispatch, ops, ref

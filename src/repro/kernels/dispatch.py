@@ -1,0 +1,165 @@
+"""Kernel dispatch: route model compute through tuned kernels.
+
+On TPU, ``matmul``/``conv2d``/... run the Pallas kernels with the
+input-aware configuration from the installed tuner (the paper's §6 runtime:
+input parameters fixed by the call site, tuning parameters inferred and
+cached).  On CPU — including the multi-pod dry-run — they lower to plain XLA
+ops so ``cost_analysis()`` reflects the true dataflow (DESIGN.md §4).
+
+``check_config`` executes a Pallas kernel under interpret mode against its
+ref.py oracle — the correctness notion of kernel legality used by
+InterpretBackend and the test suite.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ops, ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _tuned_cfg(space_name: str, inputs: Mapping[str, int]
+               ) -> Optional[Dict[str, int]]:
+    from repro.core.tuner import get_tuner
+    tuner = get_tuner(space_name)
+    if tuner is None:
+        return None
+    return tuner.best_config(inputs, remeasure=False)
+
+
+def matmul(a: jax.Array, b: jax.Array, *, prefer_kernel: bool = False
+           ) -> jax.Array:
+    """Model-facing GEMM.  prefer_kernel forces the Pallas path (tests)."""
+    if on_tpu() or prefer_kernel:
+        from repro.core.space import gemm_input
+        bits = jnp.finfo(a.dtype).bits if jnp.issubdtype(a.dtype, jnp.floating) else 32
+        cfg = _tuned_cfg("gemm", gemm_input(a.shape[0], b.shape[1],
+                                            a.shape[1], bits))
+        return ops.matmul(a, b, cfg, interpret=not on_tpu())
+    return jnp.dot(a, b)
+
+
+def matmul2(x: jax.Array, w: jax.Array, *, prefer_kernel: bool = False
+            ) -> jax.Array:
+    """Projection GEMM (..., D) @ (D, F) -> (..., F): the model-facing entry
+    point.  Leading dims fold into M, so the tuner sees the true GEMM shape."""
+    lead = x.shape[:-1]
+    if on_tpu() or prefer_kernel:
+        x2 = x.reshape(-1, x.shape[-1])
+        return matmul(x2, w, prefer_kernel=prefer_kernel).reshape(*lead,
+                                                                  w.shape[-1])
+    return jnp.dot(x, w)
+
+
+def conv2d(i: jax.Array, f: jax.Array, *, prefer_kernel: bool = False
+           ) -> jax.Array:
+    if on_tpu() or prefer_kernel:
+        from repro.core.space import conv_input
+        bits = jnp.finfo(i.dtype).bits
+        N, H, W, C = i.shape
+        R, S, _, K = f.shape
+        cfg = _tuned_cfg("conv", conv_input(N, H, W, C, K, R, S, bits))
+        return ops.conv2d(i, f, cfg, interpret=not on_tpu())
+    return ref.conv2d_ref(i, f)
+
+
+def flash_attention(q, k, v, *, causal=True, q_offset=0,
+                    prefer_kernel: bool = False):
+    if on_tpu() or prefer_kernel:
+        from repro.core.space import ATTENTION_SPACE
+        bits = jnp.finfo(q.dtype).bits
+        inputs = {"B": q.shape[0], "Hq": q.shape[1], "Hkv": k.shape[1],
+                  "Lq": q.shape[2], "Lkv": k.shape[2], "D": q.shape[3],
+                  "dtype_bits": bits, "causal": int(causal)}
+        cfg = _tuned_cfg("attention", inputs)
+        return ops.flash_attention(q, k, v, cfg, causal=causal,
+                                   q_offset=q_offset,
+                                   interpret=not on_tpu())
+    return ref.attention_ref(q, k, v, causal=causal, q_offset=q_offset)
+
+
+def ssd_scan(x, dt, a, bm, cm, *, prefer_kernel: bool = False):
+    if on_tpu() or prefer_kernel:
+        inputs = {"B": x.shape[0], "L": x.shape[1], "H": x.shape[2],
+                  "P": x.shape[3], "S": bm.shape[-1],
+                  "dtype_bits": jnp.finfo(x.dtype).bits}
+        cfg = _tuned_cfg("ssd", inputs)
+        return ops.ssd_scan(x, dt, a, bm, cm, cfg, interpret=not on_tpu())
+    # CPU/dry-run path: chunked-but-pure-jnp SSD (identical math, XLA ops)
+    return ref.ssd_ref(x, dt, a, bm, cm)
+
+
+# ---------------------------------------------------------------------------
+# Correctness gate used by InterpretBackend + tests
+# ---------------------------------------------------------------------------
+
+def check_config(space_name: str, cfg: Dict[str, int],
+                 inputs: Dict[str, int], *, rtol: float = 2e-2,
+                 seed: int = 0, max_dim: int = 512) -> None:
+    """Run the Pallas kernel for `cfg` on a shrunken instance of `inputs`
+    (interpret mode) and assert allclose against the jnp oracle.  Raises on
+    mismatch.  Dims are capped at max_dim to keep interpret mode fast — the
+    config's *structure* (splits, unrolls, block shapes) is exercised fully.
+    """
+    rng = np.random.default_rng(seed)
+    dtype = jnp.bfloat16 if inputs.get("dtype_bits", 16) <= 16 else jnp.float32
+    cap = lambda v: int(min(v, max_dim))
+
+    if space_name == "gemm":
+        M, N, K = cap(inputs["M"]), cap(inputs["N"]), cap(inputs["K"])
+        a = jnp.asarray(rng.normal(size=(M, K)), dtype)
+        b = jnp.asarray(rng.normal(size=(K, N)), dtype)
+        got = ops.matmul(a, b, cfg)
+        want = ref.matmul_ref(a, b)
+    elif space_name == "conv":
+        N, H, W = cap(inputs["N"]), cap(inputs["H"]), cap(inputs["W"])
+        C, K = cap(inputs["C"]), cap(inputs["K"])
+        R, S = inputs["R"], inputs["S"]
+        i = jnp.asarray(rng.normal(size=(min(N, 2), min(H, 16), min(W, 16), C)),
+                        dtype)
+        f = jnp.asarray(rng.normal(size=(R, S, C, K)) / (R * S * C) ** 0.5,
+                        dtype)
+        got = ops.conv2d(i, f, cfg)
+        want = ref.conv2d_ref(i, f)
+    elif space_name == "attention":
+        B, Hq, Hkv = min(inputs["B"], 2), min(inputs["Hq"], 4), inputs["Hkv"]
+        Hkv = min(Hkv, Hq)
+        while Hq % Hkv:
+            Hkv -= 1
+        Lq, Lkv, D = cap(inputs["Lq"]), cap(inputs["Lkv"]), min(inputs["D"], 128)
+        causal = bool(inputs.get("causal", 1)) and Lq == Lkv
+        q = jnp.asarray(rng.normal(size=(B, Hq, Lq, D)), dtype)
+        k = jnp.asarray(rng.normal(size=(B, Hkv, Lkv, D)), dtype)
+        v = jnp.asarray(rng.normal(size=(B, Hkv, Lkv, D)), dtype)
+        got = ops.flash_attention(q, k, v, cfg, causal=causal)
+        want = ref.attention_ref(q, k, v, causal=causal)
+    elif space_name == "ssd":
+        B, L = min(inputs["B"], 2), cap(inputs["L"])
+        H, P, S = min(inputs["H"], 4), min(inputs["P"], 64), min(inputs["S"], 64)
+        x = jnp.asarray(rng.normal(size=(B, L, H, P)), dtype)
+        dt = jnp.asarray(rng.uniform(0.01, 0.1, size=(B, L, H)), dtype)
+        a = -jnp.asarray(rng.uniform(0.5, 2.0, size=(H,)), jnp.float32)
+        bm = jnp.asarray(rng.normal(size=(B, L, S)), dtype)
+        cm = jnp.asarray(rng.normal(size=(B, L, S)), dtype)
+        got = ops.ssd_scan(x, dt, a, bm, cm, cfg)
+        want = ref.ssd_ref(x, dt, a, bm, cm)
+    else:
+        raise ValueError(space_name)
+
+    g = np.asarray(got, np.float32)
+    w = np.asarray(want, np.float32)
+    scale = max(float(np.abs(w).max()), 1e-6)
+    err = float(np.abs(g - w).max()) / scale
+    if not np.isfinite(g).all():
+        raise AssertionError(f"{space_name} cfg {cfg}: non-finite output")
+    if err > rtol:
+        raise AssertionError(
+            f"{space_name} cfg {cfg}: rel err {err:.4f} > {rtol}")

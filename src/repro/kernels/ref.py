@@ -1,0 +1,74 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+Each function is the semantic ground truth the kernels are tested against
+(tests/test_kernels.py sweeps shapes/dtypes/configs and asserts allclose).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)
+                   ).astype(a.dtype)
+
+
+def conv2d_ref(i: jax.Array, f: jax.Array) -> jax.Array:
+    """SAME-padded stride-1 conv.  i (N,H,W,C), f (R,S,C,K) -> (N,H,W,K)."""
+    dn = jax.lax.conv_dimension_numbers(i.shape, f.shape,
+                                        ("NHWC", "HWIO", "NHWC"))
+    return jax.lax.conv_general_dilated(
+        i.astype(jnp.float32), f.astype(jnp.float32),
+        window_strides=(1, 1), padding="SAME",
+        dimension_numbers=dn).astype(i.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, q_offset: int = 0) -> jax.Array:
+    """GQA attention.  q (B,Hq,Lq,D), k/v (B,Hkv,Lkv,D)."""
+    B, Hq, Lq, D = q.shape
+    Hkv, Lkv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    kf = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf)
+    s = s / (D ** 0.5)
+    if causal:
+        rows = q_offset + jnp.arange(Lq)[:, None]
+        cols = jnp.arange(Lkv)[None, :]
+        s = jnp.where(cols <= rows, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array, bm: jax.Array,
+            cm: jax.Array) -> jax.Array:
+    """Sequential SSD recurrence — the exact (slow) oracle.
+
+    state_{t} = exp(a*dt_t) * state_{t-1} + dt_t * x_t (outer) B_t
+    y_t       = C_t . state_t
+    x (B,L,H,P), dt (B,L,H), a (H,), bm/cm (B,L,S) -> y (B,L,H,P)
+    """
+    B, L, H, P = x.shape
+    S = bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bf = bm.astype(jnp.float32)
+    cf = cm.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp            # (B,H,P), (B,H), (B,S), (B,S)
+        decay = jnp.exp(af[None, :] * dtt)                      # (B,H)
+        contrib = jnp.einsum("bh,bhp,bs->bhps", dtt, xt, bt)
+        state = state * decay[:, :, None, None] + contrib       # (B,H,P,S)
+        y = jnp.einsum("bhps,bs->bhp", state, ct)
+        return state, y
+
+    state0 = jnp.zeros((B, H, P, S), jnp.float32)
+    xs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+          bf.transpose(1, 0, 2), cf.transpose(1, 0, 2))
+    _, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)

@@ -1,0 +1,104 @@
+"""Mamba-2 SSD (state-space duality) chunk scan — tunable Pallas kernel.
+
+Beyond-paper op: the paper's tuner is extended to the SSD chunked scan
+(DESIGN.md §5, mamba2/jamba architectures).  The chunked algorithm
+(arXiv:2405.21060) splits the sequence into chunks of length `chunk`:
+within a chunk the recurrence is a masked quadratic form (MXU-friendly),
+across chunks a (P x S) state is carried — here in VMEM scratch across
+sequential grid steps, the TPU-idiomatic substitute for the paper's GPU
+inter-block communication.
+
+Tunables (core/space.py SSD_SPACE): chunk, b_heads, acc32, prefetch.
+
+Layouts: x (B, L, H, P), dt (B, L, H), A (H,), Bm/Cm (B, L, S) [ngroups=1],
+y (B, L, H, P).  ops.ssd_scan pads L to a chunk multiple.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *,
+                chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)         # (chunk, bh, P)
+    dt = dt_ref[0].astype(jnp.float32)       # (chunk, bh)
+    a = a_ref[...].astype(jnp.float32)       # (bh,)
+    bm = b_ref[0].astype(jnp.float32)        # (chunk, S)
+    cm = c_ref[0].astype(jnp.float32)        # (chunk, S)
+
+    adt = dt * a[None, :]                    # (chunk, bh) log-decay per step
+    cum = jnp.cumsum(adt, axis=0)            # (chunk, bh)
+
+    # -- intra-chunk: masked quadratic form (the 'duality' matmul) ---------
+    # scores[i, j, h] = (C_i . B_j) * exp(cum[i,h] - cum[j,h]) for j <= i
+    cb = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32)  # (c, c)
+    decay = jnp.exp(cum[:, None, :] - cum[None, :, :])          # (c, c, bh)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    mask = (jj <= ii)[:, :, None]
+    scores = jnp.where(mask, cb[:, :, None] * decay, 0.0)       # (c, c, bh)
+    xdt = x * dt[:, :, None]                                    # (c, bh, P)
+    y_intra = jnp.einsum("ijh,jhp->ihp", scores, xdt)
+
+    # -- inter-chunk: contribution of the carried state --------------------
+    state = state_ref[...]                                      # (bh, P, S)
+    y_inter = jnp.einsum("is,hps,ih->ihp", cm, state, jnp.exp(cum))
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # -- state update -------------------------------------------------------
+    tail = jnp.exp(cum[-1][None, :] - cum)                      # (c, bh)
+    contrib = jnp.einsum("jh,jhp,js->hps", tail * dt, x, bm)
+    state_ref[...] = state * jnp.exp(cum[-1])[:, None, None] + contrib
+
+
+def ssd_scan_pallas(x: jax.Array, dt: jax.Array, a: jax.Array,
+                    bm: jax.Array, cm: jax.Array, cfg: Mapping[str, int], *,
+                    interpret: bool = True) -> jax.Array:
+    """Aligned SSD scan: L % chunk == 0, H % b_heads == 0 required."""
+    B, L, H, P = x.shape
+    S = bm.shape[-1]
+    chunk = min(cfg["chunk"], L)
+    bh = min(cfg.get("b_heads", 1), H)
+    assert L % chunk == 0 and H % bh == 0, ((L, H), (chunk, bh))
+    n_chunks = L // chunk
+    gh = H // bh
+
+    grid = (B, gh, n_chunks)                 # chunks innermost: sequential
+
+    x_map = lambda b, h, c: (b, c, h, 0)
+    dt_map = lambda b, h, c: (b, c, h)
+    a_map = lambda b, h, c: (h,)
+    bc_map = lambda b, h, c: (b, c, 0)
+    y_map = lambda b, h, c: (b, c, h, 0)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, bh, P), x_map),
+            pl.BlockSpec((1, chunk, bh), dt_map),
+            pl.BlockSpec((bh,), a_map),
+            pl.BlockSpec((1, chunk, S), bc_map),
+            pl.BlockSpec((1, chunk, S), bc_map),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, bh, P), y_map),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((bh, P, S), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, bm, cm)

@@ -1,0 +1,370 @@
+"""Shared model building blocks, pure JAX.
+
+Every block routes its large GEMMs through ``repro.kernels.dispatch`` so that
+on a real TPU the input-aware tuner (the paper's contribution) supplies the
+kernel configuration, while under SPMD jit / the CPU dry-run the same call
+lowers to plain XLA ops whose cost analysis reflects the true dataflow.
+
+Conventions:
+  * params are nested dicts of jax.Arrays (pytrees);
+  * activations default to bfloat16, accumulation/normalization in fp32;
+  * shapes follow (batch, seq, ...) with heads split as (..., n_heads, head_dim).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dispatch
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: jax.Array, shape: Tuple[int, ...], dtype,
+               fan_in: Optional[int] = None) -> jax.Array:
+    fan_in = fan_in if fan_in is not None else shape[0]
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norm / rope
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (B, S, H, D); positions (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, d/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (train/prefill path: chunked flash-style in pure jnp so that
+# the 32k-seq dry-run never materializes an (S, S) score tensor)
+# ---------------------------------------------------------------------------
+
+def init_attention(key: jax.Array, d_model: int, n_heads: int, n_kv: int,
+                   head_dim: int, qk_norm: bool, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d_model, n_heads * head_dim), dtype),
+        "wk": dense_init(ks[1], (d_model, n_kv * head_dim), dtype),
+        "wv": dense_init(ks[2], (d_model, n_kv * head_dim), dtype),
+        "wo": dense_init(ks[3], (n_heads * head_dim, d_model), dtype,
+                         fan_in=n_heads * head_dim),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.ones((head_dim,), dtype)
+        p["k_norm"] = jnp.ones((head_dim,), dtype)
+    return p
+
+
+def _chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                       causal: bool, q_start: jax.Array | int,
+                       kv_len: Optional[jax.Array] = None,
+                       chunk: int = 1024, unroll: bool = False) -> jax.Array:
+    """Flash-style attention in pure jnp: scan over KV chunks with running
+    (max, sum) so peak memory is O(S * chunk), not O(S^2).
+
+    q (B, Sq, H, D); k/v (B, Skv, G, D) with G = kv heads; H % G == 0.
+    GQA K/V are expanded to the full H heads *inside* each chunk step (an
+    O(chunk)-sized gather) so every live tensor carries a flat H dimension —
+    the layout head-TP sharding propagates through cleanly.
+    q_start: absolute position of q[0] (for causal masking during decode).
+    kv_len: number of valid kv positions (B,) or scalar; None = all valid.
+    """
+    B, Sq, H, D = q.shape
+    Skv, G = k.shape[1], k.shape[2]
+    rep = H // G
+    scale = 1.0 / math.sqrt(D)
+    chunk = min(chunk, Skv)
+    n_chunks = -(-Skv // chunk)
+    pad = n_chunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    # (n_chunks, B, chunk, G, D)
+    kc = k.reshape(B, n_chunks, chunk, G, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, G, D).transpose(1, 0, 2, 3, 4)
+
+    qf = q.astype(jnp.float32) * scale                   # (B, Sq, H, D)
+    # q_start may be scalar or per-batch (B,) — normalize to (B or 1, Sq)
+    q_pos = jnp.asarray(q_start).reshape(-1, 1) + jnp.arange(Sq)[None, :]
+    valid_len = Skv if kv_len is None else kv_len
+
+    def body(carry, inp):
+        m, l, acc = carry                     # running max / sum / out
+        kb, vb, c_idx = inp                   # (B, chunk, G, D)
+        kb = jnp.repeat(kb, rep, axis=2).astype(jnp.float32)  # (B,ck,H,D)
+        vb = jnp.repeat(vb, rep, axis=2).astype(jnp.float32)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb)        # (B,H,Sq,chunk)
+        kv_pos = c_idx * chunk + jnp.arange(chunk)       # (chunk,)
+        mask = kv_pos[None, None, :] < jnp.asarray(valid_len).reshape(-1, 1, 1)
+        if causal:
+            mask = mask & (kv_pos[None, None, :] <= q_pos[:, :, None])
+        s = jnp.where(mask[:, None, :, :], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vb)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    # checkpoint the chunk body: without it, scan's backward stacks every
+    # chunk's score matrix — silently re-materializing the full O(S^2) buffer
+    # the chunking exists to avoid.
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), (m0, l0, a0), (kc, vc, jnp.arange(n_chunks)),
+        unroll=bool(unroll))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(0, 2, 1, 3)                      # (B, Sq, H, D)
+    return out.astype(q.dtype)
+
+
+def _block_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                            chunk: int = 1024,
+                            unroll: bool = False) -> jax.Array:
+    """Causal self-attention that SKIPS upper-triangular blocks (hillclimb
+    H-series; see EXPERIMENTS.md §Perf).
+
+    The plain chunked scan computes every (q, kv-chunk) pair and masks the
+    future — half the score FLOPs are discarded.  Here both axes are chunked
+    and a single scan walks only the nq*(nq+1)/2 lower-triangular block
+    pairs (a static list), updating that q-chunk's running (max, sum, acc)
+    in place.  Same math, ~2x fewer attention FLOPs at full sequence length.
+
+    Requires Sq == Skv, q_start == 0, full validity (the training/prefill
+    self-attention case); callers fall back to _chunked_attention otherwise.
+    """
+    B, Sq, H, D = q.shape
+    G = k.shape[2]
+    rep = H // G
+    scale = 1.0 / math.sqrt(D)
+    ck = min(chunk, Sq)
+    assert Sq % ck == 0, (Sq, ck)
+    nq = Sq // ck
+    qc = (q.astype(jnp.float32) * scale).reshape(B, nq, ck, H, D
+                                                 ).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(B, nq, ck, G, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nq, ck, G, D).transpose(1, 0, 2, 3, 4)
+
+    pairs = [(qi, ki) for qi in range(nq) for ki in range(qi + 1)]
+    qis = jnp.asarray([p[0] for p in pairs])
+    kis = jnp.asarray([p[1] for p in pairs])
+
+    def body(carry, inp):
+        m, l, acc = carry          # (nq, B, H, ck) / ... / (nq, B, H, ck, D)
+        qi, ki = inp
+        qb = jax.lax.dynamic_index_in_dim(qc, qi, 0, keepdims=False)
+        kb = jnp.repeat(jax.lax.dynamic_index_in_dim(kc, ki, 0, False),
+                        rep, axis=2).astype(jnp.float32)
+        vb = jnp.repeat(jax.lax.dynamic_index_in_dim(vc, ki, 0, False),
+                        rep, axis=2).astype(jnp.float32)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb)
+        # mask only the diagonal block (qi == ki); earlier blocks are fully
+        # visible, later ones never computed
+        tri = jnp.tril(jnp.ones((ck, ck), bool))
+        s = jnp.where((qi != ki) | tri[None, None], s, -1e30)
+        mi = jax.lax.dynamic_index_in_dim(m, qi, 0, False)
+        li = jax.lax.dynamic_index_in_dim(l, qi, 0, False)
+        ai = jax.lax.dynamic_index_in_dim(acc, qi, 0, False)
+        m_new = jnp.maximum(mi, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(mi - m_new)
+        li = li * corr + p.sum(axis=-1)
+        ai = ai * corr[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vb)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, qi, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, li, qi, 0)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, ai, qi, 0)
+        return (m, l, acc), None
+
+    m0 = jnp.full((nq, B, H, ck), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((nq, B, H, ck), jnp.float32)
+    a0 = jnp.zeros((nq, B, H, ck, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, a0),
+                                  (qis, kis), unroll=bool(unroll))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    # (nq, B, H, ck, D) -> (B, Sq, H, D)
+    out = out.transpose(1, 0, 3, 2, 4).reshape(B, Sq, H, D)
+    return out.astype(q.dtype)
+
+
+def attention(p: Params, x: jax.Array, *, n_heads: int, n_kv: int,
+              head_dim: int, positions: jax.Array, causal: bool,
+              rope_theta: float, qk_norm: bool, norm_eps: float,
+              cache: Optional[Params] = None,
+              cache_index: Optional[jax.Array] = None,
+              memory: Optional[jax.Array] = None,
+              attn_chunk: int = 1024,
+              decode_kv_splits: int = 1,
+              unroll: bool = False,
+              causal_block_skip: bool = False,
+              ) -> Tuple[jax.Array, Optional[Params]]:
+    """GQA attention block body (no residual / pre-norm — caller owns those).
+
+    cache: {'k': (B, L_max, G, D), 'v': ...} decode KV cache; cache_index is
+    the number of tokens already in it.  memory: encoder output for
+    cross-attention (whisper decoder) — keys/values come from memory instead
+    of x, no cache, no causal mask.
+    """
+    from repro.parallel import sharding as shd
+    B, S, _ = x.shape
+    q = dispatch.matmul2(x, p["wq"]).reshape(B, S, n_heads, head_dim)
+    kv_src = memory if memory is not None else x
+    Skv_in = kv_src.shape[1]
+    k = dispatch.matmul2(kv_src, p["wk"]).reshape(B, Skv_in, n_kv, head_dim)
+    v = dispatch.matmul2(kv_src, p["wv"]).reshape(B, Skv_in, n_kv, head_dim)
+
+    # Attention TP placement.  Preferred: Megatron head-TP — q sharded over
+    # heads, K/V gathered over 'model' (small, no quadratic term), the score
+    # and PV work split by head, and wo contracting a head-sharded input so
+    # the projection weights stay TP-resident.  Fallback when H % tp != 0
+    # (smollm 9H, qwen3 40H, arctic 56H, whisper 8H): sequence-parallel
+    # queries — the quadratic work splits by query position instead, at the
+    # cost of gathering attention projection weights.
+    # Applies to training AND prefill (S > 1, cache being filled): without
+    # it GSPMD replicates the 32k x 32k score work across the model axis for
+    # non-head-divisible archs (16x redundancy — EXPERIMENTS.md §Perf H4).
+    tp = shd.axis_size("model")
+    if tp > 1 and S > 1:
+        if n_heads % tp == 0:
+            q = shd.constrain(q, "batch", "none", "model", "none")
+        elif S % tp == 0:
+            q = shd.constrain(q, "batch", "seq", "none", "none")
+        k = shd.constrain(k, "batch", "none", "none", "none")
+        v = shd.constrain(v, "batch", "none", "none", "none")
+
+    if qk_norm:
+        q = rms_norm(q, p["q_norm"], norm_eps)
+        k = rms_norm(k, p["k_norm"], norm_eps)
+
+    if memory is None:
+        q = apply_rope(q, positions, rope_theta)
+        kv_positions = positions
+        k = apply_rope(k, kv_positions, rope_theta)
+
+    new_cache = None
+    kv_len = None
+    if cache is not None:
+        idx = jnp.asarray(cache_index)
+        if idx.ndim == 0:
+            k_full = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
+            v_full = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+        else:
+            # per-sequence cache positions (continuous batching slots)
+            rows = jnp.arange(B)[:, None]
+            cols = idx[:, None] + jnp.arange(S)[None, :]
+            k_full = cache["k"].at[rows, cols].set(
+                k.astype(cache["k"].dtype), mode="drop")
+            v_full = cache["v"].at[rows, cols].set(
+                v.astype(cache["v"].dtype), mode="drop")
+        new_cache = {"k": k_full, "v": v_full}
+        k, v = k_full, v_full
+        kv_len = idx + S
+        q_start = idx
+    else:
+        q_start = 0
+
+    if cache is not None and S == 1 and decode_kv_splits > 1 \
+            and k.shape[1] % decode_kv_splits == 0:
+        # long-context decode: sequence-parallel flash-decoding (SP)
+        from repro.serve.flash_decode import flash_decode_attention
+        out = flash_decode_attention(q, k, v, kv_len,
+                                     n_splits=decode_kv_splits)
+    elif causal_block_skip and causal and memory is None and cache is None \
+            and q.shape[1] == k.shape[1] \
+            and q.shape[1] % min(attn_chunk, q.shape[1]) == 0:
+        out = _block_causal_attention(q, k, v, chunk=attn_chunk,
+                                      unroll=unroll)
+    else:
+        out = _chunked_attention(q, k, v, causal=causal and memory is None,
+                                 q_start=q_start, kv_len=kv_len,
+                                 chunk=attn_chunk, unroll=unroll)
+    out = out.reshape(B, S, n_heads * head_dim)
+    if cache is not None and S == 1:
+        # decode: wo's contraction dim (H*hd) is 'model'-sharded — pin the
+        # attention output to match so wo is consumed in place (psum) rather
+        # than gathered, and pin wo's OUTPUT D-sharded over 'data' likewise
+        # (see ModelConfig.decode_replicate_acts)
+        out = shd.constrain(out, "none", "none", "model")
+        proj = dispatch.matmul2(out, p["wo"])
+        return shd.constrain(proj, "none", "none", "fsdp"), new_cache
+    return dispatch.matmul2(out, p["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# dense SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key: jax.Array, d_model: int, d_ff: int, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_up": dense_init(ks[1], (d_model, d_ff), dtype),
+        "w_down": dense_init(ks[2], (d_ff, d_model), dtype, fan_in=d_ff),
+    }
+
+
+def mlp(p: Params, x: jax.Array, tp: bool = True) -> jax.Array:
+    from repro.parallel import sharding as shd
+    g = dispatch.matmul2(x, p["w_gate"])
+    u = dispatch.matmul2(x, p["w_up"])
+    if not tp:
+        # pure-SP: tokens stay sequence-sharded, weights are consumed
+        # replicated (dp_only rules) — zero activation reshards
+        g = shd.constrain(g, "batch", "seq", "none")
+        u = shd.constrain(u, "batch", "seq", "none")
+        return dispatch.matmul2(jax.nn.silu(g) * u, p["w_down"])
+    # Megatron TP: pin the hidden activations to the 'model' axis so the
+    # ffn weights are consumed in their TP-sharded layout (all-gather x over
+    # S, psum after w_down) instead of GSPMD electing to gather weights.
+    # Decode (S == 1): keep batch unconstrained — feature-sharded decode
+    # activations contract against the FSDP weight shards with tiny psums,
+    # and forcing batch sharding here would reintroduce weight gathers.
+    if x.shape[1] == 1:
+        g = shd.constrain(g, "none", "none", "model")
+        u = shd.constrain(u, "none", "none", "model")
+        out = dispatch.matmul2(jax.nn.silu(g) * u, p["w_down"])
+        # pin the output D-sharded over 'data' as well — otherwise GSPMD
+        # prefers replicating the output and gathering w_down's D shards
+        return shd.constrain(out, "none", "none", "fsdp")
+    g = shd.constrain(g, "batch", "none", "model")
+    u = shd.constrain(u, "batch", "none", "model")
+    return dispatch.matmul2(jax.nn.silu(g) * u, p["w_down"])

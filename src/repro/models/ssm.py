@@ -1,0 +1,206 @@
+"""Mamba-2 (SSD — state-space duality) mixer, pure JAX.
+
+Train/prefill path uses the *chunked* SSD formulation (arXiv:2405.21060): the
+sequence is split into chunks of Q steps; within a chunk the recurrence is a
+masked attention-like matmul (quadratic in Q, MXU-friendly), across chunks a
+short lax.scan carries the (H, P, S) state.  This is the same math the Pallas
+``kernels/ssd.py`` kernel implements — on TPU the dispatcher routes to it with
+the tuner-chosen chunk size; here the pure-jnp version keeps the dry-run HLO
+matmul-dominated (the point of SSD).
+
+Decode path is the O(1)-per-step recurrence on a carried state.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense_init
+
+CONV_WIDTH = 4
+
+
+def init_mamba(key: jax.Array, d_model: int, state: int, head_dim: int,
+               dtype) -> Params:
+    d_inner = 2 * d_model
+    n_heads = d_inner // head_dim
+    ks = jax.random.split(key, 6)
+    conv_ch = d_inner + 2 * state
+    return {
+        "w_in": dense_init(ks[0], (d_model, 2 * d_inner + 2 * state + n_heads),
+                           dtype),
+        "conv_w": (jax.random.normal(ks[1], (CONV_WIDTH, conv_ch), jnp.float32)
+                   / math.sqrt(CONV_WIDTH)).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "norm": jnp.ones((d_inner,), dtype),
+        "w_out": dense_init(ks[2], (d_inner, d_model), dtype, fan_in=d_inner),
+    }
+
+
+def _split_proj(proj: jax.Array, d_inner: int, state: int, n_heads: int):
+    z, xbc, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner + 2 * state], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d, width CONV_WIDTH.  xbc (B, L, C).
+    state (B, CONV_WIDTH-1, C) carries the last inputs for decode.
+    Returns (out (B, L, C), new_state)."""
+    B, L, C = xbc.shape
+    if state is None:
+        state = jnp.zeros((B, CONV_WIDTH - 1, C), xbc.dtype)
+    full = jnp.concatenate([state, xbc], axis=1)          # (B, L+W-1, C)
+    out = jnp.zeros((B, L, C), jnp.float32)
+    for i in range(CONV_WIDTH):
+        out = out + (jax.lax.dynamic_slice_in_dim(full, i, L, axis=1)
+                     .astype(jnp.float32) * w[i].astype(jnp.float32))
+    out = jax.nn.silu(out + b.astype(jnp.float32)).astype(xbc.dtype)
+    new_state = jax.lax.dynamic_slice_in_dim(full, L, CONV_WIDTH - 1, axis=1)
+    return out, new_state
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, bm: jax.Array,
+                cm: jax.Array, *, chunk: int = 256,
+                return_final_state: bool = False, unroll: bool = False):
+    """Chunked SSD.  x (B,L,H,P), dt (B,L,H) (post-softplus), a (H,) (<0),
+    bm/cm (B,L,S).  Returns y (B,L,H,P) (and the final (B,H,P,S) state when
+    ``return_final_state`` — used by prefill).  Matches ref.py::ssd_ref."""
+    B, L, H, P = x.shape
+    S = bm.shape[-1]
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0)))
+    Lp = L + pad
+    nc = Lp // Q
+
+    xf = x.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    dtf = dt.reshape(B, nc, Q, H).astype(jnp.float32)
+    bf = bm.reshape(B, nc, Q, S).astype(jnp.float32)
+    cf = cm.reshape(B, nc, Q, S).astype(jnp.float32)
+    af = a.astype(jnp.float32)
+
+    logl = af[None, None, None, :] * dtf                  # (B,nc,Q,H) <= 0
+    cum = jnp.cumsum(logl, axis=2)                        # inclusive
+    # intra-chunk: y[t] += sum_{s<=t} C_t.B_s exp(cum_t - cum_s) dt_s x_s
+    # mask the EXPONENT, not the exp: s > t gives cum_t - cum_s > 0 which
+    # overflows to inf for strong decay, and where(mask, inf, 0) then
+    # poisons the backward pass with inf * 0 = NaN.
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,t,s,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.exp(jnp.where(mask[None, None, :, :, None], diff, -jnp.inf))
+    cb = jnp.einsum("bnts,bnqs->bntq", cf, bf)            # (B,nc,t,s)
+    scores = cb[..., None] * decay * dtf[:, :, None, :, :]  # (B,nc,t,s,H)
+    y_intra = jnp.einsum("bntsh,bnshp->bnthp", scores, xf)
+
+    # chunk states: S_c = sum_s exp(cum_last - cum_s) dt_s x_s (x) B_s
+    seg = jnp.exp(cum[:, :, -1:, :] - cum)                # (B,nc,Q,H)
+    contrib = jnp.einsum("bnqh,bnqhp,bnqs->bnhps",
+                         seg * dtf, xf, bf)               # (B,nc,H,P,S)
+    total = jnp.exp(cum[:, :, -1, :])                     # (B,nc,H)
+
+    def step(state, inp):
+        s_c, tot = inp                                    # (B,H,P,S), (B,H)
+        out_state = state                                 # state BEFORE chunk
+        new = state * tot[:, :, None, None] + s_c
+        return new, out_state
+
+    final_state, prev_states = jax.lax.scan(
+        step, jnp.zeros((B, H, P, S), jnp.float32),
+        (contrib.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)),
+        unroll=bool(unroll))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)    # (B,nc,H,P,S)
+
+    # inter-chunk: y[t] += C_t . (exp(cum_t) * state_prev)
+    y_inter = jnp.einsum("bnqs,bnqh,bnhps->bnqhp",
+                         cf, jnp.exp(cum), prev_states)
+    y = (y_intra + y_inter).reshape(B, Lp, H, P)[:, :L]
+    if return_final_state:
+        return y.astype(x.dtype), final_state
+    return y.astype(x.dtype)
+
+
+def ssd_decode_step(state: jax.Array, x: jax.Array, dt: jax.Array,
+                    a: jax.Array, bm: jax.Array, cm: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """One-token recurrence.  state (B,H,P,S); x (B,H,P); dt (B,H);
+    bm/cm (B,S).  Returns (new_state, y (B,H,P))."""
+    decay = jnp.exp(a[None, :] * dt)                      # (B,H)
+    contrib = jnp.einsum("bh,bhp,bs->bhps", dt, x, bm)
+    new_state = state * decay[:, :, None, None] + contrib
+    y = jnp.einsum("bhps,bs->bhp", new_state, cm)
+    return new_state, y
+
+
+def mamba_block(p: Params, x: jax.Array, *, d_model: int, state: int,
+                head_dim: int, chunk: int = 256,
+                cache: Optional[Dict[str, jax.Array]] = None,
+                unroll: bool = False
+                ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full Mamba-2 mixer.  x (B, L, D).  cache = {'conv': (B,W-1,C),
+    'ssm': (B,H,P,S)} for decode (L==1); None for train/prefill."""
+    from repro.kernels import dispatch
+    from repro.parallel import sharding as shd
+    B, L, D = x.shape
+    d_inner = 2 * d_model
+    H = d_inner // head_dim
+    proj = dispatch.matmul2(x, p["w_in"])
+    # TP: the fused projection is 'model'-sharded (w_in rule); pin it so the
+    # SSD work below splits by head instead of replicating.
+    proj = shd.constrain(proj, "batch", "none", "model")
+    z, xbc, dt_raw = _split_proj(proj, d_inner, state, H)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    a = -jnp.exp(p["a_log"])
+
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + state], axis=-1)
+    xh = xs.reshape(B, L, H, head_dim)
+    xh = shd.constrain(xh, "batch", "none", "model", "none")
+
+    new_cache = None
+    if cache is not None and L == 1:        # decode step
+        new_ssm, y = ssd_decode_step(
+            cache["ssm"], xh[:, 0].astype(jnp.float32), dt[:, 0], a,
+            bmat[:, 0].astype(jnp.float32), cmat[:, 0].astype(jnp.float32))
+        y = y[:, None]                                      # (B,1,H,P)
+        new_cache = {"conv": new_conv, "ssm": new_ssm}
+    elif cache is not None:                 # prefill: fill state from scratch
+        y, final = ssd_chunked(xh, dt, a, bmat, cmat, chunk=chunk,
+                               return_final_state=True, unroll=unroll)
+        new_cache = {"conv": new_conv, "ssm": final}
+    else:
+        y = ssd_chunked(xh, dt, a, bmat, cmat, chunk=chunk, unroll=unroll)
+
+    y = y + xh.astype(y.dtype) * p["d_skip"][None, None, :, None]
+    y = y.reshape(B, L, d_inner)
+    # gated RMSNorm (mamba2 style): norm(y * silu(z))
+    from .layers import rms_norm
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)
+                                                 ).astype(x.dtype), p["norm"])
+    out = dispatch.matmul2(y, p["w_out"])
+    return out, new_cache
+
+
+def init_mamba_cache(batch: int, d_model: int, state: int, head_dim: int,
+                     dtype) -> Dict[str, jax.Array]:
+    d_inner = 2 * d_model
+    H = d_inner // head_dim
+    return {
+        "conv": jnp.zeros((batch, CONV_WIDTH - 1, d_inner + 2 * state), dtype),
+        "ssm": jnp.zeros((batch, H, head_dim, state), jnp.float32),
+    }

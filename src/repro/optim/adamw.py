@@ -1,0 +1,115 @@
+"""AdamW with dtype-configurable optimizer states.
+
+At 405B scale, fp32 (m, v) costs 3.2 TB; bf16 states with stochastic rounding
+on the parameter update keep the dry-run memory budget inside v5e HBM
+(DESIGN.md §7).  The update math always runs in fp32; only *storage* dtype is
+reduced.  Pure-JAX (no optax dependency in this container).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: Any = jnp.float32       # bf16 at 100B+ scale
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def adamw_init(params: Any, cfg: AdamWConfig) -> AdamWState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, cfg.state_dtype), params)
+    zeros2 = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, cfg.state_dtype), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros, v=zeros2)
+
+
+def _schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def _stochastic_round(key: jax.Array, x: jax.Array, dtype) -> jax.Array:
+    """Unbiased fp32 -> bf16 rounding: add uniform noise below the mantissa
+    cut, then truncate.  Keeps bf16 params/states from stalling training."""
+    if dtype == jnp.float32 or x.dtype != jnp.float32:
+        return x.astype(dtype)
+    # bf16 = top 16 bits of fp32: randomize the dropped 16 bits
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    noise = jax.random.randint(key, x.shape, 0, 1 << 16, jnp.uint32)
+    return jax.lax.bitcast_convert_type(
+        (bits + noise) & jnp.uint32(0xFFFF0000), jnp.float32).astype(dtype)
+
+
+def adamw_update(params: Any, grads: Any, state: AdamWState,
+                 cfg: AdamWConfig, *,
+                 sr_key: Optional[jax.Array] = None
+                 ) -> Tuple[Any, AdamWState, Dict[str, jax.Array]]:
+    """One AdamW step; returns (params, state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = _schedule(cfg, step)
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    keys = (jax.random.split(sr_key, len(flat_p)) if sr_key is not None
+            else [None] * len(flat_p))
+
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v, k in zip(flat_p, flat_g, flat_m, flat_v, keys):
+        gf = g.astype(jnp.float32) * scale
+        mf = m.astype(jnp.float32) * cfg.b1 + (1 - cfg.b1) * gf
+        vf = v.astype(jnp.float32) * cfg.b2 + (1 - cfg.b2) * gf * gf
+        upd = (mf / bc1) / (jnp.sqrt(vf / bc2) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        if p.ndim >= 2:                      # decay matrices only
+            upd = upd + cfg.weight_decay * pf
+        pf = pf - lr * upd
+        if k is not None and p.dtype != jnp.float32:
+            new_p.append(_stochastic_round(k, pf, p.dtype))
+        else:
+            new_p.append(pf.astype(p.dtype))
+        new_m.append(mf.astype(cfg.state_dtype))
+        new_v.append(vf.astype(cfg.state_dtype))
+
+    return (jax.tree_util.tree_unflatten(treedef, new_p),
+            AdamWState(step=step,
+                       m=jax.tree_util.tree_unflatten(treedef, new_m),
+                       v=jax.tree_util.tree_unflatten(treedef, new_v)),
+            {"grad_norm": gnorm, "lr": lr})

@@ -1,0 +1,53 @@
+"""int8 gradient compression with error feedback.
+
+At multi-pod scale the cross-pod gradient all-reduce rides the slow DCI/ICI
+links; quantizing gradients to int8 (per-tensor scale) quarters that traffic.
+Error feedback (Seide et al.) accumulates the quantization residual locally
+and re-adds it next step, preserving convergence.
+
+The trainer applies this *around* the pod-axis reduction: grads are averaged
+in-pod at full precision (fast links), compressed, all-reduced across pods,
+decompressed.  Under jit the quantize/dequantize pair also teaches XLA that
+the cross-pod collective payload is int8 (visible in the dry-run HLO).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads: Any, error: Any) -> Tuple[Any, Any, Any]:
+    """(grads + error) -> (int8 tree, scale tree, new error tree)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = _quantize(corrected)
+        new_e = corrected - _dequantize(q, s)
+        return q, s, new_e
+    flat, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(error)
+    qs = [one(g, e) for g, e in zip(flat, flat_e)]
+    unf = lambda i: jax.tree_util.tree_unflatten(treedef, [t[i] for t in qs])
+    return unf(0), unf(1), unf(2)
+
+
+def decompress_grads(q: Any, scales: Any) -> Any:
+    return jax.tree_util.tree_map(_dequantize, q, scales)

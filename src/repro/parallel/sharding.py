@@ -1,0 +1,191 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+Physical mesh axes (launch/mesh.py):
+  'pod'   — pure data parallelism across pods (gradients all-reduce across it)
+  'data'  — FSDP/ZeRO-3: batch *and* parameter shards (all-gather on use)
+  'model' — tensor/expert parallelism within a pod row
+
+A *logical* axis name maps to zero or more physical axes.  Rules are applied
+best-effort: a physical axis is dropped from the spec when the dimension size
+is not divisible by it (e.g. smollm's 9 heads over model=16) — the framework
+then relies on the remaining axes, which is what production systems do rather
+than refusing to run (the drop is recorded so DESIGN/EXPERIMENTS can report
+it).  All full-size assigned configs were chosen/padded (vocab rounded to a
+multiple of 256) so that the big dims shard cleanly.
+
+Parameter placement is decided by path-pattern rules over the pytree path, so
+model code never hand-annotates parameters.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> physical mesh axes (tuple => sharded over several)
+LOGICAL_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("data",),          # parameter dim sharded ZeRO-3 style
+    "model": ("model",),        # TP: heads / mlp hidden / vocab
+    "expert": ("model",),       # EP
+    "seq": ("model",),          # SP (long-context KV/state sharding)
+    "none": (),
+}
+
+# (path regex, per-dim logical axes).  First match wins.  Stacked layer
+# params get an extra leading repeat dim handled automatically.
+PARAM_RULES: List[Tuple[str, Tuple[str, ...]]] = [
+    (r"embed$",                     ("model", "fsdp")),       # (V, D)
+    (r"(wq|wk|wv)$",                ("fsdp", "model")),
+    (r"wo$",                        ("model", "fsdp")),
+    (r"(w_gate|w_up)$",             ("fsdp", "model")),       # dense mlp
+    (r"w_down$",                    ("model", "fsdp")),
+    (r"moe/(w_gate|w_up)$",         ("expert", "fsdp", "model")),
+    (r"moe/w_down$",                ("expert", "model", "fsdp")),
+    (r"moe/router$",                ("none", "none")),
+    (r"w_in$",                      ("fsdp", "model")),       # mamba in-proj
+    (r"w_out$",                     ("model", "fsdp")),
+    (r"conv_w$",                    ("none", "model")),
+    (r"conv_b$",                    ("model",)),
+    # everything else (norm scales, a_log, biases): replicated
+]
+
+_MOE_3D = re.compile(r"moe/(w_gate|w_up|w_down)$")
+
+# Alternative rule sets (hillclimb experiments; launch/dryrun.py --rules).
+# 'dp_only': replicate every parameter — correct for small models where
+# FSDP/TP all-gathers dwarf the compute (smollm on 256 chips).
+RULE_SETS: Dict[str, List[Tuple[str, Tuple[str, ...]]]] = {
+    "default": PARAM_RULES,
+    "dp_only": [],
+}
+_ACTIVE_PARAM_RULES: List[Tuple[str, Tuple[str, ...]]] = PARAM_RULES
+
+
+def set_param_rules(name: str) -> None:
+    global _ACTIVE_PARAM_RULES
+    _ACTIVE_PARAM_RULES = RULE_SETS[name]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _axes_for(path_s: str, ndim: int, stacked: bool) -> Tuple[str, ...]:
+    for pat, axes in _ACTIVE_PARAM_RULES:
+        if re.search(pat, path_s):
+            if stacked and len(axes) == ndim - 1:
+                return ("none",) + axes
+            if len(axes) == ndim:
+                return axes
+    return ("none",) * ndim
+
+
+def logical_to_spec(axes: Sequence[str], shape: Sequence[int],
+                    mesh: Mesh) -> P:
+    """Resolve logical axes to a PartitionSpec, dropping physical axes that
+    do not divide the corresponding dimension (best-effort sharding)."""
+    out: List[Any] = []
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set = set()
+    for dim, name in zip(shape, axes):
+        phys = [a for a in LOGICAL_RULES.get(name, ()) if a in sizes]
+        keep: List[str] = []
+        prod = 1
+        for a in phys:
+            if a in used:
+                continue
+            if dim % (prod * sizes[a]) == 0:
+                keep.append(a)
+                prod *= sizes[a]
+        for a in keep:
+            used.add(a)
+        out.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+    return P(*out)
+
+
+def param_shardings(params: Any, mesh: Mesh) -> Any:
+    """NamedSharding tree mirroring `params` via the PARAM_RULES table."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        stacked = "layers/" in ps or "encoder/" in ps
+        axes = _axes_for(ps, np.ndim(leaf), stacked)
+        spec = logical_to_spec(axes, np.shape(leaf), mesh)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints — light-touch hints for GSPMD propagation.
+# ---------------------------------------------------------------------------
+
+_ACTIVE_MESH: Optional[Mesh] = None
+
+
+class use_rules:
+    """Context manager the trainer / dry-run enters so that model-internal
+    ``constrain`` calls resolve against the right mesh.  Without it they are
+    no-ops (pure single-device execution, e.g. unit tests)."""
+
+    def __init__(self, mesh: Optional[Mesh]):
+        self.mesh = mesh
+        self._prev: Optional[Mesh] = None
+
+    def __enter__(self):
+        global _ACTIVE_MESH
+        self._prev, _ACTIVE_MESH = _ACTIVE_MESH, self.mesh
+        return self
+
+    def __exit__(self, *exc):
+        global _ACTIVE_MESH
+        _ACTIVE_MESH = self._prev
+        return False
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH
+
+
+def axis_size(logical: str) -> int:
+    """Product of active-mesh sizes behind a logical axis (1 if no mesh)."""
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in LOGICAL_RULES.get(logical, ()):
+        n *= sizes.get(a, 1)
+    return n
+
+
+def constrain(x: jax.Array, *axes: str) -> jax.Array:
+    """with_sharding_constraint via logical names; no-op outside use_rules."""
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return x
+    spec = logical_to_spec(axes, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def batch_spec(mesh: Mesh, shape: Sequence[int]) -> NamedSharding:
+    """Sharding for a (B, S, ...) host batch: batch over ('pod','data')."""
+    axes = ("batch",) + ("none",) * (len(shape) - 1)
+    return NamedSharding(mesh, logical_to_spec(axes, shape, mesh))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,4 @@
+from .engine import Engine, ServeConfig
+from .flash_decode import flash_decode_attention
+
+__all__ = ["Engine", "ServeConfig", "flash_decode_attention"]

@@ -1,0 +1,67 @@
+"""Sequence-parallel decode attention (flash-decoding partial softmax).
+
+For long-context decode (the 500k-token cells) a single query attends over a
+KV cache too large — and too serial — for one chip.  Flash-decoding splits
+the KV length into `n_splits` blocks, computes an independent partial softmax
+(max, exp-sum, weighted accumulator) per block, and merges with the standard
+log-sum-exp combine.  Expressed as batched jnp ops over a leading split axis
+that the sharding rules place on the 'model' mesh axis ('seq' logical axis):
+each chip reduces its local KV shard, and the combine is a tiny cross-chip
+reduction — O(B*H*D) bytes instead of O(B*L*H*D).
+
+This is mathematically identical to `_chunked_attention` (a flash combine is
+a flash combine) but restructured from a sequential scan into a parallel
+split + tree-combine, which is what makes it shardable.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+
+
+def flash_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                           kv_len: jax.Array, *, n_splits: int
+                           ) -> jax.Array:
+    """q (B, Sq, H, D) with small Sq (decode); k/v (B, L, G, D); kv_len =
+    number of valid cache entries (scalar).  Returns (B, Sq, H, D)."""
+    B, Sq, H, D = q.shape
+    L, G = k.shape[1], k.shape[2]
+    rep = H // G
+    assert L % n_splits == 0, (L, n_splits)
+    Ls = L // n_splits
+    scale = 1.0 / math.sqrt(D)
+
+    # (B, n_splits, Ls, G, D), split axis -> 'seq' logical axis (SP);
+    # batch keeps its own sharding (constraining it to 'none' would gather
+    # the whole cache over the batch axis — 2 GiB/layer/step at 405B).
+    ks = constrain(k.reshape(B, n_splits, Ls, G, D),
+                   "batch", "seq", "none", "none", "none")
+    vs = constrain(v.reshape(B, n_splits, Ls, G, D),
+                   "batch", "seq", "none", "none", "none")
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, G, rep, D)
+
+    s = jnp.einsum("bqgrd,bnkgd->bngrqk", qf, ks.astype(jnp.float32))
+    pos = (jnp.arange(n_splits)[:, None] * Ls
+           + jnp.arange(Ls)[None, :])                     # (n, Ls)
+    valid = pos[None] < jnp.asarray(kv_len).reshape(-1, 1, 1)
+    s = jnp.where(valid[:, :, None, None, None, :], s, -1e30)
+
+    m_loc = s.max(axis=-1)                                # (B,n,G,rep,Sq)
+    p = jnp.exp(s - m_loc[..., None])
+    l_loc = p.sum(axis=-1)
+    acc_loc = jnp.einsum("bngrqk,bnkgd->bngrqd", p, vs.astype(jnp.float32))
+
+    # combine across splits (the only cross-shard communication)
+    m_glob = m_loc.max(axis=1, keepdims=True)
+    corr = jnp.exp(m_loc - m_glob)
+    l_glob = (l_loc * corr).sum(axis=1)
+    acc = (acc_loc * corr[..., None]).sum(axis=1)         # (B,G,rep,Sq,D)
+    out = acc / jnp.maximum(l_glob[..., None], 1e-30)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D)
+    return out.astype(q.dtype)

@@ -1,0 +1,7 @@
+from .trainer import Trainer, TrainConfig, make_train_step
+from .checkpoint import save_checkpoint, load_checkpoint, latest_step
+from .fault import PreemptionHandler, StragglerMonitor
+
+__all__ = ["Trainer", "TrainConfig", "make_train_step", "save_checkpoint",
+           "load_checkpoint", "latest_step", "PreemptionHandler",
+           "StragglerMonitor"]

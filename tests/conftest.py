@@ -1,0 +1,14 @@
+"""Shared test configuration.
+
+NOTE: no XLA_FLAGS / device-count forcing here — tests must see the real
+single CPU device (the 512-device mesh exists only inside launch/dryrun.py,
+and multi-device tests spawn subprocesses).
+"""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

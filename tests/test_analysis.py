@@ -1,0 +1,63 @@
+"""HLO collective parser + roofline math."""
+
+import pytest
+
+from repro.analysis.hlo import collective_bytes, parse_collectives
+from repro.analysis.roofline import (RooflineTerms, model_flops,
+                                     roofline_from_artifacts)
+from repro.configs import SHAPES, get_config
+
+HLO = """
+HloModule jit_step
+%fused (x: f32[8,16]) -> f32[8,16] { ... }
+ENTRY %main {
+  %p0 = bf16[128,256]{1,0} parameter(0)
+  %ag = f32[512,1024]{1,0} all-gather(%p0), channel_id=1, replica_groups={{0,1}}
+  %ar = bf16[64,64]{1,0} all-reduce(%ag), channel_id=2
+  %rs = f32[32,64]{1,0} reduce-scatter(%ar), channel_id=3
+  %cp = bf16[16]{0} collective-permute(%rs), channel_id=4
+  %tup = (f32[8,8]{1,0}, f32[8,8]{1,0}) all-to-all(%cp, %cp), channel_id=5
+}
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    ops = parse_collectives(HLO)
+    kinds = sorted(o.kind for o in ops)
+    assert kinds == ["all-gather", "all-reduce", "all-to-all",
+                     "collective-permute", "reduce-scatter"]
+    ag = next(o for o in ops if o.kind == "all-gather")
+    assert ag.bytes == 512 * 1024 * 4
+
+
+def test_normalization_halves_f32_only():
+    raw = collective_bytes(HLO)
+    norm = collective_bytes(HLO, normalize_bits=16)
+    assert norm["all-gather"] == raw["all-gather"] // 2     # f32 -> bf16
+    assert norm["all-reduce"] == raw["all-reduce"]          # already bf16
+    assert norm["total"] < raw["total"]
+
+
+def test_roofline_terms_and_bottleneck():
+    art = {
+        "arch": "x", "shape": "train_4k", "mesh": "pod", "chips": 256,
+        "cost": {"flops": 1e15, "bytes_accessed": 1e11},
+        "collectives": {"total": 1e9},
+        "model_flops": 1e15 * 256 * 0.5,
+    }
+    rt = roofline_from_artifacts(art, recompute_model_flops=False)
+    assert rt.bottleneck == "compute"
+    assert rt.t_compute == pytest.approx(1e15 / 197e12)
+    assert rt.useful_ratio == pytest.approx(0.5)
+    assert 0 < rt.roofline_fraction <= 1.0
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("glm4-9b")
+    t = model_flops(cfg, SHAPES["train_4k"], kind="train")
+    d = model_flops(cfg, SHAPES["decode_32k"], kind="decode")
+    # train ~ 6ND + attention ~ 7e16; decode ~ one token/seq
+    assert 3e16 < t < 3e17 and d < 1e16
+    # MoE uses active params
+    moe = get_config("dbrx-132b")
+    assert moe.active_param_count < 0.45 * moe.param_count

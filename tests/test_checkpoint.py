@@ -1,0 +1,56 @@
+"""Checkpointing: atomic roundtrip, gc, async, resume integration."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train import latest_step, load_checkpoint, save_checkpoint
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 4)),
+                       "layers": {"pos0": {"wq": jnp.ones((2, 4, 4))}}},
+            "step_rng": jax.random.PRNGKey(seed + 1)}
+
+
+def test_roundtrip(tmp_path):
+    s = _state()
+    save_checkpoint(str(tmp_path), 10, s, data_step=10)
+    template = jax.tree_util.tree_map(lambda x: np.zeros(x.shape, x.dtype), s)
+    s2, step, dstep = load_checkpoint(str(tmp_path), template)
+    assert step == 10 and dstep == 10
+    np.testing.assert_array_equal(np.asarray(s["params"]["w"]),
+                                  s2["params"]["w"])
+
+
+def test_latest_and_gc(tmp_path):
+    s = _state()
+    for step in (1, 2, 3, 4, 5):
+        save_checkpoint(str(tmp_path), step, s, keep=3)
+    assert latest_step(str(tmp_path)) == 5
+    # only 3 kept
+    kept = sorted(int(p.name.split("-")[1])
+                  for p in tmp_path.glob("step-*"))
+    assert kept == [3, 4, 5]
+
+
+def test_async_save(tmp_path):
+    s = _state()
+    t = save_checkpoint(str(tmp_path), 7, s, async_save=True)
+    t.join()
+    assert latest_step(str(tmp_path)) == 7
+
+
+def test_elastic_reshard_shapes(tmp_path):
+    """Loading places arrays against provided shardings (1-device mesh here;
+    the mechanism is mesh-size agnostic)."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    s = _state()
+    save_checkpoint(str(tmp_path), 1, s)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    template = jax.tree_util.tree_map(lambda x: np.zeros(x.shape, x.dtype), s)
+    shardings = jax.tree_util.tree_map(
+        lambda x: NamedSharding(mesh, P()), template)
+    s2, _, _ = load_checkpoint(str(tmp_path), template, shardings=shardings)
+    assert s2["params"]["w"].sharding.mesh.shape == {"data": 1, "model": 1}

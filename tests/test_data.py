@@ -1,0 +1,45 @@
+"""Data pipeline: determinism, sharding, resumability."""
+
+import numpy as np
+
+from repro.data import DataConfig, SyntheticTokenPipeline
+
+
+def test_deterministic():
+    p1 = SyntheticTokenPipeline(DataConfig(vocab=256, seq_len=64,
+                                           global_batch=4, seed=7))
+    p2 = SyntheticTokenPipeline(DataConfig(vocab=256, seq_len=64,
+                                           global_batch=4, seed=7))
+    np.testing.assert_array_equal(p1.batch(13)["tokens"],
+                                  p2.batch(13)["tokens"])
+
+
+def test_shards_partition_global_batch():
+    full = SyntheticTokenPipeline(DataConfig(vocab=256, seq_len=32,
+                                             global_batch=8, seed=3))
+    parts = [SyntheticTokenPipeline(DataConfig(
+        vocab=256, seq_len=32, global_batch=8, seed=3, n_shards=4, shard=i))
+        for i in range(4)]
+    got = np.concatenate([p.batch(5)["tokens"] for p in parts])
+    np.testing.assert_array_equal(got, full.batch(5)["tokens"])
+
+
+def test_resume_reproduces_stream():
+    p = SyntheticTokenPipeline(DataConfig(vocab=128, seq_len=16,
+                                          global_batch=2))
+    direct = p.batch(42)["tokens"]
+    it = p.iterate(start_step=42)
+    np.testing.assert_array_equal(next(it)["tokens"], direct)
+
+
+def test_learnable_structure():
+    """Motif spans create repeated bigrams: bigram entropy must be clearly
+    below the uniform bound."""
+    p = SyntheticTokenPipeline(DataConfig(vocab=64, seq_len=2048,
+                                          global_batch=2))
+    toks = p.batch(0)["tokens"].reshape(-1)
+    pairs = toks[:-1] * 64 + toks[1:]
+    _, counts = np.unique(pairs, return_counts=True)
+    probs = counts / counts.sum()
+    ent = -(probs * np.log2(probs)).sum()
+    assert ent < 11.0     # uniform would be ~12 bits

@@ -1,0 +1,35 @@
+"""Fault-tolerance machinery."""
+
+import signal
+import time
+
+from repro.train import PreemptionHandler, StragglerMonitor
+
+
+def test_straggler_detection():
+    mon = StragglerMonitor(threshold=3.0, grace_steps=2)
+    events = []
+    mon.on_straggler = lambda s, dt, base: events.append(s)
+    # healthy steps establish a baseline
+    for i in range(5):
+        mon.step_start()
+        time.sleep(0.01)
+        mon.step_end(i)
+    # one straggler
+    mon.step_start()
+    time.sleep(0.08)
+    mon.step_end(5)
+    assert events == [5]
+    # baseline not poisoned: a healthy step after is NOT flagged
+    mon.step_start()
+    time.sleep(0.01)
+    mon.step_end(6)
+    assert events == [5]
+
+
+def test_preemption_flag():
+    h = PreemptionHandler(signals=(signal.SIGUSR1,))
+    assert not h.should_stop
+    signal.raise_signal(signal.SIGUSR1)
+    assert h.should_stop
+    h.restore()

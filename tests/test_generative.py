@@ -1,0 +1,42 @@
+"""Generative model (paper §4): categorical sampler vs uniform baseline."""
+
+import numpy as np
+
+from repro.core.generative import CategoricalSampler, workload_inputs
+from repro.core.space import GEMM_SPACE, CONV_SPACE
+
+
+def test_acceptance_beats_uniform(rng):
+    """Paper Table 1 analogue: the fitted categorical model accepts several
+    times more often than uniform sampling.  (The paper reports 200x on its
+    GPU space whose uniform acceptance is 0.1%; our TPU space accepts ~6%
+    uniformly, so the attainable ratio is bounded by ~17x — the benchmark
+    discusses this difference, the test checks the mechanism.)"""
+    inputs = workload_inputs(GEMM_SPACE, 64, rng)
+    sampler = CategoricalSampler(space=GEMM_SPACE).fit(inputs, 30000, rng)
+    acc_cat = sampler.acceptance_rate(inputs, 1500, rng)
+    acc_uni = sampler.acceptance_rate(inputs, 1500, rng, uniform=True)
+    assert acc_cat > 2.5 * max(acc_uni, 1e-4), (acc_cat, acc_uni)
+
+
+def test_dirichlet_prior_no_zero_probability(rng):
+    inputs = workload_inputs(GEMM_SPACE, 16, rng)
+    sampler = CategoricalSampler(space=GEMM_SPACE, alpha=100.0)
+    sampler.fit(inputs, 500, rng)
+    for name in GEMM_SPACE.param_names:
+        assert (sampler.probs(name) > 0).all()     # alpha > 0 => no zeros
+
+
+def test_sample_legal_terminates(rng):
+    inputs = workload_inputs(GEMM_SPACE, 8, rng)
+    sampler = CategoricalSampler(space=GEMM_SPACE).fit(inputs, 1000, rng)
+    cfg = sampler.sample_legal(inputs[0], rng)
+    assert cfg is not None and GEMM_SPACE.is_legal(cfg, inputs[0])
+
+
+def test_persistence_roundtrip(rng):
+    inputs = workload_inputs(CONV_SPACE, 16, rng)
+    sampler = CategoricalSampler(space=CONV_SPACE).fit(inputs, 500, rng)
+    clone = CategoricalSampler.from_json(CONV_SPACE, sampler.to_json())
+    for name in CONV_SPACE.param_names:
+        np.testing.assert_allclose(sampler.probs(name), clone.probs(name))

@@ -1,0 +1,68 @@
+"""MLP performance regressor (paper §5) + log-feature transform."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.backend import SimulatedTPUBackend
+from repro.core.dataset import generate_dataset
+from repro.core.features import Featurizer, target_transform
+from repro.core.mlp import MLP, TABLE2_ARCHS
+from repro.core.space import GEMM_SPACE
+
+
+@pytest.fixture(scope="module")
+def small_dataset():
+    # 3k samples is too noisy to separate architectures/featurizations —
+    # 10k is the smallest budget where the paper's effects are stable
+    ds, _ = generate_dataset(GEMM_SPACE, 10000, seed=0,
+                             backend=SimulatedTPUBackend(noise=0.02))
+    return ds
+
+
+def test_mlp_learns_performance_surface(small_dataset):
+    tr, val = small_dataset.split(val_frac=0.1)
+    f, X, y = tr.featurize()
+    model = MLP.create(jax.random.PRNGKey(0), f.dim, hidden=(64, 128, 64))
+    before = model.mse(*_xy(val, f))
+    model.fit(X, y, epochs=40, verbose=False)
+    after = model.mse(*_xy(val, f))
+    assert after < before / 4, (before, after)
+    assert after < 1.0           # log2-TFLOPS units
+
+
+def test_log_transform_beats_raw(small_dataset):
+    """Paper Table 2 'no log' column: without log features the fit is
+    substantially worse at equal budget."""
+    tr, val = small_dataset.split(val_frac=0.1)
+    results = {}
+    for log in (True, False):
+        f = Featurizer(GEMM_SPACE, log=log)
+        X_raw = f.raw_batch(list(zip(tr.inputs, tr.configs)))
+        f.fit(X_raw)
+        X = f.transform(X_raw)
+        y = target_transform(tr.tflops)
+        m = MLP.create(jax.random.PRNGKey(0), f.dim, hidden=(64, 128, 64))
+        m.fit(X, y, epochs=40, verbose=False)
+        results[log] = m.mse(*_xy(val, f))
+    assert results[True] < results[False], results
+
+
+def test_persistence_roundtrip(small_dataset):
+    f, X, y = small_dataset.featurize()
+    m = MLP.create(jax.random.PRNGKey(0), f.dim, hidden=(32, 32))
+    m.fit(X[:500], y[:500], epochs=3, verbose=False)
+    m2 = MLP.from_bytes(m.to_bytes())
+    np.testing.assert_allclose(m.predict(X[:64]), m2.predict(X[:64]),
+                               rtol=1e-6)
+    f2 = Featurizer.from_json(GEMM_SPACE, f.to_json())
+    np.testing.assert_allclose(f.mean, f2.mean)
+
+
+def test_table2_archs_shapes():
+    assert len(TABLE2_ARCHS) == 7            # the seven rows of Table 2
+
+
+def _xy(ds, f):
+    X = f.transform(f.raw_batch(list(zip(ds.inputs, ds.configs))))
+    return X, target_transform(ds.tflops)

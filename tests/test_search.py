@@ -1,0 +1,58 @@
+"""Runtime kernel inference (paper §6): exhaustive search over the model."""
+
+import numpy as np
+import pytest
+
+from repro.core.backend import SimulatedTPUBackend
+from repro.core.search import enumerate_legal, exhaustive_search, oracle_search
+from repro.core.space import GEMM_SPACE, gemm_input
+from repro.core.tuner import InputAwareTuner
+
+
+@pytest.fixture(scope="module")
+def tuner():
+    return InputAwareTuner.train(
+        GEMM_SPACE, n_samples=4000, hidden=(64, 64), epochs=25,
+        backend=SimulatedTPUBackend(noise=0.02), seed=0)
+
+
+def test_search_returns_legal_best(tuner):
+    inputs = gemm_input(2560, 16, 2560)
+    res = tuner.search(inputs)
+    assert GEMM_SPACE.is_legal(res.best, inputs)
+    assert res.n_candidates > 100
+    assert res.measured_tflops is not None
+
+
+def test_topk_remeasure_improves_or_equal(tuner):
+    """Re-measuring the top-k on the backend can only improve the pick."""
+    inputs = gemm_input(512, 512, 8192)
+    no_meas = tuner.search(inputs, remeasure=False)
+    meas = tuner.search(inputs, remeasure=True)
+    be = tuner.backend
+    y_no = be.measure("gemm", no_meas.best, inputs)
+    assert meas.measured_tflops >= y_no * 0.95
+
+
+def test_regret_vs_oracle(tuner):
+    """ISAAC regret: the tuned config should reach a large fraction of the
+    true optimum (paper Fig. 6: ISAAC ~ matches exhaustive best)."""
+    be = SimulatedTPUBackend(noise=0.0)
+    for m, n, k in [(2560, 32, 2560), (512, 512, 512), (64, 64, 60000)]:
+        inputs = gemm_input(m, n, k)
+        cands = enumerate_legal(GEMM_SPACE, inputs)
+        best_cfg, best = oracle_search(
+            GEMM_SPACE, inputs, lambda c: be.measure("gemm", c, inputs),
+            candidates=cands)
+        res = tuner.search(inputs)
+        got = be.measure("gemm", res.best, inputs)
+        assert got >= 0.7 * best, (m, n, k, got, best)
+
+
+def test_cache_hit(tuner, tmp_path):
+    tuner.cache_dir = str(tmp_path)
+    inputs = gemm_input(896, 896, 32)
+    c1 = tuner.best_config(inputs)
+    tuner._mem_cache.clear()
+    c2 = tuner.best_config(inputs)        # filesystem hit
+    assert c1 == c2

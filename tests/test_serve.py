@@ -1,0 +1,74 @@
+"""Serving: continuous batching consistency + flash-decoding math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig, init_params
+from repro.models.layers import _chunked_attention
+from repro.serve import Engine, ServeConfig
+from repro.serve.flash_decode import flash_decode_attention
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4, n_kv=2,
+                      d_ff=128, vocab=128, dtype=jnp.float32, attn_chunk=16,
+                      logit_chunk=16, remat=False)
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+def test_flash_decode_equals_chunked(rng):
+    """Split+combine partial softmax == sequential flash scan."""
+    B, Sq, H, D, L, G = 2, 1, 4, 16, 64, 2
+    q = jnp.asarray(rng.normal(size=(B, Sq, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, L, G, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, L, G, D)), jnp.float32)
+    kv_len = jnp.asarray([40, 64])
+    got = flash_decode_attention(q, k, v, kv_len, n_splits=4)
+    want = _chunked_attention(q, k, v, causal=True,
+                              q_start=kv_len - 1, kv_len=kv_len, chunk=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_continuous_batching_equals_single_slot(small_model):
+    cfg, params = small_model
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 128, n) for n in (5, 9, 5, 7, 5)]
+    multi = Engine(cfg, params, ServeConfig(max_len=64, slots=3))
+    outs = multi.generate(prompts, max_new=8)
+    single = Engine(cfg, params, ServeConfig(max_len=64, slots=1))
+    for p, o in zip(prompts[:3], outs[:3]):
+        ref = Engine(cfg, params, ServeConfig(max_len=64, slots=1)
+                     ).generate([p], max_new=8)[0]
+        assert ref == o
+
+
+def test_slot_reuse_throughput(small_model):
+    """More requests than slots: all served, ticks < sum of lengths
+    (i.e. decoding genuinely batched)."""
+    cfg, params = small_model
+    rng = np.random.default_rng(1)
+    eng = Engine(cfg, params, ServeConfig(max_len=64, slots=4))
+    outs = eng.generate([rng.integers(0, 128, 6) for _ in range(8)],
+                        max_new=10)
+    assert all(len(o) == 10 for o in outs)
+    assert eng.ticks < 8 * 9          # batched: fewer ticks than serial
+
+
+def test_block_causal_attention_matches(rng):
+    """The block-skipping causal path (perf hillclimb) is numerically
+    identical to the masked chunked scan."""
+    import jax.numpy as jnp
+    from repro.models.layers import (_block_causal_attention,
+                                     _chunked_attention)
+    B, S, H, D, G = 2, 96, 4, 16, 2
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, G, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, G, D)), jnp.float32)
+    got = _block_causal_attention(q, k, v, chunk=32)
+    want = _chunked_attention(q, k, v, causal=True, q_start=0, chunk=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)

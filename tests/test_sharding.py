@@ -1,0 +1,61 @@
+"""Sharding rules: logical->physical resolution and divisibility dropping."""
+
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import (LOGICAL_RULES, logical_to_spec,
+                                     _axes_for)
+
+
+class FakeMesh:
+    """Duck-typed mesh: logical_to_spec only touches axis_names/devices."""
+
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.empty(shape)
+
+
+POD = FakeMesh((16, 16), ("data", "model"))
+MULTI = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_batch_spreads_over_pod_and_data():
+    spec = logical_to_spec(("batch", "none"), (256, 4096), MULTI)
+    assert spec == P(("pod", "data"), None)
+
+
+def test_divisibility_drop():
+    # 9 heads cannot shard over model=16 -> axis dropped
+    spec = logical_to_spec(("none", "none", "model", "none"),
+                           (2, 64, 9, 64), POD)
+    assert spec == P(None, None, None, None)
+    # 48 heads can
+    spec = logical_to_spec(("none", "none", "model", "none"),
+                           (2, 64, 48, 64), POD)
+    assert spec == P(None, None, "model", None)
+
+
+def test_no_axis_reuse():
+    # expert dim takes 'model'; a later 'model' axis must not reuse it
+    spec = logical_to_spec(("expert", "fsdp", "model"),
+                           (16, 6144, 10752), POD)
+    assert spec == P("model", "data", None)
+
+
+def test_partial_batch_sharding_on_multipod():
+    # batch=32 over pod(2) x data(16) = 32 exactly
+    spec = logical_to_spec(("batch", "none"), (32, 128), MULTI)
+    assert spec == P(("pod", "data"), None)
+    # batch=2: only 'pod' fits
+    spec = logical_to_spec(("batch", "none"), (2, 128), MULTI)
+    assert spec == P(("pod",), None) or spec == P("pod", None)
+
+
+def test_param_rules_match_paths():
+    assert _axes_for("params/layers/pos0/attn/wq", 3, True) \
+        == ("none", "fsdp", "model")
+    assert _axes_for("params/layers/pos0/moe/w_gate", 4, True) \
+        == ("none", "expert", "fsdp", "model")
+    assert _axes_for("params/embed", 2, False) == ("model", "fsdp")
+    assert _axes_for("params/final_norm", 1, False) == ("none",)
