@@ -1,0 +1,167 @@
+"""E10 — tunedb: store-lookup overhead on the dispatch hot path.
+
+Two questions gate shipping the record store into serving:
+
+  1. What do the raw primitives cost?  (telemetry record, exact lookup,
+     nearest-shape lookup, fsync'd append)
+  2. What does the full dispatch-side stack — telemetry record + store
+     lookup — add to an interpret-mode kernel dispatch?  Acceptance: < 5%.
+
+The dispatch comparison runs the SAME Pallas kernel (interpret mode, CPU)
+with the config injected directly (baseline) vs resolved through the
+installed global store (telemetry + exact-hit lookup).  Because a ~200ms
+interpret-mode kernel call carries several percent of wall-clock noise, the
+acceptance verdict comes from timing the resolution stack in isolation and
+dividing by the dispatch time — the A/B delta is reported alongside as a
+noise-bounded sanity check.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.space import gemm_input
+from repro.core.tuner import clear_tuners
+from repro.kernels import dispatch, ops
+from repro.tunedb import (RecordStore, TuneRecord, clear_store,
+                          clear_telemetry, get_telemetry, install_store)
+
+from .common import save, table
+
+CFG = {"bm": 64, "bn": 128, "bk": 128, "k_unroll": 1, "k_split": 1,
+       "order": 0, "acc32": 1, "prefetch": 2}
+
+
+def _time_per_call(fn, iters: int) -> float:
+    fn()                                    # warm up (trace/compile/build)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def _paired_medians(fn_a, fn_b, pairs: int):
+    """Median per-call time of two paths sampled back-to-back, so slow drift
+    in the (noisy, hundreds-of-ms) interpret-mode kernel cancels out of the
+    A/B delta instead of masquerading as dispatch overhead."""
+    fn_a(), fn_b()                          # warm up both paths
+    ta, tb = [], []
+    for _ in range(pairs):
+        t0 = time.perf_counter()
+        fn_a()
+        t1 = time.perf_counter()
+        fn_b()
+        t2 = time.perf_counter()
+        ta.append(t1 - t0)
+        tb.append(t2 - t1)
+    return float(np.median(ta)), float(np.median(tb))
+
+
+def _micro_ops(mem_store: RecordStore, iters: int) -> list:
+    """Raw primitive costs, reported in microseconds per op."""
+    import tempfile
+
+    inputs = gemm_input(256, 256, 512, 32)
+    tel = get_telemetry()
+
+    # a NEW shape every call, else the nearest-memo turns the timed scan
+    # into a dict hit and the row understates the true miss cost
+    tick = iter(range(10_000_000))
+
+    def nearest_cold():
+        mem_store.nearest("gemm", gemm_input(300 + next(tick), 256, 512, 32))
+
+    with tempfile.TemporaryDirectory() as d:
+        disk_store = RecordStore.open(f"{d}/bench.jsonl")
+        rows = []
+        for name, fn in [
+            ("telemetry.record", lambda: tel.record("gemm", inputs)),
+            ("store.get (exact)", lambda: mem_store.get("gemm", inputs)),
+            ("store.nearest (cold scan)", nearest_cold),
+            ("store.nearest (memo hit)",
+             lambda: mem_store.nearest("gemm", gemm_input(300, 256, 512, 32))),
+            ("store.add (fsync append)",
+             lambda: disk_store.add(TuneRecord(
+                 space="gemm", inputs=inputs, config=CFG, tflops=1.0))),
+        ]:
+            n = max(iters // 10, 10) if "add" in name else iters
+            rows.append({"op": name,
+                         "us/op": f"{_time_per_call(fn, n)*1e6:.1f}"})
+    return rows
+
+
+def run(fast: bool = True) -> dict:
+    clear_tuners()
+    clear_store()
+    clear_telemetry()
+    iters = 200 if fast else 2000
+
+    rng = np.random.default_rng(0)
+    import jax.numpy as jnp
+    a = jnp.asarray(rng.normal(size=(128, 256)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(256, 128)), jnp.float32)
+    inputs = gemm_input(128, 128, 256, 32)
+
+    store = RecordStore()                    # in-memory; lookup cost only
+    for m in (64, 128, 256, 512, 1024):      # realistic index population
+        for k in (128, 256, 512, 1024):
+            store.add(TuneRecord(space="gemm",
+                                 inputs=gemm_input(m, 128, k, 32),
+                                 config=CFG, tflops=1.0))
+
+    disp_pairs = 15 if fast else 60
+    install_store(store)
+    t_direct, t_dispatch = _paired_medians(
+        lambda: np.asarray(ops.matmul(a, b, CFG)),
+        lambda: np.asarray(dispatch.matmul(a, b, prefer_kernel=True)),
+        disp_pairs)
+
+    # the exact per-call stack dispatch.matmul adds on top of ops.matmul:
+    # shape-dict build + telemetry record + store resolution + config copy
+    def resolve_only():
+        cfg = dispatch._tuned_cfg("gemm", inputs)
+        dispatch._record("gemm", inputs)
+        return cfg
+
+    assert resolve_only() is not None       # exact store hit, not a miss
+    t_resolve = _time_per_call(resolve_only, iters)
+    hits_after = store.hits
+    clear_store()
+
+    # A/B wall-clock of a ~200ms interpret kernel is dominated by machine
+    # drift; the acceptance ratio uses the isolated resolution cost instead.
+    overhead = t_resolve / t_dispatch
+    rows = [
+        {"path": "ops.matmul (config injected)",
+         "ms/call": f"{t_direct*1e3:.2f}",
+         "note": "paired-median baseline"},
+        {"path": "dispatch.matmul (telemetry + store hit)",
+         "ms/call": f"{t_dispatch*1e3:.2f}",
+         "note": f"A/B delta {(t_dispatch-t_direct)/t_direct*100:+.2f}% "
+                 "(noise-bounded)"},
+        {"path": "resolution stack alone",
+         "ms/call": f"{t_resolve*1e3:.4f}",
+         "note": f"{overhead*100:.3f}% of dispatch"},
+    ]
+    print(table(rows, ["path", "ms/call", "note"],
+                "E10 — store-lookup overhead on interpret-mode dispatch"))
+    verdict = "PASS" if overhead < 0.05 else "FAIL"
+    print(f"\nacceptance (<5% overhead): {verdict} "
+          f"({overhead*100:.3f}%, {hits_after} exact store hits)")
+
+    micro = _micro_ops(store, iters)
+    print()
+    print(table(micro, ["op", "us/op"], "tunedb primitive costs"))
+
+    payload = {"overhead_frac": overhead, "pass": overhead < 0.05,
+               "direct_ms": t_direct * 1e3, "dispatch_ms": t_dispatch * 1e3,
+               "resolve_ms": t_resolve * 1e3, "micro": micro}
+    save("tunedb", payload)
+    clear_telemetry()
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -6,6 +6,7 @@ One benchmark per paper table/figure (DESIGN.md §8 experiment index):
   E4 gemm      — Table 4 / Fig 6-8 (bf16 + fp32 dtype study)
   E7 kernels   — §3 correctness harness
   E9 roofline  — from dry-run artifacts (run launch.dryrun first)
+  E10 tunedb   — record-store lookup overhead on the dispatch hot path
 """
 
 from __future__ import annotations
@@ -24,7 +25,8 @@ def main() -> None:
     fast = not args.full
 
     from . import (bench_conv, bench_gemm, bench_kernels, bench_mlp,
-                   bench_roofline, bench_sampler, bench_selection)
+                   bench_roofline, bench_sampler, bench_selection,
+                   bench_tunedb)
     suites = {
         "sampler": lambda: bench_sampler.run(fast),
         "mlp": lambda: bench_mlp.run(fast),
@@ -34,6 +36,7 @@ def main() -> None:
         "selection": lambda: bench_selection.run(fast),
         "kernels": lambda: bench_kernels.run(fast),
         "roofline": lambda: bench_roofline.run(fast),
+        "tunedb": lambda: bench_tunedb.run(fast),
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     t_all = time.time()

@@ -1,0 +1,50 @@
+"""Version compatibility shims for the installed jax.
+
+``shard_map`` moved twice across jax releases: it lives at
+``jax.experimental.shard_map`` on 0.4.x, is a top-level ``jax.shard_map``
+from 0.6, and its replication-check kwarg was renamed ``check_rep`` ->
+``check_vma`` along the way.  Callers import :func:`shard_map` from here and
+always use the modern ``check_vma=`` spelling; the shim translates for
+whatever jax the container ships.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+try:                                        # jax >= 0.6: top-level export
+    from jax import shard_map as _shard_map
+except ImportError:                         # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_HAS_CHECK_VMA = "check_vma" in inspect.signature(_shard_map).parameters
+
+
+def shard_map(f, *, check_vma=None, **kwargs):
+    """jax.shard_map with the kwarg spelling of the installed jax."""
+    if check_vma is not None:
+        kwargs["check_vma" if _HAS_CHECK_VMA else "check_rep"] = check_vma
+    return _shard_map(f, **kwargs)
+
+
+_HAS_AXIS_TYPES = "axis_types" in inspect.signature(
+    __import__("jax").make_mesh).parameters
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kwargs):
+    """jax.make_mesh; drops `axis_types` where the installed jax predates it
+    (pre-AxisType meshes behave as Auto on every axis, which is what all
+    call sites in this repo request)."""
+    import jax
+
+    if axis_types is not None and _HAS_AXIS_TYPES:
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def auto_axis_types(n: int):
+    """(AxisType.Auto,) * n on jax that has AxisType, else None."""
+    import jax
+
+    at = getattr(jax.sharding, "AxisType", None)
+    return None if at is None else (at.Auto,) * n

@@ -7,20 +7,24 @@ Ties the paper's four components together behind one object:
 
 The result of ``best_config`` is exactly what the paper ships at runtime:
 the tuning-parameter vector the model believes is fastest for this input,
-optionally refined by re-measuring the top-k on the backend (§6), and cached
-on the filesystem so later calls are free.
+optionally refined by re-measuring the top-k on the backend (§6), and
+persisted as a :class:`repro.tunedb.TuneRecord` so later calls — in this
+process or any other holding the same store — are free.  ``best_config``
+always returns a plain ``Config`` (``Dict[str, int]``) regardless of which
+layer (memory, store, fresh search) satisfied the lookup.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import hashlib
-import json
 import os
 import pathlib
 from typing import Callable, Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
+
+from repro.tunedb.store import (RecordStore, TuneRecord, input_key,
+                                normalize_config)
 
 from .backend import SimulatedTPUBackend
 from .dataset import Dataset, generate_dataset
@@ -33,12 +37,6 @@ from .space import SPACES, Config, ParamSpace
 DEFAULT_CACHE = os.path.expanduser("~/.cache/repro-isaac")
 
 
-def _input_key(space_name: str, inputs: Mapping[str, int]) -> str:
-    blob = json.dumps({"s": space_name, "i": dict(sorted(inputs.items()))},
-                      sort_keys=True)
-    return hashlib.sha1(blob.encode()).hexdigest()[:16]
-
-
 @dataclasses.dataclass
 class InputAwareTuner:
     """Trained input-aware tuner for one parameter space."""
@@ -49,15 +47,19 @@ class InputAwareTuner:
     sampler: CategoricalSampler
     backend: SimulatedTPUBackend
     top_k: int = 10
-    cache_dir: Optional[str] = None
+    store: Optional[RecordStore] = None
+    cache_dir: Optional[str] = None     # legacy knob: dir-backed RecordStore
     _mem_cache: Dict[str, Config] = dataclasses.field(default_factory=dict)
+    _dir_store: Optional[RecordStore] = dataclasses.field(
+        default=None, repr=False)
 
     # -- training (the offline hours of §4-§5) --------------------------------
     @classmethod
     def train(cls, space: ParamSpace, *, n_samples: int = 20000,
               hidden: Tuple[int, ...] = (64, 128, 64), epochs: int = 40,
               backend: Optional[SimulatedTPUBackend] = None,
-              seed: int = 0, cache_dir: Optional[str] = None,
+              seed: int = 0, store: Optional[RecordStore] = None,
+              cache_dir: Optional[str] = None,
               verbose: bool = False) -> "InputAwareTuner":
         import jax
         backend = backend or SimulatedTPUBackend()
@@ -68,7 +70,8 @@ class InputAwareTuner:
                            hidden=hidden)
         model.fit(X, y, epochs=epochs, verbose=verbose)
         return cls(space=space, model=model, featurizer=featurizer,
-                   sampler=sampler, backend=backend, cache_dir=cache_dir)
+                   sampler=sampler, backend=backend, store=store,
+                   cache_dir=cache_dir)
 
     # -- runtime inference (§6) ------------------------------------------------
     def search(self, inputs: Mapping[str, int], *, remeasure: bool = True
@@ -79,23 +82,67 @@ class InputAwareTuner:
                                  featurizer=self.featurizer, top_k=self.top_k,
                                  measure=measure)
 
+    def _resolve_store(self) -> Optional[RecordStore]:
+        """Explicit store wins; else a store living under cache_dir."""
+        if self.store is not None:
+            return self.store
+        if self.cache_dir:
+            path = pathlib.Path(self.cache_dir) / "tunedb.jsonl"
+            if self._dir_store is None or self._dir_store.path != path:
+                self._dir_store = RecordStore.open(path)
+            return self._dir_store
+        return None
+
+    def _migrate_legacy_cache(self, key: str, inputs: Mapping[str, int],
+                              store: Optional[RecordStore]
+                              ) -> Optional[Config]:
+        """One old-style per-shape cache file ({space}-{key}.json, pre-store)
+        satisfies this lookup and is promoted into the store so the search it
+        once paid for is never re-run."""
+        if not self.cache_dir:
+            return None
+        legacy = pathlib.Path(self.cache_dir) / f"{self.space.name}-{key}.json"
+        if not legacy.exists():
+            return None
+        import json
+        try:
+            cfg = normalize_config(json.loads(legacy.read_text()))
+        except (ValueError, TypeError, AttributeError):
+            return None        # unreadable/foreign file -> fresh search
+        if store is not None:
+            store.add(TuneRecord(
+                space=self.space.name, inputs=dict(inputs), config=cfg,
+                tflops=0.0, backend="unknown", source="import"))
+        return cfg
+
     def best_config(self, inputs: Mapping[str, int], *,
                     remeasure: bool = True) -> Config:
-        key = _input_key(self.space.name, inputs)
+        """Best known config for `inputs`, always as ``Dict[str, int]``.
+
+        Lookup order: in-process memo -> record store -> fresh search (whose
+        result is committed back to the store as a TuneRecord).
+        """
+        key = input_key(self.space.name, inputs)
         if key in self._mem_cache:
             return self._mem_cache[key]
-        if self.cache_dir:
-            p = pathlib.Path(self.cache_dir) / f"{self.space.name}-{key}.json"
-            if p.exists():
-                cfg = json.loads(p.read_text())
+        store = self._resolve_store()
+        if store is not None:
+            rec = store.get(self.space.name, inputs)
+            if rec is not None:
+                cfg = normalize_config(rec.config)
                 self._mem_cache[key] = cfg
                 return cfg
-        cfg = self.search(inputs, remeasure=remeasure).best
+        cfg = self._migrate_legacy_cache(key, inputs, store)
+        if cfg is not None:
+            self._mem_cache[key] = cfg
+            return cfg
+        res = self.search(inputs, remeasure=remeasure)
+        cfg = normalize_config(res.best)
         self._mem_cache[key] = cfg
-        if self.cache_dir:
-            pathlib.Path(self.cache_dir).mkdir(parents=True, exist_ok=True)
-            (pathlib.Path(self.cache_dir) /
-             f"{self.space.name}-{key}.json").write_text(json.dumps(cfg))
+        if store is not None:
+            from repro.tunedb.session import record_from_search
+            store.add(record_from_search(self.space.name, inputs, res,
+                                         self.backend, source="tuner"))
         return cfg
 
     # -- persistence ------------------------------------------------------------
@@ -109,6 +156,7 @@ class InputAwareTuner:
     @classmethod
     def load(cls, directory: str, space: ParamSpace,
              backend: Optional[SimulatedTPUBackend] = None,
+             store: Optional[RecordStore] = None,
              cache_dir: Optional[str] = None) -> "InputAwareTuner":
         d = pathlib.Path(directory)
         model = MLP.from_bytes((d / f"{space.name}.mlp.npz").read_bytes())
@@ -118,7 +166,7 @@ class InputAwareTuner:
             space, (d / f"{space.name}.sampler.json").read_text())
         return cls(space=space, model=model, featurizer=featurizer,
                    sampler=sampler, backend=backend or SimulatedTPUBackend(),
-                   cache_dir=cache_dir)
+                   store=store, cache_dir=cache_dir)
 
 
 _GLOBAL_TUNERS: Dict[str, InputAwareTuner] = {}

@@ -26,24 +26,53 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _dtype_bits(dtype) -> int:
+    """Bit width of a dtype; safe on integer inputs (jnp.finfo floats only)."""
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.finfo(dtype).bits
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.iinfo(dtype).bits
+    return 32
+
+
 def _tuned_cfg(space_name: str, inputs: Mapping[str, int]
                ) -> Optional[Dict[str, int]]:
+    """Config resolution: installed tuner, else nearest tunedb record.
+
+    The store fallback is what lets a serving process with NO tuner in it
+    (engine warm-start) still run tuned kernels: exact shape hits return the
+    committed config, novel shapes borrow their nearest tuned neighbor and
+    rely on the ops-layer block clamping for runnability.
+    """
     from repro.core.tuner import get_tuner
     tuner = get_tuner(space_name)
-    if tuner is None:
-        return None
-    return tuner.best_config(inputs, remeasure=False)
+    if tuner is not None:
+        return tuner.best_config(inputs, remeasure=False)
+    from repro.tunedb.store import get_store
+    store = get_store()
+    if store is not None:
+        rec = store.nearest(space_name, inputs)   # memoized inside the store
+        if rec is not None:
+            return dict(rec.config)
+    return None
+
+
+def _record(space_name: str, inputs: Mapping[str, int]) -> None:
+    from repro.tunedb.telemetry import record_shape
+    record_shape(space_name, inputs)
 
 
 def matmul(a: jax.Array, b: jax.Array, *, prefer_kernel: bool = False
            ) -> jax.Array:
     """Model-facing GEMM.  prefer_kernel forces the Pallas path (tests)."""
-    if on_tpu() or prefer_kernel:
+    if a.ndim == 2 and b.ndim == 2:     # non-2D operands: plain jnp.dot only
         from repro.core.space import gemm_input
-        bits = jnp.finfo(a.dtype).bits if jnp.issubdtype(a.dtype, jnp.floating) else 32
-        cfg = _tuned_cfg("gemm", gemm_input(a.shape[0], b.shape[1],
-                                            a.shape[1], bits))
-        return ops.matmul(a, b, cfg, interpret=not on_tpu())
+        inputs = gemm_input(a.shape[0], b.shape[1], a.shape[1],
+                            _dtype_bits(a.dtype))
+        _record("gemm", inputs)
+        if on_tpu() or prefer_kernel:
+            cfg = _tuned_cfg("gemm", inputs)
+            return ops.matmul(a, b, cfg, interpret=not on_tpu())
     return jnp.dot(a, b)
 
 
@@ -56,29 +85,35 @@ def matmul2(x: jax.Array, w: jax.Array, *, prefer_kernel: bool = False
         x2 = x.reshape(-1, x.shape[-1])
         return matmul(x2, w, prefer_kernel=prefer_kernel).reshape(*lead,
                                                                   w.shape[-1])
+    from repro.core.space import gemm_input
+    M = 1
+    for d in lead:
+        M *= d
+    _record("gemm", gemm_input(M, w.shape[-1], x.shape[-1],
+                               _dtype_bits(x.dtype)))
     return jnp.dot(x, w)
 
 
 def conv2d(i: jax.Array, f: jax.Array, *, prefer_kernel: bool = False
            ) -> jax.Array:
+    from repro.core.space import conv_input
+    N, H, W, C = i.shape
+    R, S, _, K = f.shape
+    inputs = conv_input(N, H, W, C, K, R, S, _dtype_bits(i.dtype))
+    _record("conv", inputs)
     if on_tpu() or prefer_kernel:
-        from repro.core.space import conv_input
-        bits = jnp.finfo(i.dtype).bits
-        N, H, W, C = i.shape
-        R, S, _, K = f.shape
-        cfg = _tuned_cfg("conv", conv_input(N, H, W, C, K, R, S, bits))
+        cfg = _tuned_cfg("conv", inputs)
         return ops.conv2d(i, f, cfg, interpret=not on_tpu())
     return ref.conv2d_ref(i, f)
 
 
 def flash_attention(q, k, v, *, causal=True, q_offset=0,
                     prefer_kernel: bool = False):
+    inputs = {"B": q.shape[0], "Hq": q.shape[1], "Hkv": k.shape[1],
+              "Lq": q.shape[2], "Lkv": k.shape[2], "D": q.shape[3],
+              "dtype_bits": _dtype_bits(q.dtype), "causal": int(causal)}
+    _record("attention", inputs)
     if on_tpu() or prefer_kernel:
-        from repro.core.space import ATTENTION_SPACE
-        bits = jnp.finfo(q.dtype).bits
-        inputs = {"B": q.shape[0], "Hq": q.shape[1], "Hkv": k.shape[1],
-                  "Lq": q.shape[2], "Lkv": k.shape[2], "D": q.shape[3],
-                  "dtype_bits": bits, "causal": int(causal)}
         cfg = _tuned_cfg("attention", inputs)
         return ops.flash_attention(q, k, v, cfg, causal=causal,
                                    q_offset=q_offset,
@@ -87,10 +122,11 @@ def flash_attention(q, k, v, *, causal=True, q_offset=0,
 
 
 def ssd_scan(x, dt, a, bm, cm, *, prefer_kernel: bool = False):
+    inputs = {"B": x.shape[0], "L": x.shape[1], "H": x.shape[2],
+              "P": x.shape[3], "S": bm.shape[-1],
+              "dtype_bits": _dtype_bits(x.dtype)}
+    _record("ssd", inputs)
     if on_tpu() or prefer_kernel:
-        inputs = {"B": x.shape[0], "L": x.shape[1], "H": x.shape[2],
-                  "P": x.shape[3], "S": bm.shape[-1],
-                  "dtype_bits": jnp.finfo(x.dtype).bits}
         cfg = _tuned_cfg("ssd", inputs)
         return ops.ssd_scan(x, dt, a, bm, cm, cfg, interpret=not on_tpu())
     # CPU/dry-run path: chunked-but-pure-jnp SSD (identical math, XLA ops)

@@ -21,7 +21,8 @@ from typing import Any, Callable, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import shard_map
 
 
 def pipeline_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],

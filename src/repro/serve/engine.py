@@ -33,6 +33,7 @@ class ServeConfig:
     eos_token: int = -1             # -1: never emitted (synthetic tokens)
     temperature: float = 0.0        # 0 => greedy
     seed: int = 0
+    tunedb: Optional[str] = None    # warm-start: tuning-record store path
 
 
 @dataclasses.dataclass
@@ -45,6 +46,17 @@ class Request:
 class Engine:
     def __init__(self, cfg: ModelConfig, params: Any, serve_cfg: ServeConfig):
         self.cfg, self.params, self.sc = cfg, params, serve_cfg
+        # Warm start (tunedb): install the record store so kernel dispatch
+        # resolves tuned configs from day-one traffic without any tuner (or
+        # its training cost) in the serving process.  Like install_tuner, the
+        # store is PROCESS-GLOBAL dispatch state: a later Engine with a
+        # tunedb path retargets it, tunedb=None leaves it untouched, and
+        # repro.tunedb.clear_store() uninstalls it.
+        self.tunedb_store = None
+        if serve_cfg.tunedb:
+            from repro.tunedb import RecordStore, install_store
+            self.tunedb_store = RecordStore.open(serve_cfg.tunedb)
+            install_store(self.tunedb_store)
         self.cache = init_cache(cfg, serve_cfg.slots, serve_cfg.max_len)
         self.lengths = np.zeros(serve_cfg.slots, np.int64)
         self.slot_req: List[Optional[Request]] = [None] * serve_cfg.slots

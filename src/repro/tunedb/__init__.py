@@ -1,0 +1,37 @@
+"""repro.tunedb — tuning-record database + shape-telemetry subsystem.
+
+The persistence backbone of the input-aware runtime:
+
+  store.py      versioned append-only JSONL record store, nearest-shape lookup
+  telemetry.py  (space, input-shape) frequency counters fed by kernel dispatch
+  session.py    tune the top-K hot shapes on a worker pool, commit to a store
+  __main__.py   ``python -m repro.tunedb`` tune / stats / export / merge CLI
+
+The loop: dispatch records every kernel call's shape -> a TuningSession mines
+the hottest shapes and tunes them -> serving processes warm-start from the
+resulting store and get config hits (exact or nearest-shape) with no tuner
+in the process at all.
+"""
+
+from .store import (SCHEMA_VERSION, RecordStore, TuneRecord, clear_store,
+                    get_store, input_key, install_store, normalize_config)
+from .telemetry import (ShapeTelemetry, clear_telemetry, get_telemetry,
+                        record_shape)
+
+__all__ = [
+    "SCHEMA_VERSION", "RecordStore", "TuneRecord", "clear_store", "get_store",
+    "input_key", "install_store", "normalize_config",
+    "ShapeTelemetry", "clear_telemetry", "get_telemetry", "record_shape",
+    "TuningSession", "TuneJob", "SessionReport", "backend_fingerprint",
+]
+
+
+def __getattr__(name):
+    # lazy: keeps `import repro.tunedb` cheap on the dispatch hot path and
+    # guarantees core -> tunedb imports can never loop back through session.
+    if name in ("TuningSession", "TuneJob", "SessionReport",
+                "backend_fingerprint"):
+        from . import session
+
+        return getattr(session, name)
+    raise AttributeError(name)

@@ -1,0 +1,194 @@
+"""``python -m repro.tunedb`` — operate the tuning-record database.
+
+Subcommands:
+  tune    train (or load) a tuner and tune shapes into a store; shapes come
+          from a telemetry dump (``--shapes-from-telemetry``) and/or explicit
+          ``--shape M=4096,N=16,K=2560`` flags
+  stats   print store (and optional telemetry) statistics as JSON
+  export  compact a store to latest-record-per-shape
+  merge   fold several stores into one (newest record per shape wins)
+
+Example round trip:
+  $ python -m repro.tunedb tune --space gemm --shapes-from-telemetry \\
+        --telemetry /tmp/shapes.json --store /tmp/tunedb.jsonl
+  $ python -m repro.tunedb stats --store /tmp/tunedb.jsonl
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+from .store import RecordStore
+from .telemetry import ShapeTelemetry
+
+DEFAULT_STORE = os.path.expanduser("~/.cache/repro-isaac/tunedb.jsonl")
+
+# optional input params a CLI --shape may omit
+_SHAPE_DEFAULTS = {"dtype_bits": 16, "trans_a": 0, "trans_b": 0, "causal": 1}
+
+
+def _parse_shape(spec: str, space) -> Dict[str, int]:
+    """'M=4096,N=16,K=2560' -> full input dict for `space`."""
+    given: Dict[str, int] = {}
+    for part in spec.split(","):
+        if not part:
+            continue
+        k, _, v = part.partition("=")
+        if not _:
+            raise SystemExit(f"bad --shape entry {part!r} (want k=v)")
+        given[k.strip()] = int(v)
+    inputs = {}
+    for name in space.input_params:
+        if name in given:
+            inputs[name] = given.pop(name)
+        elif name in _SHAPE_DEFAULTS:
+            inputs[name] = _SHAPE_DEFAULTS[name]
+        else:
+            raise SystemExit(
+                f"--shape {spec!r} missing input param {name!r} "
+                f"(space {space.name} needs {space.input_params})")
+    if given:
+        raise SystemExit(f"--shape {spec!r}: unknown params {sorted(given)}")
+    return inputs
+
+
+def _cmd_tune(args: argparse.Namespace) -> int:
+    from repro.core.backend import SimulatedTPUBackend
+    from repro.core.space import SPACES
+    from repro.core.tuner import InputAwareTuner
+
+    from .session import TuningSession
+
+    space = SPACES[args.space]
+    store = RecordStore.open(args.store)
+
+    telemetry: Optional[ShapeTelemetry] = None
+    if args.shapes_from_telemetry:
+        if not args.telemetry:
+            raise SystemExit("--shapes-from-telemetry needs --telemetry PATH")
+        if not os.path.exists(args.telemetry):
+            raise SystemExit(f"telemetry file not found: {args.telemetry}")
+        telemetry = ShapeTelemetry.load(args.telemetry)
+    shapes: Optional[List[Dict[str, int]]] = None
+    if args.shape:
+        shapes = [_parse_shape(s, space) for s in args.shape]
+    if telemetry is None and shapes is None:
+        raise SystemExit("need --shapes-from-telemetry and/or --shape")
+
+    if args.load_tuner:
+        tuner = InputAwareTuner.load(args.load_tuner, space,
+                                     backend=SimulatedTPUBackend())
+    else:
+        print(f"[tunedb] training {args.space} tuner "
+              f"({args.train_samples} samples, {args.epochs} epochs)...")
+        tuner = InputAwareTuner.train(
+            space, n_samples=args.train_samples, epochs=args.epochs,
+            backend=SimulatedTPUBackend(), seed=args.seed)
+        if args.save_tuner:
+            tuner.save(args.save_tuner)
+
+    session = TuningSession(
+        tuner, store, telemetry, top_k_shapes=args.top_k,
+        workers=args.workers, remeasure=not args.no_remeasure,
+        skip_existing=not args.retune, progress_path=args.progress)
+    reports = []
+    if telemetry is not None:
+        reports.append(session.run(verbose=True))        # mined hot shapes
+    if shapes:
+        reports.append(session.run(shapes=shapes, verbose=True))
+    tuned = sum(r.tuned for r in reports)
+    skipped = sum(r.skipped for r in reports)
+    failed = sum(r.failed for r in reports)
+    wall = sum(r.wall_s for r in reports)
+    print(f"[tunedb] session done: {tuned} tuned, {skipped} skipped, "
+          f"{failed} failed in {wall:.1f}s -> {args.store}")
+    for r in reports:
+        for err in r.errors:
+            print(f"[tunedb]   failed: {err}", file=sys.stderr)
+    return 1 if failed and not tuned else 0
+
+
+def _cmd_stats(args: argparse.Namespace) -> int:
+    out = {"store": RecordStore.open(args.store).stats()}
+    if args.telemetry and os.path.exists(args.telemetry):
+        out["telemetry"] = ShapeTelemetry.load(args.telemetry).stats()
+    print(json.dumps(out, indent=1, sort_keys=True))
+    return 0
+
+
+def _cmd_export(args: argparse.Namespace) -> int:
+    n = RecordStore.open(args.store).export(args.out)
+    print(f"[tunedb] exported {n} records -> {args.out}")
+    return 0
+
+
+def _cmd_merge(args: argparse.Namespace) -> int:
+    merged = RecordStore.open(args.out)
+    total = 0
+    for path in args.stores:
+        total += merged.merge(RecordStore.open(path))
+    print(f"[tunedb] merged {total} records from {len(args.stores)} "
+          f"stores -> {args.out} ({len(merged)} shapes)")
+    return 0
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(prog="python -m repro.tunedb",
+                                description=__doc__.splitlines()[0])
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    t = sub.add_parser("tune", help="tune shapes into a store")
+    t.add_argument("--space", default="gemm",
+                   choices=["gemm", "conv", "attention", "ssd"])
+    t.add_argument("--store", default=DEFAULT_STORE)
+    t.add_argument("--telemetry", default=None,
+                   help="telemetry JSON dump (ShapeTelemetry.save)")
+    t.add_argument("--shapes-from-telemetry", action="store_true",
+                   help="mine jobs from the --telemetry file")
+    t.add_argument("--shape", action="append", default=[],
+                   help="explicit shape, e.g. M=4096,N=16,K=2560 (repeatable)")
+    t.add_argument("--top-k", type=int, default=8,
+                   help="how many hot shapes to tune")
+    t.add_argument("--workers", type=int, default=4)
+    t.add_argument("--train-samples", type=int, default=8000)
+    t.add_argument("--epochs", type=int, default=25)
+    t.add_argument("--seed", type=int, default=0)
+    t.add_argument("--no-remeasure", action="store_true",
+                   help="trust the model; skip top-k re-measurement")
+    t.add_argument("--retune", action="store_true",
+                   help="re-tune shapes already present in the store")
+    t.add_argument("--progress", default=None,
+                   help="resumable progress file for long sessions")
+    t.add_argument("--load-tuner", default=None,
+                   help="load a trained tuner dir instead of training")
+    t.add_argument("--save-tuner", default=None)
+    t.set_defaults(fn=_cmd_tune)
+
+    s = sub.add_parser("stats", help="print store/telemetry statistics")
+    s.add_argument("--store", default=DEFAULT_STORE)
+    s.add_argument("--telemetry", default=None)
+    s.set_defaults(fn=_cmd_stats)
+
+    e = sub.add_parser("export", help="compact a store (latest per shape)")
+    e.add_argument("--store", default=DEFAULT_STORE)
+    e.add_argument("--out", required=True)
+    e.set_defaults(fn=_cmd_export)
+
+    m = sub.add_parser("merge", help="fold stores into one")
+    m.add_argument("stores", nargs="+")
+    m.add_argument("--out", required=True)
+    m.set_defaults(fn=_cmd_merge)
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,183 @@
+"""Tuning sessions: mine hot shapes, tune them on a worker pool, commit.
+
+A :class:`TuningSession` closes the telemetry -> search -> store loop (the
+MITuna-style "session of jobs" organization): take the top-K shapes traffic
+actually hit, run the input-aware tuner's runtime search for each on a small
+worker pool, and append one :class:`TuneRecord` per shape to the store.  A
+progress file makes long sessions resumable — re-running the same session
+skips shapes already committed (or already marked done in the progress
+file), so a killed fleet picks up where it stopped.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import time
+from concurrent.futures import ThreadPoolExecutor, as_completed
+from typing import Dict, List, Mapping, Optional, Tuple
+
+from .store import RecordStore, TuneRecord, input_key, normalize_inputs
+from .telemetry import ShapeTelemetry
+
+
+def backend_fingerprint(backend) -> str:
+    """Stable id of the measuring backend, recorded with every result."""
+    name = type(backend).__name__
+    attrs = []
+    for field in ("noise", "seed", "warmup", "iters", "rtol"):
+        v = getattr(backend, field, None)
+        if v is not None and not callable(v):
+            attrs.append(f"{field}={v}")
+    return "/".join([name] + attrs) if attrs else name
+
+
+def record_from_search(space: str, inputs: Mapping[str, int], result,
+                       backend, source: str) -> TuneRecord:
+    """Build the canonical TuneRecord for one SearchResult.
+
+    The single place that decides measured-vs-predicted tflops, probes the
+    backend for latency, and stamps the fingerprint — shared by the session
+    runner and InputAwareTuner.best_config so their records never drift.
+    """
+    tflops = (result.measured_tflops if result.measured_tflops is not None
+              else result.predicted_tflops)
+    config = dict(result.best)
+    latency = None
+    time_us = getattr(backend, "time_us", None)
+    if callable(time_us):
+        latency = float(time_us(space, config, inputs))
+    return TuneRecord(
+        space=space, inputs=dict(inputs), config=config,
+        tflops=float(tflops), latency_us=latency,
+        backend=backend_fingerprint(backend), source=source)
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneJob:
+    """One unit of session work: tune one input shape."""
+
+    space: str
+    inputs: Dict[str, int]
+    count: int                          # telemetry frequency (priority)
+
+    @property
+    def key(self) -> str:
+        return input_key(self.space, self.inputs)
+
+
+@dataclasses.dataclass
+class SessionReport:
+    space: str
+    jobs: int
+    tuned: int
+    skipped: int
+    failed: int
+    wall_s: float
+    records: List[TuneRecord] = dataclasses.field(default_factory=list)
+    errors: List[str] = dataclasses.field(default_factory=list)
+
+
+class TuningSession:
+    """Drive the tuner over the hottest telemetry shapes into a store."""
+
+    def __init__(self, tuner, store: RecordStore,
+                 telemetry: Optional[ShapeTelemetry] = None, *,
+                 top_k_shapes: int = 8, workers: int = 4,
+                 remeasure: bool = True, skip_existing: bool = True,
+                 progress_path: Optional[os.PathLike] = None):
+        self.tuner = tuner
+        self.store = store
+        self.telemetry = telemetry
+        self.top_k_shapes = top_k_shapes
+        self.workers = max(1, workers)
+        self.remeasure = remeasure
+        self.skip_existing = skip_existing
+        self.progress_path = (pathlib.Path(progress_path)
+                              if progress_path else None)
+        self._done: set = self._load_progress()
+
+    # -- resumability ---------------------------------------------------------
+    def _load_progress(self) -> set:
+        if self.progress_path is None or not self.progress_path.exists():
+            return set()
+        try:
+            return set(json.loads(self.progress_path.read_text())["done"])
+        except (ValueError, KeyError):
+            return set()
+
+    def _save_progress(self) -> None:
+        if self.progress_path is None:
+            return
+        self.progress_path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = self.progress_path.with_name(self.progress_path.name + ".tmp")
+        tmp.write_text(json.dumps({"space": self.tuner.space.name,
+                                   "done": sorted(self._done)}))
+        os.replace(tmp, self.progress_path)
+
+    # -- planning -------------------------------------------------------------
+    def plan(self, shapes: Optional[List[Mapping[str, int]]] = None
+             ) -> Tuple[List[TuneJob], int]:
+        """Build the job list; returns (jobs, n_skipped).
+
+        `shapes` overrides telemetry mining (explicit --shape CLI jobs).
+        """
+        space = self.tuner.space.name
+        if shapes is not None:
+            cand = [(normalize_inputs(s), 0) for s in shapes]
+        elif self.telemetry is not None:
+            cand = self.telemetry.hot_shapes(space, self.top_k_shapes)
+        else:
+            raise ValueError("need telemetry or explicit shapes to plan")
+        jobs, skipped = [], 0
+        for inputs, count in cand:
+            key = input_key(space, inputs)
+            if key in self._done or (self.skip_existing
+                                     and key in self.store):
+                skipped += 1
+                continue
+            jobs.append(TuneJob(space=space, inputs=inputs, count=count))
+        return jobs, skipped
+
+    # -- execution ------------------------------------------------------------
+    def _run_job(self, job: TuneJob) -> TuneRecord:
+        result = self.tuner.search(job.inputs, remeasure=self.remeasure)
+        return record_from_search(job.space, job.inputs, result,
+                                  self.tuner.backend, source="session")
+
+    def run(self, shapes: Optional[List[Mapping[str, int]]] = None,
+            verbose: bool = False) -> SessionReport:
+        t0 = time.time()
+        jobs, skipped = self.plan(shapes)
+        report = SessionReport(space=self.tuner.space.name, jobs=len(jobs),
+                               tuned=0, skipped=skipped, failed=0, wall_s=0.0)
+        if jobs:
+            # commit each result the moment it lands (as_completed, not map):
+            # a crash mid-session must not discard jobs that already finished
+            with ThreadPoolExecutor(max_workers=self.workers) as pool:
+                futures = {pool.submit(self._guarded, j): j for j in jobs}
+                for fut in as_completed(futures):
+                    job = futures[fut]
+                    rec, err = fut.result()
+                    if err is not None:
+                        report.failed += 1
+                        report.errors.append(f"{job.inputs}: {err}")
+                        continue
+                    self.store.add(rec)
+                    self._done.add(job.key)
+                    self._save_progress()
+                    report.tuned += 1
+                    report.records.append(rec)
+                    if verbose:
+                        print(f"[session:{job.space}] {job.inputs} -> "
+                              f"{rec.tflops:.1f} TFLOPS (hits={job.count})")
+        report.wall_s = time.time() - t0
+        return report
+
+    def _guarded(self, job: TuneJob):
+        try:
+            return self._run_job(job), None
+        except Exception as e:       # noqa: BLE001 — job isolation is the point
+            return None, f"{type(e).__name__}: {e}"

@@ -1,0 +1,313 @@
+"""Versioned, append-only tuning-record store.
+
+A :class:`RecordStore` is the persistence backbone of the runtime (§6): every
+tuned configuration the system ever measures becomes a :class:`TuneRecord`
+line in a JSON-lines file.  The file is strictly append-only — re-tuning a
+shape appends a new record rather than rewriting history, so a store doubles
+as a tuning log; the in-memory index resolves each ``(space, inputs)`` key to
+its most recent record.  Lines are written with flush+fsync so a crashed
+writer loses at most its final, torn line, and the loader skips any line that
+fails to parse — the atomicity contract the tests pin down.
+
+Beyond exact lookup the store answers *nearest-shape* queries: when serving
+traffic hits a shape nobody tuned, the closest tuned shape (log2 distance
+over the numeric input dims, exact match on dtype/layout flags) supplies a
+config that the ops-layer clamping then makes runnable.  ``merge`` /
+``export`` combine stores from parallel tuning fleets into one artifact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import math
+import os
+import pathlib
+import threading
+import time
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+SCHEMA_VERSION = 1
+
+# input parameters that must match EXACTLY for a nearest-shape fallback —
+# a config tuned for bf16 or a transposed layout is not a neighbor of fp32.
+EXACT_MATCH_PARAMS = frozenset(
+    {"dtype_bits", "trans_a", "trans_b", "causal", "R", "S"})
+
+
+def normalize_config(cfg: Mapping[str, object]) -> Dict[str, int]:
+    """Coerce a config mapping to the canonical ``Dict[str, int]`` form.
+
+    JSON round-trips and hand-written caches can surface floats or string
+    keys; every config leaving the store passes through here so callers
+    always see one type (the `best_config` normalization contract).
+    """
+    return {str(k): int(v) for k, v in cfg.items()}
+
+
+def normalize_inputs(inputs: Mapping[str, object]) -> Dict[str, int]:
+    return {str(k): int(v) for k, v in inputs.items()}
+
+
+def input_key(space: str, inputs: Mapping[str, object]) -> str:
+    """Stable 16-hex key for a (space, inputs) pair."""
+    blob = json.dumps(
+        {"s": space, "i": dict(sorted(normalize_inputs(inputs).items()))},
+        sort_keys=True)
+    return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneRecord:
+    """One measured tuning outcome for one input shape."""
+
+    space: str
+    inputs: Dict[str, int]
+    config: Dict[str, int]
+    tflops: float                       # measured (or model-predicted) perf
+    latency_us: Optional[float] = None
+    backend: str = "unknown"            # backend fingerprint, e.g. sim-tpu-v5e
+    source: str = "tuner"               # tuner | session | merge | import
+    created_at: float = 0.0             # unix seconds; 0 -> stamped on add
+    schema_version: int = SCHEMA_VERSION
+
+    @property
+    def key(self) -> str:
+        return input_key(self.space, self.inputs)
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, line: str) -> "TuneRecord":
+        d = json.loads(line)
+        if not isinstance(d, dict) or "space" not in d or "config" not in d:
+            raise ValueError(f"not a TuneRecord: {line[:80]!r}")
+        if int(d.get("schema_version", 1)) > SCHEMA_VERSION:
+            # a newer writer's semantics are unknown; skip, don't misread
+            raise ValueError(
+                f"record schema v{d['schema_version']} > v{SCHEMA_VERSION}")
+        known = {f.name for f in dataclasses.fields(cls)}
+        d = {k: v for k, v in d.items() if k in known}
+        d["inputs"] = normalize_inputs(d.get("inputs", {}))
+        d["config"] = normalize_config(d["config"])
+        return cls(**d)
+
+
+_MEMO_MISS = object()       # sentinel: None is a valid memoized outcome
+
+
+def _shape_distance(a: Mapping[str, int], b: Mapping[str, int]
+                    ) -> Optional[float]:
+    """log2 distance between two input dicts; None if incomparable."""
+    if set(a) != set(b):
+        return None
+    d = 0.0
+    for k, va in a.items():
+        vb = b[k]
+        if k in EXACT_MATCH_PARAMS:
+            if va != vb:
+                return None
+            continue
+        d += (math.log2(1 + abs(va)) - math.log2(1 + abs(vb))) ** 2
+    return math.sqrt(d)
+
+
+class RecordStore:
+    """Append-only JSONL store of :class:`TuneRecord`, indexed in memory.
+
+    ``path=None`` gives a purely in-memory store (tests, ephemeral tuning).
+    """
+
+    def __init__(self, path: Optional[os.PathLike] = None):
+        self.path = pathlib.Path(path) if path is not None else None
+        self._lock = threading.Lock()
+        self._index: Dict[str, TuneRecord] = {}      # key -> latest record
+        self._history: Dict[str, int] = {}           # key -> n records seen
+        self.n_lines = 0                             # parsed lines on disk
+        self.n_skipped = 0                           # torn/garbage lines
+        self.hits = 0
+        self.nearest_hits = 0
+        self.misses = 0
+        self._needs_newline = False     # true when the file ends in a torn line
+        # (space, shape)->(record|None) memo for nearest(): the O(index) scan
+        # sits on the dispatch hot path for untuned shapes.  Invalidated on
+        # every add so new session results become visible immediately.
+        self._nearest_memo: Dict[tuple, Optional[TuneRecord]] = {}
+        if self.path is not None and self.path.exists():
+            self._load()
+
+    # -- persistence ---------------------------------------------------------
+    @classmethod
+    def open(cls, path: os.PathLike) -> "RecordStore":
+        return cls(path)
+
+    def _load(self) -> None:
+        with self.path.open("r", encoding="utf-8") as fh:
+            for line in fh:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = TuneRecord.from_json(line)
+                except (ValueError, TypeError, KeyError):
+                    self.n_skipped += 1        # torn tail / foreign garbage
+                    continue
+                self.n_lines += 1
+                self._admit(rec)
+        with self.path.open("rb") as fh:
+            fh.seek(0, os.SEEK_END)
+            if fh.tell():
+                fh.seek(-1, os.SEEK_END)
+                self._needs_newline = fh.read(1) != b"\n"
+
+    def _admit(self, rec: TuneRecord) -> None:
+        k = rec.key
+        self._history[k] = self._history.get(k, 0) + 1
+        cur = self._index.get(k)
+        if cur is None or rec.created_at >= cur.created_at:
+            self._index[k] = rec
+
+    def add(self, rec: TuneRecord) -> TuneRecord:
+        """Append one record (stamping created_at if unset) atomically."""
+        if rec.created_at <= 0:
+            rec = dataclasses.replace(rec, created_at=time.time())
+        rec = dataclasses.replace(
+            rec, inputs=normalize_inputs(rec.inputs),
+            config=normalize_config(rec.config))
+        with self._lock:
+            self._nearest_memo.clear()
+            if self.path is not None:
+                self.path.parent.mkdir(parents=True, exist_ok=True)
+                with self.path.open("a", encoding="utf-8") as fh:
+                    if self._needs_newline:     # seal a torn tail line first
+                        fh.write("\n")
+                        self._needs_newline = False
+                    fh.write(rec.to_json() + "\n")
+                    fh.flush()
+                    os.fsync(fh.fileno())
+                self.n_lines += 1
+            self._admit(rec)
+        return rec
+
+    # -- lookup --------------------------------------------------------------
+    def get(self, space: str, inputs: Mapping[str, int]
+            ) -> Optional[TuneRecord]:
+        """Exact lookup of the latest record for (space, inputs)."""
+        rec = self._index.get(input_key(space, inputs))
+        if rec is not None:
+            self.hits += 1
+        return rec
+
+    def nearest(self, space: str, inputs: Mapping[str, int], *,
+                max_distance: float = 2.0
+                ) -> Optional[TuneRecord]:
+        """Exact record if present, else the closest tuned shape.
+
+        Distance is L2 over log2-transformed numeric input dims; dtype and
+        layout flags must match exactly.  ``max_distance=2.0`` admits
+        neighbors within a combined ~4x dimension drift — past that a
+        config says more about the other shape than about this one.
+        """
+        inputs = normalize_inputs(inputs)
+        exact = self._index.get(input_key(space, inputs))
+        if exact is not None:
+            self.hits += 1
+            return exact
+        memo_key = (space, tuple(sorted(inputs.items())), max_distance)
+        # single atomic read: add() clears the memo concurrently, so a
+        # check-then-index pair could KeyError between the two operations
+        best = self._nearest_memo.get(memo_key, _MEMO_MISS)
+        if best is _MEMO_MISS:
+            best, best_d = None, max_distance
+            with self._lock:
+                candidates = list(self._index.values())
+            for rec in candidates:
+                if rec.space != space:
+                    continue
+                d = _shape_distance(inputs, rec.inputs)
+                if d is not None and d <= best_d:
+                    best, best_d = rec, d
+            if len(self._nearest_memo) > 4096:
+                self._nearest_memo.clear()
+            self._nearest_memo[memo_key] = best
+        if best is not None:
+            self.nearest_hits += 1
+        else:
+            self.misses += 1
+        return best
+
+    def records(self) -> List[TuneRecord]:
+        """Latest record per key, most recent first."""
+        with self._lock:
+            recs = list(self._index.values())
+        return sorted(recs, key=lambda r: -r.created_at)
+
+    def __len__(self) -> int:
+        return len(self._index)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._index
+
+    # -- merge / export ------------------------------------------------------
+    def merge(self, other: "RecordStore") -> int:
+        """Append every latest record of `other` not already newer here."""
+        n = 0
+        for rec in other.records():
+            cur = self._index.get(rec.key)
+            if cur is None or rec.created_at > cur.created_at:
+                self.add(dataclasses.replace(rec, source="merge"))
+                n += 1
+        return n
+
+    def export(self, path: os.PathLike) -> int:
+        """Write a compacted store (latest record per key) atomically."""
+        path = pathlib.Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        recs = self.records()
+        tmp = path.with_name(path.name + ".tmp")
+        with tmp.open("w", encoding="utf-8") as fh:
+            for rec in reversed(recs):           # chronological order
+                fh.write(rec.to_json() + "\n")
+            fh.flush()
+            os.fsync(fh.fileno())
+        os.replace(tmp, path)
+        return len(recs)
+
+    # -- reporting -----------------------------------------------------------
+    def stats(self) -> Dict[str, object]:
+        per_space: Dict[str, int] = {}
+        for rec in self.records():
+            per_space[rec.space] = per_space.get(rec.space, 0) + 1
+        return {
+            "path": str(self.path) if self.path else None,
+            "schema_version": SCHEMA_VERSION,
+            "shapes": len(self._index),
+            "lines": self.n_lines,
+            "skipped_lines": self.n_skipped,
+            "per_space": per_space,
+            "lookups": {"hits": self.hits, "nearest": self.nearest_hits,
+                        "misses": self.misses},
+        }
+
+
+# ---------------------------------------------------------------------------
+# Process-global store: the dispatcher's fallback when no tuner is installed.
+# ---------------------------------------------------------------------------
+
+_GLOBAL_STORE: Optional[RecordStore] = None
+
+
+def install_store(store: Optional[RecordStore]) -> None:
+    """Make `store` visible to the kernel dispatcher (serve warm-start)."""
+    global _GLOBAL_STORE
+    _GLOBAL_STORE = store
+
+
+def get_store() -> Optional[RecordStore]:
+    return _GLOBAL_STORE
+
+
+def clear_store() -> None:
+    install_store(None)

@@ -1,0 +1,148 @@
+"""Shape telemetry: which input shapes does traffic actually hit?
+
+The paper tunes offline over a *synthetic* input distribution; what makes the
+runtime pay off in production is tuning the shapes real traffic sends
+(MLKAPS's observation).  :class:`ShapeTelemetry` is the counter the kernel
+dispatcher feeds on every ``matmul`` / ``conv2d`` / ``flash_attention`` /
+``ssd_scan`` call — a thread-safe frequency map from ``(space, inputs)`` to
+hit count.  ``hot_shapes`` mines the top-K per space for the tuning session;
+``save``/``load``/``merge`` move telemetry between serving processes and the
+offline tuner fleet.
+
+The record path is deliberately cheap — a tuple-key dict upsert under a lock
+(no hashing or serialization) — because it also runs on the eager non-kernel
+dispatch path where the op itself costs microseconds.  bench_tunedb.py holds
+the full resolution stack to <5% of interpret-mode dispatch cost.
+
+Counting semantics under jit: dispatch runs inside traced functions (the
+serving engine jits decode/prefill), where ``record`` executes once per
+COMPILATION, not per device execution — so for jitted callers telemetry is a
+census of distinct compiled shapes, while eager callers contribute true call
+frequencies.  Per-execution counts under jit would need host callbacks on
+the hot path (see ROADMAP tunedb next-steps).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import threading
+from typing import Dict, List, Mapping, Optional, Tuple
+
+from .store import normalize_inputs
+
+TELEMETRY_VERSION = 1
+
+
+def _shape_key(inputs: Mapping[str, int]) -> Tuple[Tuple[str, int], ...]:
+    return tuple(sorted(inputs.items()))
+
+
+class ShapeTelemetry:
+    """Thread-safe (space, input-shape) frequency counter."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        # space -> shape-key tuple -> (inputs, count)
+        self._counts: Dict[str, Dict[tuple, Tuple[Dict[str, int], int]]] = {}
+
+    # -- hot path -------------------------------------------------------------
+    def record(self, space: str, inputs: Mapping[str, int], n: int = 1) -> None:
+        key = _shape_key(inputs)
+        with self._lock:
+            per_space = self._counts.setdefault(space, {})
+            cur = per_space.get(key)
+            if cur is None:
+                per_space[key] = (normalize_inputs(inputs), n)
+            else:
+                per_space[key] = (cur[0], cur[1] + n)
+
+    # -- mining ---------------------------------------------------------------
+    def count(self, space: str, inputs: Mapping[str, int]) -> int:
+        cur = self._counts.get(space, {}).get(_shape_key(inputs))
+        return 0 if cur is None else cur[1]
+
+    def total(self, space: Optional[str] = None) -> int:
+        with self._lock:
+            spaces = [space] if space is not None else list(self._counts)
+            return sum(c for s in spaces
+                       for _, c in self._counts.get(s, {}).values())
+
+    def hot_shapes(self, space: str, top_k: int = 8
+                   ) -> List[Tuple[Dict[str, int], int]]:
+        """Top-K (inputs, count) for one space, most frequent first."""
+        with self._lock:
+            items = list(self._counts.get(space, {}).values())
+        items.sort(key=lambda t: (-t[1], sorted(t[0].items())))
+        return [(dict(i), c) for i, c in items[:top_k]]
+
+    def spaces(self) -> List[str]:
+        with self._lock:
+            return sorted(self._counts)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._counts.clear()
+
+    # -- persistence -----------------------------------------------------------
+    def save(self, path: os.PathLike) -> None:
+        path = pathlib.Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        with self._lock:
+            payload = {
+                "version": TELEMETRY_VERSION,
+                "counts": {
+                    s: [{"inputs": i, "count": c}
+                        for i, c in per_space.values()]
+                    for s, per_space in self._counts.items()},
+            }
+        tmp = path.with_name(path.name + ".tmp")
+        with tmp.open("w", encoding="utf-8") as fh:
+            fh.write(json.dumps(payload, sort_keys=True))
+            fh.flush()
+            os.fsync(fh.fileno())
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(cls, path: os.PathLike) -> "ShapeTelemetry":
+        t = cls()
+        payload = json.loads(pathlib.Path(path).read_text())
+        for space, entries in payload.get("counts", {}).items():
+            for e in entries:
+                t.record(space, e["inputs"], n=int(e["count"]))
+        return t
+
+    def merge(self, other: "ShapeTelemetry") -> None:
+        for space, per_space in other._counts.items():
+            for inputs, count in list(per_space.values()):
+                self.record(space, inputs, n=count)
+
+    def stats(self) -> Dict[str, object]:
+        with self._lock:
+            return {
+                "spaces": {s: {"shapes": len(m),
+                               "calls": sum(c for _, c in m.values())}
+                           for s, m in self._counts.items()},
+            }
+
+
+# ---------------------------------------------------------------------------
+# Process-global collector: dispatch feeds this unconditionally; it is always
+# present (a counter, not a policy), unlike the optional global store/tuner.
+# ---------------------------------------------------------------------------
+
+_TELEMETRY = ShapeTelemetry()
+
+
+def get_telemetry() -> ShapeTelemetry:
+    return _TELEMETRY
+
+
+def record_shape(space: str, inputs: Mapping[str, int]) -> None:
+    """Dispatcher entry point — one counter bump per kernel call."""
+    _TELEMETRY.record(space, inputs)
+
+
+def clear_telemetry() -> None:
+    _TELEMETRY.clear()

@@ -1,0 +1,85 @@
+"""Minimal deterministic stand-in for `hypothesis` (not installed here).
+
+The container bakes its dependency set; when the real `hypothesis` is absent
+conftest.py installs this module in its place so the property tests still
+run.  Semantics are reduced but honest: each `@given` test runs
+``max_examples`` deterministic pseudo-random samples drawn from the declared
+strategies (seeded per test name), so failures are reproducible.  Only the
+strategy surface this repo's tests use is provided: ``integers``,
+``floats``, ``sampled_from``, and ``.filter``.
+"""
+
+from __future__ import annotations
+
+import functools
+import hashlib
+import inspect
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[np.random.Generator], Any]):
+        self._draw = draw
+
+    def filter(self, pred: Callable[[Any], bool]) -> "_Strategy":
+        def draw(rng: np.random.Generator) -> Any:
+            for _ in range(1000):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate rejected 1000 samples")
+        return _Strategy(draw)
+
+
+class strategies:
+    @staticmethod
+    def integers(lo: int, hi: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+    @staticmethod
+    def floats(lo: float, hi: float) -> _Strategy:
+        return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+    @staticmethod
+    def sampled_from(seq: Sequence[Any]) -> _Strategy:
+        items = list(seq)
+        return _Strategy(lambda rng: items[int(rng.integers(len(items)))])
+
+
+def settings(max_examples: int = 10, deadline: Any = None, **_ignored):
+    def deco(fn):
+        fn._stub_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        n = getattr(fn, "_stub_settings", {}).get("max_examples", 10)
+        seed = int(hashlib.sha256(fn.__name__.encode()).hexdigest()[:8], 16)
+
+        # strategies fill the RIGHTMOST params (hypothesis semantics); only
+        # the leading ones are pytest fixtures — hide the rest from pytest.
+        # Drawn values are passed by NAME because pytest passes fixtures as
+        # keyword arguments.
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        strat_names = [p.name for p in params[len(params) - len(strats):]]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = np.random.default_rng(seed)
+            for _ in range(n):
+                drawn = {name: s._draw(rng)
+                         for name, s in zip(strat_names, strats)}
+                fn(*args, **kwargs, **drawn)
+
+        wrapper.__signature__ = sig.replace(
+            parameters=params[:len(params) - len(strats)])
+        return wrapper
+    return deco
+
+
+st = strategies

@@ -1,0 +1,415 @@
+"""repro.tunedb: record store, shape telemetry, tuning sessions, CLI.
+
+Pins the subsystem's contracts: append-only atomic persistence (a torn tail
+line never poisons a store), exact + nearest-shape lookup, telemetry counting
+under repeated kernel dispatch, the tuner<->store integration (best_config is
+always a Dict[str, int] and survives process "restarts" through the store),
+and the full telemetry -> session -> warm-started-serving round trip.
+"""
+
+import dataclasses
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.backend import SimulatedTPUBackend
+from repro.core.space import GEMM_SPACE, gemm_input
+from repro.core.tuner import InputAwareTuner, clear_tuners, install_tuner
+from repro.kernels import dispatch, ref
+from repro.tunedb import (RecordStore, ShapeTelemetry, TuneRecord,
+                          clear_store, clear_telemetry, get_telemetry,
+                          input_key, install_store)
+from repro.tunedb.session import TuningSession, backend_fingerprint
+from repro.tunedb.__main__ import main as tunedb_main
+
+
+@pytest.fixture(autouse=True)
+def _clean_globals():
+    clear_tuners()
+    clear_store()
+    clear_telemetry()
+    yield
+    clear_tuners()
+    clear_store()
+    clear_telemetry()
+
+
+@pytest.fixture(scope="module")
+def tiny_tuner():
+    """A deliberately small trained tuner — enough to search, fast to build."""
+    return InputAwareTuner.train(
+        GEMM_SPACE, n_samples=600, hidden=(16, 16), epochs=4,
+        backend=SimulatedTPUBackend(noise=0.02), seed=0)
+
+
+def _rec(m, n, k, *, bm=64, tflops=100.0, created_at=0.0, bits=16):
+    return TuneRecord(
+        space="gemm", inputs=gemm_input(m, n, k, bits),
+        config={"bm": bm, "bn": 128, "bk": 128, "k_unroll": 1, "k_split": 1,
+                "order": 0, "acc32": 1, "prefetch": 2},
+        tflops=tflops, latency_us=12.5, backend="test", source="tuner",
+        created_at=created_at)
+
+
+# ---------------------------------------------------------------------------
+# store
+# ---------------------------------------------------------------------------
+
+def test_record_json_roundtrip():
+    rec = _rec(512, 16, 2048, created_at=123.0)
+    back = TuneRecord.from_json(rec.to_json())
+    assert back == rec
+    assert back.key == input_key("gemm", rec.inputs)
+
+
+def test_store_roundtrip_and_versioning(tmp_path):
+    path = tmp_path / "db.jsonl"
+    store = RecordStore.open(path)
+    store.add(_rec(512, 16, 2048, bm=64, created_at=1.0))
+    store.add(_rec(1024, 16, 2048, bm=128, created_at=2.0))
+    # re-tune of the same shape: append-only, newest wins in the index
+    store.add(_rec(512, 16, 2048, bm=256, created_at=3.0))
+
+    fresh = RecordStore.open(path)
+    assert len(fresh) == 2
+    assert fresh.n_lines == 3                      # history preserved on disk
+    hit = fresh.get("gemm", gemm_input(512, 16, 2048))
+    assert hit is not None and hit.config["bm"] == 256
+
+
+def test_store_atomicity_torn_tail(tmp_path):
+    path = tmp_path / "db.jsonl"
+    store = RecordStore.open(path)
+    store.add(_rec(512, 16, 2048))
+    store.add(_rec(1024, 16, 2048))
+    with path.open("a") as fh:                     # simulate a crashed writer
+        fh.write('{"space": "gemm", "inputs": {"M": 7')
+    fresh = RecordStore.open(path)
+    assert len(fresh) == 2
+    assert fresh.n_skipped == 1
+    # the store stays writable after recovery
+    fresh.add(_rec(2048, 32, 2048))
+    assert len(RecordStore.open(path)) == 3
+
+
+def test_future_schema_records_are_skipped(tmp_path):
+    path = tmp_path / "db.jsonl"
+    store = RecordStore.open(path)
+    store.add(_rec(512, 16, 2048))
+    future = dict(json.loads(_rec(256, 256, 256).to_json()),
+                  schema_version=99)
+    with path.open("a") as fh:
+        fh.write(json.dumps(future) + "\n")
+    fresh = RecordStore.open(path)
+    assert len(fresh) == 1                          # v99 record not misread
+    assert fresh.n_skipped == 1
+
+
+def test_nearest_shape_fallback():
+    store = RecordStore()
+    store.add(_rec(1024, 16, 2048, bm=128))
+    store.add(_rec(64, 512, 512, bm=8))
+    near = store.nearest("gemm", gemm_input(1152, 16, 2048))
+    assert near is not None and near.config["bm"] == 128
+    assert store.nearest_hits == 1
+    # dtype must match exactly — no bf16 neighbor for an fp32 query
+    assert store.nearest("gemm", gemm_input(1024, 16, 2048, 32)) is None
+    # absurdly far shapes are not neighbors
+    assert store.nearest("gemm", gemm_input(8, 8, 8)) is None
+    assert store.misses == 2
+
+
+def test_store_merge_and_export(tmp_path):
+    a = RecordStore.open(tmp_path / "a.jsonl")
+    a.add(_rec(512, 16, 2048, bm=64, created_at=1.0))
+    a.add(_rec(512, 16, 2048, bm=128, created_at=5.0))  # newer duplicate
+    b = RecordStore.open(tmp_path / "b.jsonl")
+    b.add(_rec(512, 16, 2048, bm=256, created_at=3.0))  # older than a's
+    b.add(_rec(256, 256, 256, created_at=4.0))
+
+    merged = RecordStore.open(tmp_path / "m.jsonl")
+    assert merged.merge(a) == 1
+    assert merged.merge(b) == 1                    # only the novel shape lands
+    assert merged.get("gemm", gemm_input(512, 16, 2048)).config["bm"] == 128
+
+    out = tmp_path / "compact.jsonl"
+    assert merged.export(out) == 2
+    compact = RecordStore.open(out)
+    assert len(compact) == 2 and compact.n_lines == 2
+
+
+# ---------------------------------------------------------------------------
+# telemetry
+# ---------------------------------------------------------------------------
+
+def test_telemetry_counts_and_hot_shapes(tmp_path):
+    t = ShapeTelemetry()
+    hot, cold = gemm_input(4096, 16, 2560), gemm_input(128, 128, 128)
+    for _ in range(5):
+        t.record("gemm", hot)
+    t.record("gemm", cold)
+    top = t.hot_shapes("gemm", top_k=1)
+    assert top == [(hot, 5)]
+    assert t.total("gemm") == 6
+
+    t.save(tmp_path / "tel.json")
+    back = ShapeTelemetry.load(tmp_path / "tel.json")
+    assert back.count("gemm", hot) == 5
+    back.merge(t)
+    assert back.count("gemm", hot) == 10
+
+
+def test_telemetry_under_repeated_dispatch(rng):
+    tel = get_telemetry()
+    a = jnp.asarray(rng.normal(size=(16, 32)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(32, 128)), jnp.float32)
+    for _ in range(3):
+        dispatch.matmul(a, b)
+    dispatch.matmul(a[:8], b)
+    shape3 = gemm_input(16, 128, 32, 32)
+    assert tel.count("gemm", shape3) == 3
+    assert tel.count("gemm", gemm_input(8, 128, 32, 32)) == 1
+    assert tel.hot_shapes("gemm", 1)[0] == (shape3, 3)
+
+
+def test_dispatch_integer_inputs_no_crash(rng):
+    """conv2d/flash_attention used to jnp.finfo() integer dtypes and crash."""
+    i = jnp.asarray(rng.integers(-2, 3, size=(1, 8, 8, 4)), jnp.int32)
+    f = jnp.asarray(rng.integers(-2, 3, size=(3, 3, 4, 8)), jnp.int32)
+    out = dispatch.conv2d(i, f)
+    assert out.shape == (1, 8, 8, 8)
+    assert get_telemetry().count(
+        "conv", {"N": 1, "H": 8, "W": 8, "C": 4, "K": 8, "R": 3, "S": 3,
+                 "dtype_bits": 32}) == 1
+
+
+# ---------------------------------------------------------------------------
+# tuner <-> store integration
+# ---------------------------------------------------------------------------
+
+def test_best_config_is_always_int_dict(tiny_tuner, tmp_path):
+    store = RecordStore.open(tmp_path / "db.jsonl")
+    tuner = dataclasses.replace(tiny_tuner, store=store, _mem_cache={})
+    inputs = gemm_input(896, 896, 32)
+
+    c1 = tuner.best_config(inputs, remeasure=False)       # fresh search
+    assert all(isinstance(v, int) for v in c1.values())
+    assert GEMM_SPACE.contains(c1)
+
+    tuner._mem_cache.clear()
+    c2 = tuner.best_config(inputs, remeasure=False)       # store hit
+    assert c2 == c1
+    assert all(isinstance(v, int) for v in c2.values())
+
+    rec = store.get("gemm", inputs)
+    assert rec.tflops > 0 and rec.latency_us > 0
+    assert rec.backend == backend_fingerprint(tuner.backend)
+
+
+def test_store_survives_process_restart(tiny_tuner, tmp_path):
+    """A second tuner (fresh mem cache) resolves from disk, not by searching."""
+    path = tmp_path / "db.jsonl"
+    inputs = gemm_input(2560, 16, 2560)
+    t1 = dataclasses.replace(tiny_tuner, store=RecordStore.open(path),
+                             _mem_cache={})
+    want = t1.best_config(inputs, remeasure=False)
+
+    t2 = dataclasses.replace(tiny_tuner, store=RecordStore.open(path),
+                             _mem_cache={})
+    t2.search = None                        # any search attempt would raise
+    assert t2.best_config(inputs, remeasure=False) == want
+
+
+def test_legacy_cache_dir_still_works(tiny_tuner, tmp_path):
+    tuner = dataclasses.replace(tiny_tuner, cache_dir=str(tmp_path),
+                                _mem_cache={}, _dir_store=None)
+    inputs = gemm_input(896, 896, 32)
+    c1 = tuner.best_config(inputs, remeasure=False)
+    tuner._mem_cache.clear()
+    assert tuner.best_config(inputs, remeasure=False) == c1
+    assert (tmp_path / "tunedb.jsonl").exists()
+
+
+def test_legacy_per_shape_cache_files_migrate(tiny_tuner, tmp_path):
+    """Pre-store {space}-{key}.json files are honored and promoted."""
+    inputs = gemm_input(777, 128, 512)
+    key = input_key("gemm", inputs)
+    legacy_cfg = {"bm": 64, "bn": 128, "bk": 128, "k_unroll": 1, "k_split": 1,
+                  "order": 0, "acc32": 1, "prefetch": 2}
+    (tmp_path / f"gemm-{key}.json").write_text(json.dumps(legacy_cfg))
+
+    tuner = dataclasses.replace(tiny_tuner, cache_dir=str(tmp_path),
+                                _mem_cache={}, _dir_store=None)
+    tuner.search = None                     # must not need a fresh search
+    cfg = tuner.best_config(inputs, remeasure=False)
+    assert cfg == legacy_cfg
+    rec = RecordStore.open(tmp_path / "tunedb.jsonl").get("gemm", inputs)
+    assert rec is not None and rec.source == "import"
+
+
+# ---------------------------------------------------------------------------
+# sessions
+# ---------------------------------------------------------------------------
+
+def test_session_tunes_hot_shapes_and_resumes(tiny_tuner, tmp_path):
+    tel = ShapeTelemetry()
+    for _ in range(9):
+        tel.record("gemm", gemm_input(2560, 16, 2560))
+    for _ in range(4):
+        tel.record("gemm", gemm_input(512, 512, 512))
+    tel.record("gemm", gemm_input(64, 128, 256))           # cold: not tuned
+
+    store = RecordStore.open(tmp_path / "db.jsonl")
+    progress = tmp_path / "progress.json"
+    s1 = TuningSession(tiny_tuner, store, tel, top_k_shapes=2, workers=2,
+                       remeasure=False, progress_path=progress)
+    r1 = s1.run()
+    assert r1.tuned == 2 and r1.failed == 0
+    assert store.get("gemm", gemm_input(2560, 16, 2560)) is not None
+    assert store.get("gemm", gemm_input(64, 128, 256)) is None
+    assert set(json.loads(progress.read_text())["done"]) == \
+        {rec.key for rec in r1.records}
+
+    # resume: same session plan is fully satisfied -> zero new work
+    s2 = TuningSession(tiny_tuner, store, tel, top_k_shapes=2, workers=2,
+                       remeasure=False, progress_path=progress)
+    r2 = s2.run()
+    assert r2.tuned == 0 and r2.skipped == 2
+
+
+def test_session_explicit_shapes_and_job_isolation(tiny_tuner, tmp_path):
+    store = RecordStore.open(tmp_path / "db.jsonl")
+    s = TuningSession(tiny_tuner, store, None, remeasure=False, workers=2)
+    # malformed shape (missing dtype_bits) -> that job fails, session survives
+    bad = {"M": 512, "N": 512, "K": 512}
+    r = s.run(shapes=[gemm_input(512, 512, 512), bad])
+    assert r.tuned == 1 and r.failed == 1 and len(r.errors) == 1
+    assert store.get("gemm", gemm_input(512, 512, 512)) is not None
+
+
+# ---------------------------------------------------------------------------
+# dispatch fallback + end-to-end round trip
+# ---------------------------------------------------------------------------
+
+def test_dispatch_falls_back_to_store_without_tuner(rng):
+    store = RecordStore()
+    store.add(_rec(64, 128, 128, bm=32, bits=32))
+    install_store(store)
+
+    a = jnp.asarray(rng.normal(size=(64, 128)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(128, 128)) / 12.0, jnp.float32)
+    got = np.asarray(dispatch.matmul(a, b, prefer_kernel=True), np.float32)
+    want = np.asarray(ref.matmul_ref(a, b), np.float32)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    assert store.hits == 1
+
+    # nearest-shape: novel M rides its neighbor's config (ops clamps blocks)
+    a2 = jnp.asarray(rng.normal(size=(48, 128)), jnp.float32)
+    got2 = np.asarray(dispatch.matmul(a2, b, prefer_kernel=True), np.float32)
+    np.testing.assert_allclose(got2, np.asarray(ref.matmul_ref(a2, b)),
+                               rtol=1e-4, atol=1e-4)
+    assert store.nearest_hits == 1
+
+
+def test_e2e_telemetry_session_warmstart(tiny_tuner, tmp_path, rng):
+    """The acceptance loop: dispatch populates telemetry, a session tunes the
+    hot shapes into a store, and a 'fresh process' (cleared globals, store
+    reopened from disk) serves the same shapes from store hits alone."""
+    db = tmp_path / "tunedb.jsonl"
+    a = jnp.asarray(rng.normal(size=(256, 512)), jnp.bfloat16)
+    b = jnp.asarray(rng.normal(size=(512, 256)) / 23.0, jnp.bfloat16)
+
+    # 1. traffic hits the dispatcher -> telemetry
+    for _ in range(4):
+        dispatch.matmul(a, b)
+    assert get_telemetry().count("gemm", gemm_input(256, 256, 512)) == 4
+
+    # 2. session tunes the hottest shapes into the store
+    store = RecordStore.open(db)
+    report = TuningSession(tiny_tuner, store, get_telemetry(),
+                           top_k_shapes=1, remeasure=False).run()
+    assert report.tuned == 1
+
+    # 3. "fresh process": no tuner, no globals; warm-start from the store
+    clear_tuners()
+    clear_store()
+    clear_telemetry()
+    fresh = RecordStore.open(db)
+    install_store(fresh)
+    got = np.asarray(dispatch.matmul(a, b, prefer_kernel=True), np.float32)
+    want = np.asarray(ref.matmul_ref(a, b), np.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+    assert fresh.hits == 1 and fresh.misses == 0
+
+
+def test_engine_warmstart_installs_store(tmp_path):
+    import jax
+
+    from repro.models import ModelConfig, init_params
+    from repro.serve import Engine, ServeConfig
+    from repro.tunedb.store import get_store
+
+    db = tmp_path / "serve.jsonl"
+    RecordStore.open(db).add(_rec(512, 16, 2048))
+    cfg = ModelConfig(name="t", n_layers=1, d_model=32, n_heads=2, n_kv=1,
+                      d_ff=64, vocab=64, dtype=jnp.float32, attn_chunk=16,
+                      logit_chunk=16, remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = Engine(cfg, params, ServeConfig(max_len=32, slots=1,
+                                             tunedb=str(db)))
+    assert get_store() is engine.tunedb_store
+    assert len(engine.tunedb_store) == 1
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_tune_stats_export_merge(tmp_path, capsys):
+    tel = ShapeTelemetry()
+    for _ in range(3):
+        tel.record("gemm", gemm_input(512, 16, 512))
+    tel.record("gemm", gemm_input(128, 128, 128))
+    tel_path = tmp_path / "tel.json"
+    tel.save(tel_path)
+    db = tmp_path / "db.jsonl"
+
+    rc = tunedb_main([
+        "tune", "--space", "gemm", "--shapes-from-telemetry",
+        "--telemetry", str(tel_path), "--store", str(db),
+        "--top-k", "1", "--workers", "1", "--train-samples", "400",
+        "--epochs", "2", "--no-remeasure",
+        "--shape", "M=256,N=128,K=256"])
+    assert rc == 0
+    store = RecordStore.open(db)
+    assert store.get("gemm", gemm_input(512, 16, 512)) is not None
+    assert store.get("gemm", gemm_input(256, 128, 256)) is not None
+
+    capsys.readouterr()                            # drain tune's output
+    assert tunedb_main(["stats", "--store", str(db),
+                        "--telemetry", str(tel_path)]) == 0
+    stats = json.loads(capsys.readouterr().out)
+    assert stats["store"]["shapes"] == 2
+    assert stats["telemetry"]["spaces"]["gemm"]["calls"] == 4
+
+    out = tmp_path / "export.jsonl"
+    assert tunedb_main(["export", "--store", str(db),
+                        "--out", str(out)]) == 0
+    assert len(RecordStore.open(out)) == 2
+
+    merged = tmp_path / "merged.jsonl"
+    assert tunedb_main(["merge", str(db), str(out),
+                        "--out", str(merged)]) == 0
+    assert len(RecordStore.open(merged)) == 2
+
+
+def test_cli_rejects_bad_shape(tmp_path):
+    with pytest.raises(SystemExit):
+        tunedb_main(["tune", "--space", "gemm", "--store",
+                     str(tmp_path / "db.jsonl"), "--shape", "M=128"])
+    # --shapes-from-telemetry without --telemetry: clean error, no traceback
+    with pytest.raises(SystemExit):
+        tunedb_main(["tune", "--space", "gemm", "--store",
+                     str(tmp_path / "db.jsonl"), "--shapes-from-telemetry"])
