@@ -8,7 +8,6 @@ import numpy as np
 
 from repro.core.backend import SimulatedTPUBackend
 from repro.core.heuristics import VendorHeuristicLibrary
-from repro.core.search import oracle_search
 from repro.core.space import CONV_SPACE, conv_input
 from .common import get_trained_tuner, save, table
 

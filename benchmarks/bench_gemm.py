@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.core.backend import SimulatedTPUBackend
 from repro.core.heuristics import VendorHeuristicLibrary
-from repro.core.search import enumerate_legal, oracle_search
+from repro.core.search import oracle_search
 from repro.core.space import GEMM_SPACE, gemm_input
 from .common import get_trained_tuner, save, table
 

@@ -6,11 +6,8 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from repro.core.backend import InterpretBackend, WallClockBackend
-from repro.core.space import (ATTENTION_SPACE, CONV_SPACE, GEMM_SPACE,
-                              SSD_SPACE, conv_input, gemm_input)
+from repro.core.space import conv_input, gemm_input
 from .common import get_trained_tuner, save, table
 
 

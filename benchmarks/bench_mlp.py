@@ -4,8 +4,6 @@ Fig. 5 (cross-validation MSE vs dataset size)."""
 from __future__ import annotations
 
 import jax
-import numpy as np
-
 from repro.core.backend import SimulatedTPUBackend
 from repro.core.dataset import generate_dataset
 from repro.core.features import Featurizer, target_transform

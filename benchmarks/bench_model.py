@@ -1,0 +1,233 @@
+"""E11 — model-guided dispatch: resolution quality and hot-path overhead.
+
+Two CI gates guard serving the learned performance model (tunedb/model.py)
+from the dispatch path:
+
+  1. QUALITY — on *held-out* input shapes (absent from the store, so the
+     exact-hit tier cannot serve them), the model-guided pick must reach
+     >= 90% of the oracle-best measured TFLOPS (geomean).  The oracle is an
+     exhaustive noise-free scan of every legal config — the "10 hours on
+     hardware" baseline of §6.  Nearest-neighbor and vendor-heuristic picks
+     are reported alongside: the claim worth gating is that the regressor
+     generalizes across input shapes, not just that it exists.
+
+  2. OVERHEAD — on the interpret-mode dispatch path, steady-state
+     model-guided resolution (a per-shape memo hit after the first
+     §6 search) must add < 10% of a dispatch call over plain
+     nearest-neighbor resolution.  The one-time cold search cost is
+     reported for context; it is paid once per novel shape.
+
+The training store mirrors what a tuning fleet accumulates: one tuned best
+per hot shape, the session's measured top-k (source="sample"), plus
+exploration samples (model.collect_samples) — then `train_models` distills
+it exactly as ``python -m repro.tunedb train`` would.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.backend import SimulatedTPUBackend
+from repro.core.heuristics import VendorHeuristicLibrary
+from repro.core.search import enumerate_legal
+from repro.core.space import GEMM_SPACE, gemm_input
+from repro.core.tuner import clear_tuners
+from repro.kernels import dispatch
+from repro.tunedb import (RecordStore, TuneRecord, clear_store,
+                          clear_telemetry, install_store)
+from repro.tunedb.model import (ModelSet, clear_models, collect_samples,
+                                install_models, train_models)
+from repro.tunedb.session import backend_fingerprint
+
+from .common import save, table
+
+QUALITY_THRESHOLD = 0.90        # geomean fraction of oracle-best TFLOPS
+OVERHEAD_THRESHOLD = 0.10       # added resolution cost / dispatch call
+
+# the tuned grid a fleet would have covered (hot shapes) ...
+TRAIN_SHAPES = [(m, n, k)
+                for m in (256, 1024, 4096)
+                for n in (16, 32, 64, 128, 256, 512, 1024)
+                for k in (512, 2560)]
+# ... and the off-grid shapes serving traffic springs on it
+HELDOUT_SHAPES = [(512, 64, 2560), (2048, 32, 1024), (768, 192, 768),
+                  (1536, 128, 1536), (3072, 16, 2048), (640, 512, 640)]
+
+
+def _geomean(xs) -> float:
+    return float(np.exp(np.mean(np.log(np.maximum(xs, 1e-9)))))
+
+
+def _build_store(label: SimulatedTPUBackend, fp: str, topk_samples: int
+                 ) -> RecordStore:
+    """One tuned best + measured top-k per train shape (a session's output)."""
+    store = RecordStore()
+    for m, n, k in TRAIN_SHAPES:
+        inputs = gemm_input(m, n, k)
+        legal = enumerate_legal(GEMM_SPACE, inputs)
+        scored = sorted(((c, label.measure("gemm", c, inputs)) for c in legal),
+                        key=lambda t: -t[1])
+        best_cfg, best_tf = scored[0]
+        store.add(TuneRecord(space="gemm", inputs=inputs, config=best_cfg,
+                             tflops=best_tf, backend=fp, source="session"))
+        for cfg, tf in scored[1:1 + topk_samples]:
+            store.add(TuneRecord(space="gemm", inputs=inputs,
+                                 config=dict(cfg), tflops=tf, backend=fp,
+                                 source="sample"))
+    return store
+
+
+def _quality(store: RecordStore, models: ModelSet, fp: str,
+             label: SimulatedTPUBackend) -> dict:
+    oracle = SimulatedTPUBackend(noise=0.0)
+    vendor = VendorHeuristicLibrary.gemm(GEMM_SPACE)
+    rows, ratios, pure, nn_ratios, heur_ratios = [], [], [], [], []
+    pure_models = ModelSet()            # same weights, no re-measure pass
+    pure_models.models = models.models
+    for m, n, k in HELDOUT_SHAPES:
+        inputs = gemm_input(m, n, k)
+        cands = enumerate_legal(GEMM_SPACE, inputs)
+        best = max(oracle.measure("gemm", c, inputs) for c in cands)
+
+        cfg, _ = models.predict("gemm", inputs, backend=fp)
+        r_model = oracle.measure("gemm", cfg, inputs) / best
+        p_cfg, _ = pure_models.predict("gemm", inputs, backend=fp)
+        r_pure = oracle.measure("gemm", p_cfg, inputs) / best
+        rec = store.nearest("gemm", inputs, backend=fp)
+        r_nn = (oracle.measure("gemm", rec.config, inputs) / best
+                if rec else 0.0)
+        r_heur = oracle.measure("gemm", vendor.select(inputs), inputs) / best
+
+        ratios.append(r_model)
+        pure.append(r_pure)
+        nn_ratios.append(r_nn)
+        heur_ratios.append(r_heur)
+        rows.append({"shape": f"{m}x{n}x{k}",
+                     "model": f"{r_model:.3f}",
+                     "model (no re-measure)": f"{r_pure:.3f}",
+                     "nearest": f"{r_nn:.3f}",
+                     "heuristic": f"{r_heur:.3f}",
+                     "legal configs": len(cands)})
+    g = _geomean(ratios)
+    print(table(rows, ["shape", "model", "model (no re-measure)", "nearest",
+                       "heuristic", "legal configs"],
+                "E11 — fraction of oracle-best TFLOPS on held-out shapes"))
+    print(f"\ngeomean: model {g:.3f} | pure model {_geomean(pure):.3f} | "
+          f"nearest {_geomean(nn_ratios):.3f} | "
+          f"heuristic {_geomean(heur_ratios):.3f}")
+    return {"geomean": g, "geomean_pure_model": _geomean(pure),
+            "geomean_nearest": _geomean(nn_ratios),
+            "geomean_heuristic": _geomean(heur_ratios),
+            "min": float(min(ratios)), "rows": rows,
+            "threshold": QUALITY_THRESHOLD,
+            "pass": g >= QUALITY_THRESHOLD}
+
+
+def _time_per_call(fn, iters: int) -> float:
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def _overhead(models: ModelSet, fast: bool) -> dict:
+    """Interpret-mode dispatch: model-tier resolution vs nearest-neighbor."""
+    import jax.numpy as jnp
+    iters = 300 if fast else 3000
+    CFG = {"bm": 64, "bn": 128, "bk": 128, "k_unroll": 1, "k_split": 1,
+           "order": 0, "acc32": 1, "prefetch": 2}
+
+    # a small store whose records neighbor (but never exactly hit) the
+    # dispatched shape, as in bench_tunedb
+    store = RecordStore()
+    for m in (64, 128, 256, 512):
+        for k in (128, 256, 512):
+            store.add(TuneRecord(space="gemm",
+                                 inputs=gemm_input(m, 128, k, 32),
+                                 config=CFG, tflops=1.0))
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(96, 192)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(192, 128)), jnp.float32)
+    inputs = gemm_input(96, 128, 192, 32)    # novel: no exact record
+
+    install_store(store)
+    clear_models()
+    t_dispatch = _time_per_call(
+        lambda: np.asarray(dispatch.matmul(a, b, prefer_kernel=True)),
+        max(iters // 60, 5))
+    t_nn = _time_per_call(
+        lambda: dispatch._tuned_cfg("gemm", inputs), iters)
+
+    install_models(models)
+    t_cold0 = time.perf_counter()
+    assert dispatch._tuned_cfg("gemm", inputs) is not None
+    t_cold = time.perf_counter() - t_cold0       # one §6 search + re-measure
+    t_model = _time_per_call(
+        lambda: dispatch._tuned_cfg("gemm", inputs), iters)
+    clear_models()
+    clear_store()
+
+    added = max(t_model - t_nn, 0.0) / t_dispatch
+    rows = [
+        {"path": "interpret dispatch (kernel call)",
+         "cost": f"{t_dispatch*1e3:.2f} ms"},
+        {"path": "resolution: nearest-neighbor (memoized)",
+         "cost": f"{t_nn*1e6:.1f} us"},
+        {"path": "resolution: model-guided (memoized)",
+         "cost": f"{t_model*1e6:.1f} us"},
+        {"path": "resolution: model-guided (cold, once per novel shape)",
+         "cost": f"{t_cold*1e3:.1f} ms"},
+    ]
+    print()
+    print(table(rows, ["path", "cost"],
+                "E11 — dispatch-path resolution overhead"))
+    print(f"\nmodel tier adds {added*100:.3f}% of a dispatch call "
+          f"(gate < {OVERHEAD_THRESHOLD:.0%})")
+    return {"dispatch_ms": t_dispatch * 1e3, "nn_resolve_us": t_nn * 1e6,
+            "model_resolve_us": t_model * 1e6, "cold_model_ms": t_cold * 1e3,
+            "added_frac": added, "threshold": OVERHEAD_THRESHOLD,
+            "pass": added < OVERHEAD_THRESHOLD}
+
+
+def run(fast: bool = True) -> dict:
+    clear_tuners()
+    clear_store()
+    clear_models()
+    clear_telemetry()
+
+    label = SimulatedTPUBackend(noise=0.03)
+    fp = backend_fingerprint(label)
+    topk, per_shape, epochs = (14, 80, 120) if fast else (30, 150, 200)
+
+    t0 = time.time()
+    store = _build_store(label, fp, topk)
+    n = collect_samples(store, label, per_shape=per_shape, seed=0)
+    print(f"[model] store: {len(store)} tuned shapes, "
+          f"{store.n_samples} samples ({n} exploration) "
+          f"in {time.time()-t0:.1f}s")
+    t0 = time.time()
+    models = train_models(store, epochs=epochs, hidden=(64, 128, 64), seed=0)
+    models.measurer = label.measure     # §6 top-k re-measurement at serve
+    pm = models.resolve_model("gemm", fp)
+    print(f"[model] trained on {pm.meta['n_samples']} samples, "
+          f"val mse {pm.meta['val_mse']:.4f} in {time.time()-t0:.1f}s\n")
+
+    quality = _quality(store, models, fp, label)
+    overhead = _overhead(models, fast)
+
+    ok = quality["pass"] and overhead["pass"]
+    print(f"\nacceptance: quality {'PASS' if quality['pass'] else 'FAIL'} "
+          f"(geomean {quality['geomean']:.3f} >= {QUALITY_THRESHOLD}), "
+          f"overhead {'PASS' if overhead['pass'] else 'FAIL'} "
+          f"({overhead['added_frac']*100:.3f}% < {OVERHEAD_THRESHOLD:.0%})")
+    payload = {"quality": quality, "overhead": overhead, "pass": ok}
+    save("model", payload)
+    clear_telemetry()
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -7,7 +7,7 @@ skinny-N DeepBench."""
 
 from __future__ import annotations
 
-from repro.core.space import GEMM_SPACE, gemm_input
+from repro.core.space import gemm_input
 from .common import get_trained_tuner, save, table
 
 PROBLEMS = [

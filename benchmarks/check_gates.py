@@ -1,0 +1,138 @@
+"""Validate every benchmark pass/fail gate in ``results/bench/*.json``.
+
+One place defines what "CI green" means for the performance trajectory:
+each known gate names the result file it reads, the field it checks, and a
+human-readable statement of the bound.  Any result file carrying a
+top-level ``"pass"`` field is additionally held to it, so a new benchmark
+that records a verdict is gated without touching this file.
+
+Usage:
+  $ python -m benchmarks.run --only tunedb,model
+  $ python -m benchmarks.check_gates --require tunedb,model
+
+Exit code 0 iff every required file exists and every gate holds.  CI and
+local runs call exactly this — no inline-CI-heredoc drift.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+from typing import Callable, Dict, List, Optional
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "bench"
+
+
+@dataclasses.dataclass(frozen=True)
+class Gate:
+    file: str                                 # results/bench/<file>.json
+    name: str                                 # what the bound promises
+    check: Callable[[dict], bool]
+    detail: Callable[[dict], str]             # measured-vs-bound, for the report
+
+
+def _get(r: dict, *path, default=None):
+    for p in path:
+        if not isinstance(r, dict) or p not in r:
+            return default
+        r = r[p]
+    return r
+
+
+GATES: List[Gate] = [
+    Gate(
+        file="tunedb",
+        name="store-lookup overhead < 5% of interpret dispatch",
+        check=lambda r: r["overhead_frac"] < 0.05,
+        detail=lambda r: f"{r['overhead_frac']:.3%} of dispatch",
+    ),
+    Gate(
+        file="model",
+        name="model-guided config >= 90% of oracle TFLOPS (geomean, held-out)",
+        check=lambda r: _get(r, "quality", "pass") is True,
+        detail=lambda r: (
+            f"geomean {_get(r, 'quality', 'geomean', default=0):.3f} "
+            f"(threshold {_get(r, 'quality', 'threshold', default=0.9)}, "
+            f"nearest-neighbor "
+            f"{_get(r, 'quality', 'geomean_nearest', default=0):.3f})"),
+    ),
+    Gate(
+        file="model",
+        name="model resolution adds < 10% over nearest-neighbor dispatch",
+        check=lambda r: _get(r, "overhead", "pass") is True,
+        detail=lambda r: (
+            f"adds {_get(r, 'overhead', 'added_frac', default=1):.3%} "
+            f"of a dispatch call (cold search "
+            f"{_get(r, 'overhead', 'cold_model_ms', default=0):.0f} ms, "
+            "paid once per novel shape)"),
+    ),
+]
+
+
+def check(results_dir: pathlib.Path = RESULTS,
+          require: Optional[List[str]] = None) -> int:
+    """Run every applicable gate; print the report; return the exit code."""
+    results: Dict[str, dict] = {}
+    failures = 0
+    for path in sorted(results_dir.glob("*.json")) if results_dir.is_dir() \
+            else []:
+        try:
+            results[path.stem] = json.loads(path.read_text())
+        except ValueError:
+            # a torn result is a failed gate, not a skipped one
+            print(f"[gate] FAIL {path.name}: unparseable JSON")
+            results[path.stem] = None
+            failures += 1
+    for name in sorted(require or []):
+        if name not in results:
+            print(f"[gate] FAIL {name}.json: required result file missing "
+                  f"(run `python -m benchmarks.run --only {name}`)")
+            failures += 1
+
+    seen_specific = set()
+    for gate in GATES:
+        r = results.get(gate.file)
+        if r is None:
+            continue                   # absent (or unparseable, counted above)
+        seen_specific.add(gate.file)
+        try:
+            ok = bool(gate.check(r))
+            detail = gate.detail(r)
+        except (KeyError, TypeError) as e:
+            ok, detail = False, f"malformed result ({type(e).__name__}: {e})"
+        print(f"[gate] {'ok  ' if ok else 'FAIL'} {gate.file}.json: "
+              f"{gate.name} — {detail}")
+        failures += 0 if ok else 1
+
+    # generic: any other result that records its own verdict is held to it
+    for name, r in sorted(results.items()):
+        if name in seen_specific or not isinstance(r, dict) or "pass" not in r:
+            continue
+        ok = r["pass"] is True
+        print(f"[gate] {'ok  ' if ok else 'FAIL'} {name}.json: "
+              f"self-reported pass field")
+        failures += 0 if ok else 1
+
+    print(f"\n{failures} gate failure(s)" if failures
+          else "\nall gates pass")
+    return 1 if failures else 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m benchmarks.check_gates",
+        description=__doc__.splitlines()[0])
+    p.add_argument("--results", default=str(RESULTS),
+                   help="results directory (default: results/bench)")
+    p.add_argument("--require", default="",
+                   help="comma-separated result files that MUST exist, "
+                        "e.g. tunedb,model")
+    args = p.parse_args(argv)
+    require = [s for s in args.require.split(",") if s]
+    return check(pathlib.Path(args.results), require)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -5,9 +5,7 @@ from __future__ import annotations
 import json
 import pathlib
 import time
-from typing import Dict, List, Optional
-
-import numpy as np
+from typing import Dict, List
 
 RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "bench"
 

@@ -64,8 +64,8 @@ def roofline_table() -> str:
 
 
 def perf_compare(arch, shape, mesh, tags):
-    rows = [f"| config | t_compute | t_memory | t_collective | bottleneck |"
-            f" roofline frac | coll GiB/dev |",
+    rows = ["| config | t_compute | t_memory | t_collective | bottleneck |"
+            " roofline frac | coll GiB/dev |",
             "|---|---|---|---|---|---|---|"]
     for tag in tags:
         t = f"--{tag}" if tag else ""

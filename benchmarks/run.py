@@ -7,6 +7,9 @@ One benchmark per paper table/figure (DESIGN.md §8 experiment index):
   E7 kernels   — §3 correctness harness
   E9 roofline  — from dry-run artifacts (run launch.dryrun first)
   E10 tunedb   — record-store lookup overhead on the dispatch hot path
+  E11 model    — model-guided dispatch: quality vs oracle + overhead
+
+Gate validation: ``python -m benchmarks.check_gates`` after a run.
 """
 
 from __future__ import annotations
@@ -25,8 +28,8 @@ def main() -> None:
     fast = not args.full
 
     from . import (bench_conv, bench_gemm, bench_kernels, bench_mlp,
-                   bench_roofline, bench_sampler, bench_selection,
-                   bench_tunedb)
+                   bench_model, bench_roofline, bench_sampler,
+                   bench_selection, bench_tunedb)
     suites = {
         "sampler": lambda: bench_sampler.run(fast),
         "mlp": lambda: bench_mlp.run(fast),
@@ -37,6 +40,7 @@ def main() -> None:
         "kernels": lambda: bench_kernels.run(fast),
         "roofline": lambda: bench_roofline.run(fast),
         "tunedb": lambda: bench_tunedb.run(fast),
+        "model": lambda: bench_model.run(fast),
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     t_all = time.time()

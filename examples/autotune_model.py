@@ -57,7 +57,7 @@ def main():
     args = p.parse_args()
 
     cfg = get_config(args.arch)
-    print(f"== tuner training (once per device generation) ==")
+    print("== tuner training (once per device generation) ==")
     tuner = InputAwareTuner.train(GEMM_SPACE, n_samples=6000,
                                   hidden=(64, 128, 64), epochs=20,
                                   cache_dir=args.cache_dir)

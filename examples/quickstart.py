@@ -9,7 +9,6 @@
    the top-k, cache the winner (paper §6).
 """
 
-import numpy as np
 
 from repro.core.backend import SimulatedTPUBackend
 from repro.core.space import GEMM_SPACE, gemm_input

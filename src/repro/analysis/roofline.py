@@ -17,8 +17,7 @@ The ratio MODEL_FLOPS / (HLO_FLOPs * chips) flags remat/redundancy waste.
 from __future__ import annotations
 
 import dataclasses
-import json
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 PEAK_FLOPS_BF16 = 197e12          # per chip
 HBM_BW = 819e9                    # bytes/s per chip

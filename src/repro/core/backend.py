@@ -28,11 +28,9 @@ import dataclasses
 import hashlib
 import math
 import time
-from typing import Callable, Dict, Mapping, Optional
+from typing import Mapping
 
-import numpy as np
-
-from .space import SPACES, conv_out_shape, gemm_vmem_bytes
+from .space import conv_out_shape
 
 # ---------------------------------------------------------------------------
 # TPU v5e hardware constants (the TARGET; the grading constants of the task).
@@ -396,7 +394,6 @@ class InterpretBackend:
 
     def measure(self, space_name: str, cfg: Mapping[str, int],
                 inputs: Mapping[str, int]) -> float:
-        import numpy as np
         from repro.kernels import dispatch
         dispatch.check_config(space_name, dict(cfg), dict(inputs),
                               rtol=self.rtol)

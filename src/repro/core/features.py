@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -96,4 +96,7 @@ def target_transform(y_tflops: np.ndarray) -> np.ndarray:
 
 
 def target_untransform(y_log: np.ndarray) -> np.ndarray:
-    return np.exp2(y_log)
+    # clip to a physically absurd ceiling (2^40 TFLOPS) so a regressor
+    # extrapolating far off its training manifold saturates instead of
+    # overflowing to inf and poisoning downstream argmax/geomean math
+    return np.exp2(np.minimum(y_log, 40.0))

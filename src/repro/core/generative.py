@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Dict, List, Mapping, Optional, Tuple
+from typing import Dict, List, Mapping, Optional
 
 import numpy as np
 

@@ -21,7 +21,7 @@ Two query modes mirror the paper's protocol:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Mapping, Optional, Tuple
+from typing import Callable, List, Mapping, Tuple
 
 from .space import Config, ParamSpace
 

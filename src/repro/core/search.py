@@ -12,7 +12,7 @@ noise.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Callable, List, Mapping, Optional, Tuple
 
 import numpy as np
 
@@ -28,6 +28,10 @@ class SearchResult:
     measured_tflops: Optional[float]
     top_k: List[Tuple[Config, float]]           # (config, predicted)
     n_candidates: int
+    # every (config, measured) pair from the top-k re-measurement pass: each
+    # one is a labeled training point for the performance model (model.py),
+    # so sessions commit them to the store as source="sample" records.
+    measured: Optional[List[Tuple[Config, float]]] = None
 
 
 def enumerate_legal(space: ParamSpace, inputs: Mapping[str, int],
@@ -70,7 +74,7 @@ def exhaustive_search(space: ParamSpace, inputs: Mapping[str, int], *,
         best_pred = next(p for c, p in top if c == best_cfg)
         return SearchResult(best=best_cfg, predicted_tflops=best_pred,
                             measured_tflops=best_m, top_k=top,
-                            n_candidates=len(cands))
+                            n_candidates=len(cands), measured=measured)
     best_cfg, best_pred = top[0]
     return SearchResult(best=best_cfg, predicted_tflops=best_pred,
                         measured_tflops=None, top_k=top,

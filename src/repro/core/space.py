@@ -18,8 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-import math
-from typing import Callable, Dict, Iterable, List, Mapping, Sequence, Tuple
+from typing import Callable, Dict, Iterable, List, Mapping, Tuple
 
 # ---------------------------------------------------------------------------
 # Hardware constants for legality checks (TPU v5e target; see DESIGN.md §2).

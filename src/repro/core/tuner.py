@@ -19,20 +19,18 @@ from __future__ import annotations
 import dataclasses
 import os
 import pathlib
-from typing import Callable, Dict, List, Mapping, Optional, Tuple
-
-import numpy as np
+from typing import Dict, Mapping, Optional, Tuple
 
 from repro.tunedb.store import (RecordStore, TuneRecord, input_key,
                                 normalize_config)
 
 from .backend import SimulatedTPUBackend
-from .dataset import Dataset, generate_dataset
+from .dataset import generate_dataset
 from .features import Featurizer
 from .generative import CategoricalSampler
 from .mlp import MLP
 from .search import SearchResult, exhaustive_search
-from .space import SPACES, Config, ParamSpace
+from .space import Config, ParamSpace
 
 DEFAULT_CACHE = os.path.expanduser("~/.cache/repro-isaac")
 
@@ -93,6 +91,11 @@ class InputAwareTuner:
             return self._dir_store
         return None
 
+    def _fingerprint(self) -> str:
+        """This tuner's backend fingerprint — its store-lookup dimension."""
+        from repro.tunedb.session import backend_fingerprint
+        return backend_fingerprint(self.backend)
+
     def _migrate_legacy_cache(self, key: str, inputs: Mapping[str, int],
                               store: Optional[RecordStore]
                               ) -> Optional[Config]:
@@ -127,7 +130,10 @@ class InputAwareTuner:
             return self._mem_cache[key]
         store = self._resolve_store()
         if store is not None:
-            rec = store.get(self.space.name, inputs)
+            # fingerprint-scoped: another backend's record is not THIS
+            # backend's answer — search (below) writes our own record instead
+            rec = store.get(self.space.name, inputs,
+                            backend=self._fingerprint())
             if rec is not None:
                 cfg = normalize_config(rec.config)
                 self._mem_cache[key] = cfg

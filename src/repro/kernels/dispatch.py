@@ -13,6 +13,7 @@ InterpretBackend and the test suite.
 
 from __future__ import annotations
 
+import warnings
 from typing import Dict, Mapping, Optional
 
 import jax
@@ -26,6 +27,44 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+# one warning per (reason, space): a degraded serving process says so once,
+# then keeps serving on the heuristic tier instead of spamming or crashing.
+_WARNED: set = set()
+
+
+def _warn_once(key: tuple, msg: str) -> None:
+    if key not in _WARNED:
+        _WARNED.add(key)
+        warnings.warn(msg, RuntimeWarning, stacklevel=3)
+
+
+def reset_fallback_warnings() -> None:
+    """Re-arm the warn-once latches (tests; store/model reinstall)."""
+    _WARNED.clear()
+
+
+_HEURISTIC_LIBS: Dict[str, object] = {}
+
+
+def _heuristic_cfg(space_name: str, inputs: Mapping[str, int]
+                   ) -> Optional[Dict[str, int]]:
+    """Last-resort config: the vendor-style size-bucket heuristics.
+
+    Serving keeps running — slower, never wrong — when every tuned tier
+    (store record, model, nearest neighbor) comes up empty.
+    """
+    if space_name not in ("gemm", "conv"):
+        return None                     # ops-layer defaults cover attn/ssd
+    lib = _HEURISTIC_LIBS.get(space_name)
+    if lib is None:
+        from repro.core.heuristics import VendorHeuristicLibrary
+        from repro.core.space import SPACES
+        maker = (VendorHeuristicLibrary.gemm if space_name == "gemm"
+                 else VendorHeuristicLibrary.conv)
+        lib = _HEURISTIC_LIBS[space_name] = maker(SPACES[space_name])
+    return dict(lib.select(inputs))
+
+
 def _dtype_bits(dtype) -> int:
     """Bit width of a dtype; safe on integer inputs (jnp.finfo floats only)."""
     if jnp.issubdtype(dtype, jnp.floating):
@@ -37,24 +76,50 @@ def _dtype_bits(dtype) -> int:
 
 def _tuned_cfg(space_name: str, inputs: Mapping[str, int]
                ) -> Optional[Dict[str, int]]:
-    """Config resolution: installed tuner, else nearest tunedb record.
+    """Three-tier config resolution for a serving process with no tuner:
 
-    The store fallback is what lets a serving process with NO tuner in it
-    (engine warm-start) still run tuned kernels: exact shape hits return the
-    committed config, novel shapes borrow their nearest tuned neighbor and
-    rely on the ops-layer block clamping for runnability.
+      1. exact record hit   — the store's fingerprint-keyed index;
+      2. model-guided       — the per-(space, backend) performance regressor
+                              scores every legal config in one batched MLP
+                              forward pass (paper §6) and its pick is
+                              memoized per shape;
+      3. nearest neighbor   — the closest tuned shape's config, the pre-model
+                              fallback, now only for shapes the model tier
+                              cannot serve (no trained model, no legal cfg).
+
+    An installed tuner (training/benchmark processes) short-circuits all of
+    it.  If every tier misses but tuned serving was *configured* (a store or
+    models are installed), dispatch degrades to the vendor-style heuristics
+    and warns once — a missing/torn store file or an unreadable model
+    artifact must never take serving down.
     """
     from repro.core.tuner import get_tuner
     tuner = get_tuner(space_name)
     if tuner is not None:
         return tuner.best_config(inputs, remeasure=False)
-    from repro.tunedb.store import get_store
+    from repro.tunedb.model import get_models
+    from repro.tunedb.store import active_fingerprint, get_store
     store = get_store()
+    models = get_models()
+    if store is None and models is None:
+        return None                      # untuned process: ops defaults
+    fp = active_fingerprint()
     if store is not None:
-        rec = store.nearest(space_name, inputs)   # memoized inside the store
-        if rec is not None:
+        rec = store.get(space_name, inputs, backend=fp)
+        if rec is not None:              # tier 1: exact record hit
             return dict(rec.config)
-    return None
+    if models is not None:
+        got = models.predict(space_name, inputs, backend=fp)
+        if got is not None:              # tier 2: model-guided search
+            return dict(got[0])
+    if store is not None:
+        rec = store.nearest(space_name, inputs, backend=fp)
+        if rec is not None:              # tier 3: nearest tuned neighbor
+            return dict(rec.config)
+    _warn_once(("untuned", space_name),
+               f"tunedb: no record, model, or neighbor for a {space_name} "
+               f"shape {dict(inputs)}; serving on vendor heuristics")
+    return _heuristic_cfg(space_name, inputs)
 
 
 def _record(space_name: str, inputs: Mapping[str, int]) -> None:

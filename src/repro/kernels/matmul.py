@@ -25,7 +25,7 @@ simulator charges that padding via its alignment-efficiency terms).
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Mapping
+from typing import Mapping
 
 import jax
 import jax.numpy as jnp

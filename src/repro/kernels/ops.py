@@ -5,7 +5,6 @@ models call them through ``dispatch`` which injects tuned configurations.
 
 from __future__ import annotations
 
-import functools
 from typing import Mapping, Optional
 
 import jax

@@ -17,10 +17,8 @@ os.environ.setdefault(
     "--xla_tpu_enable_latency_hiding_scheduler=true")
 
 import argparse
-import dataclasses
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_NAMES, get_config, smoke_config
 from repro.data import DataConfig

@@ -27,7 +27,7 @@ targets (DESIGN.md §5).
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

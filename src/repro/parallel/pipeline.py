@@ -15,12 +15,11 @@ broadcast back at the end (psum over a one-hot mask).
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Tuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 

@@ -17,7 +17,7 @@ exactness is correctness, not merely efficiency, for hybrid/SSM archs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +34,12 @@ class ServeConfig:
     temperature: float = 0.0        # 0 => greedy
     seed: int = 0
     tunedb: Optional[str] = None    # warm-start: tuning-record store path
+    # model artifacts dir for model-guided dispatch; None auto-discovers the
+    # store's sibling `<tunedb>.models/` dir, "" disables the model tier
+    tunedb_models: Optional[str] = None
+    # pin dispatch lookups to one backend fingerprint (multi-backend stores);
+    # None keeps the any-backend single-backend behavior
+    tunedb_backend: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -46,17 +52,52 @@ class Request:
 class Engine:
     def __init__(self, cfg: ModelConfig, params: Any, serve_cfg: ServeConfig):
         self.cfg, self.params, self.sc = cfg, params, serve_cfg
-        # Warm start (tunedb): install the record store so kernel dispatch
-        # resolves tuned configs from day-one traffic without any tuner (or
-        # its training cost) in the serving process.  Like install_tuner, the
-        # store is PROCESS-GLOBAL dispatch state: a later Engine with a
-        # tunedb path retargets it, tunedb=None leaves it untouched, and
-        # repro.tunedb.clear_store() uninstalls it.
+        # Warm start (tunedb): install the record store + model artifacts so
+        # kernel dispatch resolves tuned configs from day-one traffic without
+        # any tuner (or its training cost) in the serving process.  Like
+        # install_tuner, both are PROCESS-GLOBAL dispatch state: a later
+        # Engine with a tunedb path retargets them, tunedb=None leaves them
+        # untouched, and repro.tunedb.clear_store()/clear_models()
+        # uninstalls.  A missing or fully-torn store file and unreadable
+        # model artifacts DEGRADE (warn once, heuristics tier keeps serving)
+        # instead of failing the engine.
         self.tunedb_store = None
-        if serve_cfg.tunedb:
-            from repro.tunedb import RecordStore, install_store
-            self.tunedb_store = RecordStore.open(serve_cfg.tunedb)
-            install_store(self.tunedb_store)
+        self.tunedb_models = None
+        if serve_cfg.tunedb or serve_cfg.tunedb_models:
+            import pathlib
+            import warnings
+
+            from repro.tunedb.model import (ModelSet, default_models_dir,
+                                            install_models)
+            models_dir = serve_cfg.tunedb_models
+            if serve_cfg.tunedb:
+                from repro.tunedb import RecordStore, install_store
+                store_path = pathlib.Path(serve_cfg.tunedb)
+                if not store_path.exists():
+                    warnings.warn(
+                        f"tunedb store {store_path} does not exist; serving "
+                        "starts with an empty store (heuristics fallback)",
+                        RuntimeWarning, stacklevel=2)
+                self.tunedb_store = RecordStore.open(store_path)
+                if self.tunedb_store.n_skipped \
+                        and not self.tunedb_store.n_lines:
+                    warnings.warn(
+                        f"tunedb store {store_path} is torn beyond the tail "
+                        f"({self.tunedb_store.n_skipped} unreadable lines, 0 "
+                        "records); serving degrades to heuristics",
+                        RuntimeWarning, stacklevel=2)
+                install_store(self.tunedb_store,
+                              fingerprint=serve_cfg.tunedb_backend)
+                if models_dir is None:       # auto-discover next to the store
+                    models_dir = default_models_dir(store_path)
+            models = ModelSet.load(models_dir) if models_dir else ModelSet()
+            if len(models) or models.skipped:
+                self.tunedb_models = models
+            # retarget the global model tier to THIS config's artifacts —
+            # including installing None when there are none (or the tier is
+            # disabled with tunedb_models="") so a previous Engine's
+            # regressors never serve another store's traffic
+            install_models(models if len(models) else None)
         self.cache = init_cache(cfg, serve_cfg.slots, serve_cfg.max_len)
         self.lengths = np.zeros(serve_cfg.slots, np.int64)
         self.slot_req: List[Optional[Request]] = [None] * serve_cfg.slots

@@ -17,7 +17,6 @@ split + tree-combine, which is what makes it shardable.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

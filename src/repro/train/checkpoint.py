@@ -17,7 +17,6 @@ is chosen so that extension is additive.
 
 from __future__ import annotations
 
-import io
 import json
 import os
 import pathlib

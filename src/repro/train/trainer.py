@@ -14,7 +14,6 @@ preemption-safe exit, straggler monitoring.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -27,7 +26,6 @@ from repro.models import ModelConfig, init_params, loss_fn
 from repro.optim import (AdamWConfig, adamw_init, adamw_update,
                          compress_grads, decompress_grads,
                          init_error_feedback)
-from repro.parallel import sharding as shd
 from . import checkpoint as ckpt
 from .fault import PreemptionHandler, StragglerMonitor
 

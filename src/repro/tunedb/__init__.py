@@ -2,36 +2,56 @@
 
 The persistence backbone of the input-aware runtime:
 
-  store.py      versioned append-only JSONL record store, nearest-shape lookup
+  store.py      versioned append-only JSONL record store (fingerprint-keyed),
+                nearest-shape lookup
   telemetry.py  (space, input-shape) frequency counters fed by kernel dispatch
+  model.py      performance regressors trained FROM the store, served per
+                (space, backend fingerprint) at dispatch (paper §5-§6)
   session.py    tune the top-K hot shapes on a worker pool, commit to a store
-  __main__.py   ``python -m repro.tunedb`` tune / stats / export / merge CLI
+  __main__.py   ``python -m repro.tunedb`` tune / train / predict / models /
+                stats / export / merge CLI
 
 The loop: dispatch records every kernel call's shape -> a TuningSession mines
-the hottest shapes and tunes them -> serving processes warm-start from the
-resulting store and get config hits (exact or nearest-shape) with no tuner
-in the process at all.
+the hottest shapes and tunes them -> ``train`` distills the accumulated
+measurements into per-(space, backend) MLP regressors -> serving processes
+warm-start from the store + model artifacts and resolve configs three-tier:
+exact record hit, model-guided search, nearest-shape fallback — no tuner in
+the process at all.
 """
 
-from .store import (SCHEMA_VERSION, RecordStore, TuneRecord, clear_store,
-                    get_store, input_key, install_store, normalize_config)
+from .store import (SCHEMA_VERSION, RecordStore, TuneRecord,
+                    active_fingerprint, clear_store, get_store, input_key,
+                    install_store, normalize_config)
 from .telemetry import (ShapeTelemetry, clear_telemetry, get_telemetry,
                         record_shape)
 
 __all__ = [
-    "SCHEMA_VERSION", "RecordStore", "TuneRecord", "clear_store", "get_store",
-    "input_key", "install_store", "normalize_config",
+    "SCHEMA_VERSION", "RecordStore", "TuneRecord", "active_fingerprint",
+    "clear_store", "get_store", "input_key", "install_store",
+    "normalize_config",
     "ShapeTelemetry", "clear_telemetry", "get_telemetry", "record_shape",
     "TuningSession", "TuneJob", "SessionReport", "backend_fingerprint",
+    "MODEL_SCHEMA_VERSION", "ModelSet", "PerfModel", "clear_models",
+    "collect_samples", "default_models_dir", "get_models", "harvest",
+    "install_models", "train_models",
 ]
+
+_SESSION_NAMES = ("TuningSession", "TuneJob", "SessionReport",
+                  "backend_fingerprint")
+_MODEL_NAMES = ("MODEL_SCHEMA_VERSION", "ModelSet", "PerfModel",
+                "clear_models", "collect_samples", "default_models_dir",
+                "get_models", "harvest", "install_models", "train_models")
 
 
 def __getattr__(name):
     # lazy: keeps `import repro.tunedb` cheap on the dispatch hot path and
     # guarantees core -> tunedb imports can never loop back through session.
-    if name in ("TuningSession", "TuneJob", "SessionReport",
-                "backend_fingerprint"):
+    if name in _SESSION_NAMES:
         from . import session
 
         return getattr(session, name)
+    if name in _MODEL_NAMES:
+        from . import model
+
+        return getattr(model, name)
     raise AttributeError(name)

@@ -4,6 +4,10 @@ Subcommands:
   tune    train (or load) a tuner and tune shapes into a store; shapes come
           from a telemetry dump (``--shapes-from-telemetry``) and/or explicit
           ``--shape M=4096,N=16,K=2560`` flags
+  train   distill the store's measurement log into per-(space, backend)
+          MLP performance models and persist versioned artifacts
+  predict model-guided config for a shape (the §6 runtime search, offline)
+  models  list persisted model artifacts and their training metadata
   stats   print store (and optional telemetry) statistics as JSON
   export  compact a store to latest-record-per-shape
   merge   fold several stores into one (newest record per shape wins)
@@ -11,7 +15,9 @@ Subcommands:
 Example round trip:
   $ python -m repro.tunedb tune --space gemm --shapes-from-telemetry \\
         --telemetry /tmp/shapes.json --store /tmp/tunedb.jsonl
-  $ python -m repro.tunedb stats --store /tmp/tunedb.jsonl
+  $ python -m repro.tunedb train --store /tmp/tunedb.jsonl
+  $ python -m repro.tunedb predict --store /tmp/tunedb.jsonl \\
+        --space gemm --shape M=4096,N=16,K=2560
 """
 
 from __future__ import annotations
@@ -112,6 +118,80 @@ def _cmd_tune(args: argparse.Namespace) -> int:
     return 1 if failed and not tuned else 0
 
 
+def _cmd_train(args: argparse.Namespace) -> int:
+    from .model import collect_samples, default_models_dir, train_models
+
+    store = RecordStore.open(args.store)
+    if not len(store):
+        print(f"[tunedb] store {args.store} has no records; run `tune` first",
+              file=sys.stderr)
+        return 1
+    if args.samples_per_shape > 0:
+        from repro.core.backend import SimulatedTPUBackend
+        n = collect_samples(store, SimulatedTPUBackend(),
+                            per_shape=args.samples_per_shape,
+                            space=args.space, seed=args.seed)
+        print(f"[tunedb] collected {n} exploration samples "
+              f"({args.samples_per_shape}/shape)")
+    models = train_models(store, space=args.space, hidden=args.hidden,
+                          epochs=args.epochs, seed=args.seed,
+                          min_samples=args.min_samples, verbose=True)
+    if not len(models):
+        print("[tunedb] no (space, backend) group had enough samples; "
+              "try --samples-per-shape", file=sys.stderr)
+        return 1
+    out = args.models_dir or default_models_dir(args.store)
+    models.save(out)
+    print(f"[tunedb] saved {len(models)} model(s) -> {out}")
+    for key, meta in models.stats()["models"].items():
+        mse = meta["val_mse"]
+        print(f"[tunedb]   {key}: {meta['n_samples']} samples, "
+              f"val mse {'n/a' if mse is None else f'{mse:.4f}'}")
+    return 0
+
+
+def _cmd_predict(args: argparse.Namespace) -> int:
+    from repro.core.space import SPACES
+
+    from .model import ModelSet, default_models_dir
+
+    space = SPACES[args.space]
+    models = ModelSet.load(args.models_dir or default_models_dir(args.store))
+    pm = models.resolve_model(args.space, args.backend)
+    if pm is None:
+        have = sorted(f"{s}/{b}" for s, b in models.models)
+        print(f"[tunedb] no model for space {args.space!r}"
+              + (f" backend {args.backend!r}" if args.backend else "")
+              + f"; available: {have or 'none'} (run `train` first)",
+              file=sys.stderr)
+        return 1
+    for spec in args.shape:
+        inputs = _parse_shape(spec, space)
+        try:
+            res = pm.predict_config(inputs, top_k=args.top_k)
+        except ValueError as e:          # no legal configuration
+            print(f"[tunedb] predict failed for {spec!r}: {e}",
+                  file=sys.stderr)
+            return 1
+        print(json.dumps({
+            "space": args.space, "backend": pm.backend, "inputs": inputs,
+            "config": res.best,
+            "predicted_tflops": round(res.predicted_tflops, 3),
+            "n_candidates": res.n_candidates,
+            "top_k": [{"config": c, "predicted_tflops": round(p, 3)}
+                      for c, p in res.top_k],
+        }, sort_keys=True))
+    return 0
+
+
+def _cmd_models(args: argparse.Namespace) -> int:
+    from .model import ModelSet, default_models_dir
+
+    models = ModelSet.load(args.models_dir or default_models_dir(args.store))
+    print(json.dumps(models.stats(), indent=1, sort_keys=True))
+    return 0 if len(models) or not models.skipped else 1
+
+
 def _cmd_stats(args: argparse.Namespace) -> int:
     out = {"store": RecordStore.open(args.store).stats()}
     if args.telemetry and os.path.exists(args.telemetry):
@@ -167,6 +247,47 @@ def build_parser() -> argparse.ArgumentParser:
                    help="load a trained tuner dir instead of training")
     t.add_argument("--save-tuner", default=None)
     t.set_defaults(fn=_cmd_tune)
+
+    def hidden_arg(spec: str):
+        try:
+            return tuple(int(x) for x in spec.split(",") if x)
+        except ValueError:
+            raise SystemExit(f"bad --hidden {spec!r} (want e.g. 64,128,64)")
+
+    tr = sub.add_parser("train", help="train performance models from a store")
+    tr.add_argument("--store", default=DEFAULT_STORE)
+    tr.add_argument("--models-dir", default=None,
+                    help="artifact dir (default: <store>.models/)")
+    tr.add_argument("--space", default=None,
+                    choices=["gemm", "conv", "attention", "ssd"],
+                    help="restrict to one space (default: all in the store)")
+    tr.add_argument("--samples-per-shape", type=int, default=48,
+                    help="label this many random legal configs per tuned "
+                         "shape before training (0 = harvest only)")
+    tr.add_argument("--min-samples", type=int, default=24,
+                    help="skip (space, backend) groups smaller than this")
+    tr.add_argument("--epochs", type=int, default=30)
+    tr.add_argument("--hidden", type=hidden_arg, default=(64, 128, 64),
+                    help="MLP hidden sizes, e.g. 64,128,64")
+    tr.add_argument("--seed", type=int, default=0)
+    tr.set_defaults(fn=_cmd_train)
+
+    pr = sub.add_parser("predict", help="model-guided config for a shape")
+    pr.add_argument("--store", default=DEFAULT_STORE)
+    pr.add_argument("--models-dir", default=None)
+    pr.add_argument("--space", default="gemm",
+                    choices=["gemm", "conv", "attention", "ssd"])
+    pr.add_argument("--backend", default=None,
+                    help="backend fingerprint (default: newest model)")
+    pr.add_argument("--shape", action="append", required=True,
+                    help="shape to predict for, e.g. M=4096,N=16,K=2560")
+    pr.add_argument("--top-k", type=int, default=5)
+    pr.set_defaults(fn=_cmd_predict)
+
+    mo = sub.add_parser("models", help="list persisted model artifacts")
+    mo.add_argument("--store", default=DEFAULT_STORE)
+    mo.add_argument("--models-dir", default=None)
+    mo.set_defaults(fn=_cmd_models)
 
     s = sub.add_parser("stats", help="print store/telemetry statistics")
     s.add_argument("--store", default=DEFAULT_STORE)

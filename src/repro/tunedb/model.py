@@ -1,0 +1,452 @@
+"""Learned performance models served from the tuning-record database.
+
+This module closes the loop the paper builds in §5-§6: the tuning records a
+fleet accumulates (``RecordStore``) become the *training set* of an MLP
+performance regressor (§5: log2 features over input+tuning parameters, ReLU
+hidden layers, log-throughput target), and at dispatch time a novel input
+shape is resolved by the §6 runtime search — one batched forward pass of the
+regressor over every legal tuning configuration for that shape — instead of
+borrowing its nearest tuned neighbor's config.  Nearest-neighbor lookup only
+generalizes *on* the tuned grid; the regressor generalizes *across* input
+shapes (the paper's central claim, echoed by the model-driven adaptive
+library line of work: arXiv:1806.07060, MLKAPS arXiv:2501.05811).
+
+Paper §5 -> implementation map:
+  * §5.1 dataset        ``harvest`` turns TuneRecords (tuner/session results
+                        plus the ``source="sample"`` exploration measurements
+                        a :class:`~repro.tunedb.session.TuningSession`
+                        commits) into a :class:`repro.core.dataset.Dataset`.
+  * §5.2 features       ``repro.core.features.Featurizer`` — log2 transform,
+                        standardization; stats are *persisted with the model*
+                        so a serving process featurizes identically.
+  * §5.3 regressor      ``repro.core.mlp.MLP`` — ReLU MLP, Adam, MSE on
+                        log2(TFLOPS).
+  * §6   runtime        ``PerfModel.predict_config`` /
+                        ``ModelSet.predict`` — exhaustive scan of the legal
+                        config slice scored by ONE batched MLP forward pass,
+                        memoized per shape so the serving hot path pays a
+                        dict hit after the first resolution.
+
+Models are keyed by ``(space, backend fingerprint)``: one store can hold
+records measured on several backends (v5e sim, wall-clock CPU, ...) and
+serves a separate regressor for each.  Artifacts are versioned
+(``MODEL_SCHEMA_VERSION``); a loader that meets an artifact from the future
+skips it with a warning instead of misreading it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pathlib
+import re
+import time
+import warnings
+from typing import Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from .store import (SAMPLE_SOURCE, RecordStore, TuneRecord, normalize_config,
+                    normalize_inputs)
+
+MODEL_SCHEMA_VERSION = 1
+
+
+class ModelArtifactError(ValueError):
+    """Raised when a persisted model artifact cannot be loaded safely."""
+
+
+def backend_slug(fingerprint: str) -> str:
+    """Filesystem-safe, collision-resistant slug for a backend fingerprint."""
+    clean = re.sub(r"[^A-Za-z0-9_.-]+", "-", fingerprint).strip("-") or "any"
+    return f"{clean[:48]}-{hashlib.sha1(fingerprint.encode()).hexdigest()[:8]}"
+
+
+def default_models_dir(store_path: os.PathLike) -> pathlib.Path:
+    """Where a store's model artifacts live: ``<store>.models/`` sibling."""
+    p = pathlib.Path(store_path)
+    return p.with_name(p.name + ".models")
+
+
+# ---------------------------------------------------------------------------
+# §5.1 — harvest the record log into training datasets
+# ---------------------------------------------------------------------------
+
+def harvest(store: RecordStore, *, space: Optional[str] = None,
+            backend: Optional[str] = None,
+            min_tflops: float = 1e-6) -> Dict[Tuple[str, str], "object"]:
+    """Group every usable record by (space, backend) into Datasets.
+
+    Uses the store's full training log — including superseded re-tunes and
+    ``source="sample"`` exploration measurements — not just the latest record
+    per shape: every measurement is a labeled (inputs, config) -> TFLOPS
+    point, and the regressor wants all of them.  Records with non-positive
+    throughput (legacy imports) or configs that do not cover the space's
+    tuning parameters are dropped.
+    """
+    from repro.core.dataset import Dataset
+    from repro.core.space import SPACES
+
+    grouped: Dict[Tuple[str, str], Dict[str, list]] = {}
+    for rec in store.training_records(space=space, backend=backend):
+        sp = SPACES.get(rec.space)
+        if sp is None or rec.tflops <= min_tflops:
+            continue
+        if not all(k in rec.config for k in sp.param_names):
+            continue
+        if not all(k in rec.inputs for k in sp.input_params):
+            continue
+        g = grouped.setdefault((rec.space, rec.backend),
+                               {"inputs": [], "configs": [], "tflops": []})
+        g["inputs"].append(dict(rec.inputs))
+        g["configs"].append(dict(rec.config))
+        g["tflops"].append(rec.tflops)
+    return {
+        key: Dataset(space=SPACES[key[0]], inputs=g["inputs"],
+                     configs=g["configs"],
+                     tflops=np.asarray(g["tflops"], np.float64))
+        for key, g in grouped.items()
+    }
+
+
+def collect_samples(store: RecordStore, backend, *, per_shape: int = 48,
+                    space: Optional[str] = None, seed: int = 0,
+                    max_shapes: Optional[int] = None) -> int:
+    """Label random legal configs for every tuned shape (training data).
+
+    The session's top-k measurements cluster around the model's current
+    optimum; a regressor also needs to see *mediocre* configs to learn the
+    performance landscape (§5.1's uniform phase, restricted to the shapes
+    traffic actually produced — the input-aware twist).  Appends
+    ``source="sample"`` records, which the store keeps out of the serving
+    index.  Returns the number of samples committed.
+    """
+    from repro.core.search import enumerate_legal
+    from repro.core.space import SPACES
+
+    from .session import backend_fingerprint
+
+    rng = np.random.default_rng(seed)
+    fp = backend_fingerprint(backend)
+    shapes: List[Tuple[str, Dict[str, int]]] = []
+    seen = set()
+    for rec in store.records():
+        if space is not None and rec.space != space:
+            continue
+        if rec.space not in SPACES:
+            continue
+        key = rec.key
+        if key in seen:
+            continue
+        seen.add(key)
+        shapes.append((rec.space, dict(rec.inputs)))
+    if max_shapes is not None:
+        shapes = shapes[:max_shapes]
+
+    n = 0
+    for space_name, inputs in shapes:
+        sp = SPACES[space_name]
+        legal = enumerate_legal(sp, inputs)
+        if not legal:
+            continue
+        idx = rng.permutation(len(legal))[:per_shape]
+        for i in idx:
+            cfg = legal[int(i)]
+            tflops = float(backend.measure(space_name, cfg, inputs))
+            store.add(TuneRecord(
+                space=space_name, inputs=inputs, config=dict(cfg),
+                tflops=tflops, backend=fp, source=SAMPLE_SOURCE))
+            n += 1
+    return n
+
+
+# ---------------------------------------------------------------------------
+# §5.3 + §6 — one trained regressor per (space, backend fingerprint)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PerfModel:
+    """A trained performance regressor for one (space, backend) pair."""
+
+    space: "object"                       # repro.core.space.ParamSpace
+    backend: str                          # backend fingerprint it models
+    model: "object"                       # repro.core.mlp.MLP
+    featurizer: "object"                  # fitted repro.core.features.Featurizer
+    meta: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+    @property
+    def key(self) -> Tuple[str, str]:
+        return (self.space.name, self.backend)
+
+    def predict_config(self, inputs: Mapping[str, int], *, top_k: int = 1,
+                       candidates: Optional[List[Dict[str, int]]] = None):
+        """§6 runtime search: score every legal config in one forward pass."""
+        from repro.core.search import exhaustive_search
+        return exhaustive_search(self.space, normalize_inputs(inputs),
+                                 model=self.model, featurizer=self.featurizer,
+                                 top_k=top_k, candidates=candidates)
+
+    # -- persistence ---------------------------------------------------------
+    def _stem(self) -> str:
+        return f"{self.space.name}--{backend_slug(self.backend)}"
+
+    def save(self, directory: os.PathLike) -> pathlib.Path:
+        d = pathlib.Path(directory)
+        d.mkdir(parents=True, exist_ok=True)
+        stem = self._stem()
+        npz_path = d / f"{stem}.npz"
+        npz_tmp = npz_path.with_name(npz_path.name + ".tmp")
+        npz_tmp.write_bytes(self.model.to_bytes())
+        os.replace(npz_tmp, npz_path)    # never a readable meta + torn npz
+        meta_path = d / f"{stem}.json"
+        tmp = meta_path.with_name(meta_path.name + ".tmp")
+        tmp.write_text(json.dumps({
+            "model_schema_version": MODEL_SCHEMA_VERSION,
+            "space": self.space.name,
+            "backend": self.backend,
+            "featurizer": json.loads(self.featurizer.to_json()),
+            "meta": self.meta,
+        }, sort_keys=True))
+        os.replace(tmp, meta_path)
+        return meta_path
+
+    @classmethod
+    def load(cls, meta_path: os.PathLike) -> "PerfModel":
+        from repro.core.features import Featurizer
+        from repro.core.mlp import MLP
+        from repro.core.space import SPACES
+
+        meta_path = pathlib.Path(meta_path)
+        try:
+            d = json.loads(meta_path.read_text())
+        except (ValueError, OSError) as e:
+            raise ModelArtifactError(f"{meta_path.name}: unreadable ({e})")
+        try:
+            version = int(d.get("model_schema_version", -1))
+        except (TypeError, ValueError):
+            version = -1
+        if version != MODEL_SCHEMA_VERSION:
+            raise ModelArtifactError(
+                f"{meta_path.name}: model schema v{version} != "
+                f"v{MODEL_SCHEMA_VERSION} (refusing to misread)")
+        space = SPACES.get(d.get("space"))
+        if space is None:
+            raise ModelArtifactError(
+                f"{meta_path.name}: unknown space {d.get('space')!r}")
+        npz = meta_path.with_suffix(".npz")
+        if not npz.exists():
+            raise ModelArtifactError(f"{meta_path.name}: missing {npz.name}")
+        try:
+            featurizer = Featurizer.from_json(space,
+                                              json.dumps(d["featurizer"]))
+            model = MLP.from_bytes(npz.read_bytes())
+            return cls(space=space, backend=d["backend"], model=model,
+                       featurizer=featurizer, meta=dict(d.get("meta", {})))
+        except Exception as e:   # noqa: BLE001 — torn npz / malformed meta:
+            # any parse failure here means a damaged artifact, and the
+            # contract is "skip, never take serving down"
+            raise ModelArtifactError(
+                f"{meta_path.name}: damaged artifact "
+                f"({type(e).__name__}: {e})")
+
+
+def train_models(store: RecordStore, *, space: Optional[str] = None,
+                 backend: Optional[str] = None, min_samples: int = 24,
+                 hidden: Tuple[int, ...] = (64, 128, 64), epochs: int = 30,
+                 val_frac: float = 0.1, seed: int = 0,
+                 verbose: bool = False) -> "ModelSet":
+    """Train one regressor per (space, backend) group with enough samples."""
+    import jax
+
+    from repro.core.mlp import MLP
+
+    models = ModelSet()
+    for (space_name, fp), ds in sorted(harvest(store, space=space,
+                                               backend=backend).items()):
+        if len(ds) < min_samples:
+            if verbose:
+                print(f"[model] {space_name}/{fp}: {len(ds)} samples "
+                      f"< {min_samples}, skipping")
+            continue
+        train, val = ds.split(val_frac=val_frac, seed=seed)
+        featurizer, X, y = train.featurize()
+        _, Xv, yv = val.featurize(featurizer)
+        model = MLP.create(jax.random.PRNGKey(seed), in_dim=featurizer.dim,
+                           hidden=hidden)
+        history = model.fit(X, y, epochs=epochs, X_val=Xv, y_val=yv,
+                            verbose=verbose)
+        pm = PerfModel(space=ds.space, backend=fp, model=model,
+                       featurizer=featurizer, meta={
+                           "created_at": time.time(),
+                           "n_samples": len(ds),
+                           "hidden": list(hidden),
+                           "epochs": epochs,
+                           "seed": seed,
+                           "val_mse": history[-1] if history else None,
+                       })
+        models.add(pm)
+        if verbose:
+            mse = pm.meta["val_mse"]
+            print(f"[model] {space_name}/{fp}: trained on {len(ds)} samples, "
+                  f"val mse {'n/a' if mse is None else f'{mse:.4f}'}")
+    return models
+
+
+# ---------------------------------------------------------------------------
+# The serving-side model registry
+# ---------------------------------------------------------------------------
+
+class ModelSet:
+    """Per-(space, backend) PerfModels with memoized dispatch resolution.
+
+    ``measurer`` is the optional §6 top-k re-measurement hook: a callable
+    ``(space_name, config, inputs) -> TFLOPS`` (a measurement backend's
+    ``measure``).  When set, the first resolution of a shape re-measures the
+    model's top ``remeasure_top_k`` candidates and serves the measured
+    winner — the paper's recipe for washing model noise out of the argmax.
+    The cost is a handful of measurements ONCE per novel shape (memoized);
+    without a measurer the pure model argmax is served.
+    """
+
+    def __init__(self, *, measurer=None, remeasure_top_k: int = 12) -> None:
+        self.models: Dict[Tuple[str, str], PerfModel] = {}
+        self.measurer = measurer
+        self.remeasure_top_k = remeasure_top_k
+        self.hits = 0                    # resolutions served (memo or fresh)
+        self.misses = 0                  # no model / no legal config
+        self.skipped: List[str] = []     # artifacts refused at load time
+        self._memo: Dict[tuple, Optional[Tuple[Dict[str, int], float]]] = {}
+
+    def add(self, pm: PerfModel) -> None:
+        self.models[pm.key] = pm
+        self._memo.clear()
+
+    def __len__(self) -> int:
+        return len(self.models)
+
+    def resolve_model(self, space: str, backend: Optional[str] = None
+                      ) -> Optional[PerfModel]:
+        """Exact (space, backend) model; else the newest model for the space."""
+        if backend is not None:
+            return self.models.get((space, backend))
+        best = None
+        for (sp, _), pm in self.models.items():
+            if sp != space:
+                continue
+            if best is None or (pm.meta.get("created_at", 0)
+                                > best.meta.get("created_at", 0)):
+                best = pm
+        return best
+
+    def predict(self, space: str, inputs: Mapping[str, int], *,
+                backend: Optional[str] = None
+                ) -> Optional[Tuple[Dict[str, int], float]]:
+        """Model-guided config for a shape: (config, predicted TFLOPS).
+
+        The first resolution of a shape pays the §6 exhaustive scan (legal
+        enumeration + one batched forward pass); every later call is a memo
+        hit, which is what keeps the serving dispatch path flat.
+        """
+        inputs = normalize_inputs(inputs)
+        memo_key = (space, backend, tuple(sorted(inputs.items())))
+        if memo_key in self._memo:
+            out = self._memo[memo_key]
+            if out is None:
+                self.misses += 1
+            else:
+                self.hits += 1
+            return out
+        pm = self.resolve_model(space, backend)
+        out: Optional[Tuple[Dict[str, int], float]] = None
+        if pm is not None:
+            try:
+                k = self.remeasure_top_k if self.measurer is not None else 1
+                res = pm.predict_config(inputs, top_k=k)
+                if self.measurer is not None and len(res.top_k) > 1:
+                    measured = [(cfg, float(self.measurer(space, cfg, inputs)))
+                                for cfg, _ in res.top_k]
+                    cfg, tflops = max(measured, key=lambda t: t[1])
+                    out = (normalize_config(cfg), tflops)
+                else:
+                    out = (normalize_config(res.best),
+                           float(res.predicted_tflops))
+            except ValueError:           # no legal configuration for inputs
+                out = None
+            except Exception as e:   # noqa: BLE001 — a loaded artifact whose
+                # featurizer/space drifted must degrade to the lower dispatch
+                # tiers, never crash the kernel hot path (warn once, memoized)
+                warnings.warn(
+                    f"tunedb model for {space!r} failed at resolution "
+                    f"({type(e).__name__}: {e}); falling back",
+                    RuntimeWarning, stacklevel=2)
+                out = None
+        if len(self._memo) > 4096:
+            self._memo.clear()
+        self._memo[memo_key] = out
+        if out is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return out
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, directory: os.PathLike) -> pathlib.Path:
+        d = pathlib.Path(directory)
+        for pm in self.models.values():
+            pm.save(d)
+        return d
+
+    @classmethod
+    def load(cls, directory: os.PathLike, *, warn: bool = True) -> "ModelSet":
+        """Load every readable artifact; skip (don't crash on) bad ones.
+
+        A serving process must come up even when the artifact directory holds
+        models written by a newer schema or torn files — those are skipped
+        with one warning each and recorded in ``skipped``.
+        """
+        ms = cls()
+        d = pathlib.Path(directory)
+        if not d.is_dir():
+            return ms
+        for meta_path in sorted(d.glob("*.json")):
+            try:
+                ms.add(PerfModel.load(meta_path))
+            except ModelArtifactError as e:
+                ms.skipped.append(str(e))
+                if warn:
+                    warnings.warn(f"tunedb model artifact skipped: {e}",
+                                  RuntimeWarning, stacklevel=2)
+        return ms
+
+    def stats(self) -> Dict[str, object]:
+        return {
+            "models": {
+                f"{sp}/{fp}": {k: v for k, v in pm.meta.items()}
+                for (sp, fp), pm in sorted(self.models.items())},
+            "lookups": {"hits": self.hits, "misses": self.misses},
+            "skipped_artifacts": list(self.skipped),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Process-global model set: the dispatcher's model-guided tier (like the
+# global store, installed by serve warm-start or tests).
+# ---------------------------------------------------------------------------
+
+_GLOBAL_MODELS: Optional[ModelSet] = None
+
+
+def install_models(models: Optional[ModelSet]) -> None:
+    """Make model-guided resolution visible to the kernel dispatcher."""
+    global _GLOBAL_MODELS
+    _GLOBAL_MODELS = models
+
+
+def get_models() -> Optional[ModelSet]:
+    return _GLOBAL_MODELS
+
+
+def clear_models() -> None:
+    install_models(None)

@@ -19,7 +19,8 @@ import time
 from concurrent.futures import ThreadPoolExecutor, as_completed
 from typing import Dict, List, Mapping, Optional, Tuple
 
-from .store import RecordStore, TuneRecord, input_key, normalize_inputs
+from .store import (SAMPLE_SOURCE, RecordStore, TuneRecord, input_key,
+                    normalize_inputs)
 from .telemetry import ShapeTelemetry
 
 
@@ -87,6 +88,7 @@ class TuningSession:
                  telemetry: Optional[ShapeTelemetry] = None, *,
                  top_k_shapes: int = 8, workers: int = 4,
                  remeasure: bool = True, skip_existing: bool = True,
+                 collect_samples: bool = True,
                  progress_path: Optional[os.PathLike] = None):
         self.tuner = tuner
         self.store = store
@@ -95,6 +97,9 @@ class TuningSession:
         self.workers = max(1, workers)
         self.remeasure = remeasure
         self.skip_existing = skip_existing
+        # commit every top-k measurement (not only the winner) to the store
+        # as source="sample" training data for the performance model
+        self.collect_samples = collect_samples
         self.progress_path = (pathlib.Path(progress_path)
                               if progress_path else None)
         self._done: set = self._load_progress()
@@ -131,21 +136,36 @@ class TuningSession:
             cand = self.telemetry.hot_shapes(space, self.top_k_shapes)
         else:
             raise ValueError("need telemetry or explicit shapes to plan")
+        # skip_existing is fingerprint-scoped: a shape tuned on another
+        # backend still needs THIS session's backend to measure it, or a
+        # serving process pinned to this fingerprint would never get a record
+        fp = backend_fingerprint(self.tuner.backend)
         jobs, skipped = [], 0
         for inputs, count in cand:
             key = input_key(space, inputs)
             if key in self._done or (self.skip_existing
-                                     and key in self.store):
+                                     and self.store.contains(space, inputs,
+                                                             backend=fp)):
                 skipped += 1
                 continue
             jobs.append(TuneJob(space=space, inputs=inputs, count=count))
         return jobs, skipped
 
     # -- execution ------------------------------------------------------------
-    def _run_job(self, job: TuneJob) -> TuneRecord:
+    def _run_job(self, job: TuneJob) -> Tuple[TuneRecord, List[TuneRecord]]:
         result = self.tuner.search(job.inputs, remeasure=self.remeasure)
-        return record_from_search(job.space, job.inputs, result,
-                                  self.tuner.backend, source="session")
+        rec = record_from_search(job.space, job.inputs, result,
+                                 self.tuner.backend, source="session")
+        samples: List[TuneRecord] = []
+        if self.collect_samples and result.measured:
+            # the losing top-k measurements are still labeled data points —
+            # exactly what the performance model trains on (model.harvest)
+            samples = [
+                TuneRecord(space=job.space, inputs=dict(job.inputs),
+                           config=dict(cfg), tflops=float(tflops),
+                           backend=rec.backend, source=SAMPLE_SOURCE)
+                for cfg, tflops in result.measured if cfg != result.best]
+        return rec, samples
 
     def run(self, shapes: Optional[List[Mapping[str, int]]] = None,
             verbose: bool = False) -> SessionReport:
@@ -160,12 +180,15 @@ class TuningSession:
                 futures = {pool.submit(self._guarded, j): j for j in jobs}
                 for fut in as_completed(futures):
                     job = futures[fut]
-                    rec, err = fut.result()
+                    out, err = fut.result()
                     if err is not None:
                         report.failed += 1
                         report.errors.append(f"{job.inputs}: {err}")
                         continue
+                    rec, samples = out
                     self.store.add(rec)
+                    for sample in samples:
+                        self.store.add(sample)
                     self._done.add(job.key)
                     self._save_progress()
                     report.tuned += 1

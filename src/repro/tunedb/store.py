@@ -14,6 +14,14 @@ traffic hits a shape nobody tuned, the closest tuned shape (log2 distance
 over the numeric input dims, exact match on dtype/layout flags) supplies a
 config that the ops-layer clamping then makes runnable.  ``merge`` /
 ``export`` combine stores from parallel tuning fleets into one artifact.
+
+The backend fingerprint is a first-class lookup dimension: the serving index
+is keyed by ``(backend, space, inputs)``, so one store holds records for
+several backends (v5e sim, wall-clock CPU, a future v6e, ...) side by side.
+``get``/``nearest`` take an optional ``backend=``; ``None`` means "newest
+record regardless of backend" — the single-backend behavior.  Records with
+``source="sample"`` (exploration measurements for model training, see
+model.py) are kept in the training log but never enter the serving index.
 """
 
 from __future__ import annotations
@@ -26,9 +34,13 @@ import os
 import pathlib
 import threading
 import time
-from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Tuple
 
 SCHEMA_VERSION = 1
+
+# records whose source is this string are training data for the performance
+# model (model.py), not serving candidates — they stay out of the index.
+SAMPLE_SOURCE = "sample"
 
 # input parameters that must match EXACTLY for a nearest-shape fallback —
 # a config tuned for bf16 or a transposed layout is not a neighbor of fp32.
@@ -123,17 +135,22 @@ class RecordStore:
     def __init__(self, path: Optional[os.PathLike] = None):
         self.path = pathlib.Path(path) if path is not None else None
         self._lock = threading.Lock()
-        self._index: Dict[str, TuneRecord] = {}      # key -> latest record
+        # (backend, key) -> latest record: the fingerprint-keyed serving index
+        self._index: Dict[Tuple[str, str], TuneRecord] = {}
+        self._latest: Dict[str, TuneRecord] = {}     # key -> latest, any backend
+        self._all: List[TuneRecord] = []             # full log incl. samples
         self._history: Dict[str, int] = {}           # key -> n records seen
         self.n_lines = 0                             # parsed lines on disk
         self.n_skipped = 0                           # torn/garbage lines
+        self.n_samples = 0                           # training-only records
         self.hits = 0
         self.nearest_hits = 0
         self.misses = 0
         self._needs_newline = False     # true when the file ends in a torn line
-        # (space, shape)->(record|None) memo for nearest(): the O(index) scan
-        # sits on the dispatch hot path for untuned shapes.  Invalidated on
-        # every add so new session results become visible immediately.
+        # (space, backend, shape)->(record|None) memo for nearest(): the
+        # O(index) scan sits on the dispatch hot path for untuned shapes.
+        # Invalidated on every add so new session results become visible
+        # immediately.
         self._nearest_memo: Dict[tuple, Optional[TuneRecord]] = {}
         if self.path is not None and self.path.exists():
             self._load()
@@ -163,11 +180,23 @@ class RecordStore:
                 self._needs_newline = fh.read(1) != b"\n"
 
     def _admit(self, rec: TuneRecord) -> None:
+        if self.path is None:
+            # in-memory store: the JSONL *is* this list.  Disk-backed stores
+            # re-read the file in training_records() instead of pinning the
+            # (samples-dominated) measurement log in every serving process.
+            self._all.append(rec)
+        if rec.source == SAMPLE_SOURCE:      # training data, never served
+            self.n_samples += 1
+            return
         k = rec.key
         self._history[k] = self._history.get(k, 0) + 1
-        cur = self._index.get(k)
+        bk = (rec.backend, k)
+        cur = self._index.get(bk)
         if cur is None or rec.created_at >= cur.created_at:
-            self._index[k] = rec
+            self._index[bk] = rec
+        any_cur = self._latest.get(k)
+        if any_cur is None or rec.created_at >= any_cur.created_at:
+            self._latest[k] = rec
 
     def add(self, rec: TuneRecord) -> TuneRecord:
         """Append one record (stamping created_at if unset) atomically."""
@@ -192,15 +221,29 @@ class RecordStore:
         return rec
 
     # -- lookup --------------------------------------------------------------
-    def get(self, space: str, inputs: Mapping[str, int]
-            ) -> Optional[TuneRecord]:
-        """Exact lookup of the latest record for (space, inputs)."""
-        rec = self._index.get(input_key(space, inputs))
+    def _exact(self, space: str, inputs: Mapping[str, int],
+               backend: Optional[str]) -> Optional[TuneRecord]:
+        key = input_key(space, inputs)
+        if backend is not None:
+            return self._index.get((backend, key))
+        return self._latest.get(key)
+
+    def get(self, space: str, inputs: Mapping[str, int], *,
+            backend: Optional[str] = None) -> Optional[TuneRecord]:
+        """Exact lookup of the latest record for (space, inputs[, backend])."""
+        rec = self._exact(space, inputs, backend)
         if rec is not None:
             self.hits += 1
         return rec
 
+    def contains(self, space: str, inputs: Mapping[str, int], *,
+                 backend: Optional[str] = None) -> bool:
+        """Exact membership without touching the hit/miss statistics —
+        planning-time checks (session skip_existing) use this."""
+        return self._exact(space, inputs, backend) is not None
+
     def nearest(self, space: str, inputs: Mapping[str, int], *,
+                backend: Optional[str] = None,
                 max_distance: float = 2.0
                 ) -> Optional[TuneRecord]:
         """Exact record if present, else the closest tuned shape.
@@ -209,13 +252,15 @@ class RecordStore:
         layout flags must match exactly.  ``max_distance=2.0`` admits
         neighbors within a combined ~4x dimension drift — past that a
         config says more about the other shape than about this one.
+        ``backend`` restricts both tiers to records of one fingerprint.
         """
         inputs = normalize_inputs(inputs)
-        exact = self._index.get(input_key(space, inputs))
+        exact = self._exact(space, inputs, backend)
         if exact is not None:
             self.hits += 1
             return exact
-        memo_key = (space, tuple(sorted(inputs.items())), max_distance)
+        memo_key = (space, backend, tuple(sorted(inputs.items())),
+                    max_distance)
         # single atomic read: add() clears the memo concurrently, so a
         # check-then-index pair could KeyError between the two operations
         best = self._nearest_memo.get(memo_key, _MEMO_MISS)
@@ -225,6 +270,8 @@ class RecordStore:
                 candidates = list(self._index.values())
             for rec in candidates:
                 if rec.space != space:
+                    continue
+                if backend is not None and rec.backend != backend:
                     continue
                 d = _shape_distance(inputs, rec.inputs)
                 if d is not None and d <= best_d:
@@ -238,24 +285,65 @@ class RecordStore:
             self.misses += 1
         return best
 
-    def records(self) -> List[TuneRecord]:
-        """Latest record per key, most recent first."""
+    def records(self, *, backend: Optional[str] = None) -> List[TuneRecord]:
+        """Latest serving record per (backend, shape), most recent first."""
         with self._lock:
-            recs = list(self._index.values())
+            recs = [r for (b, _), r in self._index.items()
+                    if backend is None or b == backend]
         return sorted(recs, key=lambda r: -r.created_at)
+
+    def training_records(self, *, space: Optional[str] = None,
+                         backend: Optional[str] = None) -> List[TuneRecord]:
+        """The FULL measurement log (superseded re-tunes + sample records),
+        chronological — the model-training harvest (model.py) reads this.
+
+        Disk-backed stores re-parse the JSONL on demand: training is an
+        offline path, and serving processes should not pay the memory of
+        the whole sample log just to hold the serving index.
+        """
+        def keep(r: TuneRecord) -> bool:
+            return ((space is None or r.space == space)
+                    and (backend is None or r.backend == backend))
+
+        if self.path is None:
+            with self._lock:
+                return [r for r in self._all if keep(r)]
+        out: List[TuneRecord] = []
+        if self.path.exists():
+            with self.path.open("r", encoding="utf-8") as fh:
+                for line in fh:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        rec = TuneRecord.from_json(line)
+                    except (ValueError, TypeError, KeyError):
+                        continue                   # torn tail / garbage
+                    if keep(rec):
+                        out.append(rec)
+        return out
+
+    def backends(self) -> List[str]:
+        """Distinct backend fingerprints with serving records."""
+        with self._lock:
+            return sorted({b for b, _ in self._index})
 
     def __len__(self) -> int:
         return len(self._index)
 
     def __contains__(self, key: str) -> bool:
-        return key in self._index
+        return key in self._latest
 
     # -- merge / export ------------------------------------------------------
     def merge(self, other: "RecordStore") -> int:
-        """Append every latest record of `other` not already newer here."""
+        """Append every latest record of `other` not already newer here.
+
+        Merging moves the serving index (latest per (backend, shape)) only;
+        training-sample records stay with the store that measured them.
+        """
         n = 0
         for rec in other.records():
-            cur = self._index.get(rec.key)
+            cur = self._index.get((rec.backend, rec.key))
             if cur is None or rec.created_at > cur.created_at:
                 self.add(dataclasses.replace(rec, source="merge"))
                 n += 1
@@ -278,15 +366,20 @@ class RecordStore:
     # -- reporting -----------------------------------------------------------
     def stats(self) -> Dict[str, object]:
         per_space: Dict[str, int] = {}
+        per_backend: Dict[str, int] = {}
         for rec in self.records():
             per_space[rec.space] = per_space.get(rec.space, 0) + 1
+            per_backend[rec.backend] = per_backend.get(rec.backend, 0) + 1
         return {
             "path": str(self.path) if self.path else None,
             "schema_version": SCHEMA_VERSION,
-            "shapes": len(self._index),
+            "shapes": len(self._latest),
+            "records": len(self._index),
             "lines": self.n_lines,
             "skipped_lines": self.n_skipped,
+            "sample_records": self.n_samples,
             "per_space": per_space,
+            "per_backend": per_backend,
             "lookups": {"hits": self.hits, "nearest": self.nearest_hits,
                         "misses": self.misses},
         }
@@ -297,16 +390,29 @@ class RecordStore:
 # ---------------------------------------------------------------------------
 
 _GLOBAL_STORE: Optional[RecordStore] = None
+_ACTIVE_FINGERPRINT: Optional[str] = None
 
 
-def install_store(store: Optional[RecordStore]) -> None:
-    """Make `store` visible to the kernel dispatcher (serve warm-start)."""
-    global _GLOBAL_STORE
+def install_store(store: Optional[RecordStore], *,
+                  fingerprint: Optional[str] = None) -> None:
+    """Make `store` visible to the kernel dispatcher (serve warm-start).
+
+    ``fingerprint`` pins dispatch lookups (store AND model tiers) to one
+    backend's records — the multi-backend serving mode.  ``None`` keeps the
+    any-backend behavior a single-backend store expects.
+    """
+    global _GLOBAL_STORE, _ACTIVE_FINGERPRINT
     _GLOBAL_STORE = store
+    _ACTIVE_FINGERPRINT = fingerprint
 
 
 def get_store() -> Optional[RecordStore]:
     return _GLOBAL_STORE
+
+
+def active_fingerprint() -> Optional[str]:
+    """The backend fingerprint dispatch lookups are pinned to (None = any)."""
+    return _ACTIVE_FINGERPRINT
 
 
 def clear_store() -> None:

@@ -3,8 +3,7 @@
 import pytest
 
 from repro.analysis.hlo import collective_bytes, parse_collectives
-from repro.analysis.roofline import (RooflineTerms, model_flops,
-                                     roofline_from_artifacts)
+from repro.analysis.roofline import model_flops, roofline_from_artifacts
 from repro.configs import SHAPES, get_config
 
 HLO = """

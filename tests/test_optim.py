@@ -8,7 +8,7 @@ from hypothesis import given, settings, strategies as st
 from repro.optim import (AdamWConfig, adamw_init, adamw_update,
                          compress_grads, decompress_grads,
                          init_error_feedback)
-from repro.optim.adamw import _stochastic_round, global_norm
+from repro.optim.adamw import _stochastic_round
 
 
 def test_adamw_minimizes_quadratic():

@@ -1,10 +1,9 @@
 """Runtime kernel inference (paper §6): exhaustive search over the model."""
 
-import numpy as np
 import pytest
 
 from repro.core.backend import SimulatedTPUBackend
-from repro.core.search import enumerate_legal, exhaustive_search, oracle_search
+from repro.core.search import enumerate_legal, oracle_search
 from repro.core.space import GEMM_SPACE, gemm_input
 from repro.core.tuner import InputAwareTuner
 

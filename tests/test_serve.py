@@ -39,7 +39,6 @@ def test_continuous_batching_equals_single_slot(small_model):
     prompts = [rng.integers(0, 128, n) for n in (5, 9, 5, 7, 5)]
     multi = Engine(cfg, params, ServeConfig(max_len=64, slots=3))
     outs = multi.generate(prompts, max_new=8)
-    single = Engine(cfg, params, ServeConfig(max_len=64, slots=1))
     for p, o in zip(prompts[:3], outs[:3]):
         ref = Engine(cfg, params, ServeConfig(max_len=64, slots=1)
                      ).generate([p], max_new=8)[0]

@@ -1,11 +1,9 @@
 """Sharding rules: logical->physical resolution and divisibility dropping."""
 
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.parallel.sharding import (LOGICAL_RULES, logical_to_spec,
-                                     _axes_for)
+from repro.parallel.sharding import logical_to_spec, _axes_for
 
 
 class FakeMesh:

@@ -1,12 +1,10 @@
 """Parameter-space legality (paper §4: X vs X-hat)."""
 
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.space import (ATTENTION_SPACE, CONV_SPACE, GEMM_SPACE,
-                              SSD_SPACE, SPACES, gemm_input, conv_input,
-                              gemm_vmem_bytes, VMEM_USABLE)
+from repro.core.space import (CONV_SPACE, GEMM_SPACE, SPACES, gemm_input,
+                              conv_input, gemm_vmem_bytes, VMEM_USABLE)
 
 
 def test_cardinality():

@@ -16,7 +16,7 @@ import pytest
 
 from repro.core.backend import SimulatedTPUBackend
 from repro.core.space import GEMM_SPACE, gemm_input
-from repro.core.tuner import InputAwareTuner, clear_tuners, install_tuner
+from repro.core.tuner import InputAwareTuner, clear_tuners
 from repro.kernels import dispatch, ref
 from repro.tunedb import (RecordStore, ShapeTelemetry, TuneRecord,
                           clear_store, clear_telemetry, get_telemetry,

@@ -1,0 +1,481 @@
+"""tunedb model serving: fingerprint-keyed lookup, trained-model dispatch,
+artifact versioning, and graceful degradation of the serving path.
+
+Pins the PR-2 contracts: the store index is keyed by (backend, space,
+inputs) so one store serves several backends; `nearest` refuses dtype and
+layout mismatches; a model trained from store records survives
+persist -> fresh-process -> model-guided dispatch; unknown artifact schemas
+and missing/torn stores degrade serving with a single warning instead of
+taking it down; and the CLI round trip tune -> train -> predict works
+against one store file.
+"""
+
+import json
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.backend import SimulatedTPUBackend
+from repro.core.search import enumerate_legal
+from repro.core.space import GEMM_SPACE, gemm_input
+from repro.core.tuner import clear_tuners
+from repro.kernels import dispatch, ref
+from repro.tunedb import (RecordStore, TuneRecord, clear_store,
+                          clear_telemetry, install_store)
+from repro.tunedb.model import (MODEL_SCHEMA_VERSION, ModelSet,
+                                clear_models, collect_samples,
+                                default_models_dir, harvest, install_models,
+                                train_models)
+from repro.tunedb.session import backend_fingerprint
+from repro.tunedb.__main__ import main as tunedb_main
+
+CFG = {"bm": 64, "bn": 128, "bk": 128, "k_unroll": 1, "k_split": 1,
+       "order": 0, "acc32": 1, "prefetch": 2}
+
+
+@pytest.fixture(autouse=True)
+def _clean_globals():
+    def reset():
+        clear_tuners()
+        clear_store()
+        clear_models()
+        clear_telemetry()
+        dispatch.reset_fallback_warnings()
+    reset()
+    yield
+    reset()
+
+
+def _rec(m, n, k, *, backend="bk-A", bm=64, tflops=100.0, created_at=0.0,
+         bits=16, **extra):
+    return TuneRecord(space="gemm", inputs=gemm_input(m, n, k, bits, **extra),
+                      config=dict(CFG, bm=bm), tflops=tflops,
+                      backend=backend, created_at=created_at)
+
+
+# ---------------------------------------------------------------------------
+# fingerprint-keyed store
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_keyed_lookup_two_backends(tmp_path):
+    """Same shape tuned on two backends -> two independent records."""
+    path = tmp_path / "db.jsonl"
+    store = RecordStore.open(path)
+    store.add(_rec(512, 16, 2048, backend="bk-A", bm=64, created_at=1.0))
+    store.add(_rec(512, 16, 2048, backend="bk-B", bm=256, created_at=2.0))
+
+    fresh = RecordStore.open(path)
+    assert len(fresh) == 2                        # one per (backend, shape)
+    assert fresh.backends() == ["bk-A", "bk-B"]
+    inputs = gemm_input(512, 16, 2048)
+    assert fresh.get("gemm", inputs, backend="bk-A").config["bm"] == 64
+    assert fresh.get("gemm", inputs, backend="bk-B").config["bm"] == 256
+    assert fresh.get("gemm", inputs, backend="bk-C") is None
+    # backend=None -> newest record regardless of backend
+    assert fresh.get("gemm", inputs).config["bm"] == 256
+    # nearest is fingerprint-filtered too
+    near = fresh.nearest("gemm", gemm_input(640, 16, 2048), backend="bk-A")
+    assert near is not None and near.backend == "bk-A"
+    # export keeps both backends' records
+    out = tmp_path / "export.jsonl"
+    assert fresh.export(out) == 2
+
+
+def test_nearest_rejects_dtype_and_layout_mismatch():
+    store = RecordStore()
+    store.add(_rec(1024, 16, 2048, bm=128))
+    inputs = gemm_input(1152, 16, 2048)
+    assert store.nearest("gemm", inputs) is not None
+    # fp32 query must not borrow a bf16 neighbor
+    assert store.nearest("gemm", gemm_input(1152, 16, 2048, 32)) is None
+    # a transposed layout is not a neighbor of the plain layout
+    assert store.nearest("gemm", gemm_input(1152, 16, 2048,
+                                            trans_a=True)) is None
+    assert store.nearest("gemm", gemm_input(1152, 16, 2048,
+                                            trans_b=True)) is None
+
+
+def test_sample_records_train_but_never_serve():
+    store = RecordStore()
+    store.add(_rec(512, 16, 2048, bm=64))
+    store.add(TuneRecord(space="gemm", inputs=gemm_input(512, 16, 2048),
+                         config=dict(CFG, bm=8), tflops=1.0, backend="bk-A",
+                         source="sample"))
+    assert len(store) == 1
+    assert store.n_samples == 1
+    assert store.get("gemm", gemm_input(512, 16, 2048)).config["bm"] == 64
+    assert len(store.training_records()) == 2     # the model sees both
+
+
+# ---------------------------------------------------------------------------
+# model training + serving
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_trained():
+    """A small store + trained ModelSet shared by the model tests."""
+    backend = SimulatedTPUBackend(noise=0.02)
+    fp = backend_fingerprint(backend)
+    store = RecordStore()
+    for m, n, k in [(256, 128, 512), (512, 128, 512), (1024, 128, 1024),
+                    (512, 256, 512)]:
+        inputs = gemm_input(m, n, k)
+        legal = enumerate_legal(GEMM_SPACE, inputs)
+        scored = sorted(((c, backend.measure("gemm", c, inputs))
+                         for c in legal[::7]), key=lambda t: -t[1])
+        store.add(TuneRecord(space="gemm", inputs=inputs,
+                             config=scored[0][0], tflops=scored[0][1],
+                             backend=fp, source="session"))
+    collect_samples(store, backend, per_shape=40, seed=0)
+    models = train_models(store, epochs=8, hidden=(16, 16), seed=0)
+    return store, models, fp, backend
+
+
+def test_harvest_groups_by_space_and_backend(tiny_trained):
+    store, _, fp, _ = tiny_trained
+    store2 = RecordStore()
+    for rec in store.training_records():
+        store2.add(rec)
+    store2.add(_rec(512, 16, 2048, backend="other-backend"))
+    groups = harvest(store2)
+    assert ("gemm", fp) in groups
+    assert ("gemm", "other-backend") in groups
+    assert len(groups[("gemm", fp)]) == len(store2.training_records()) - 1
+
+
+def test_model_persist_fresh_process_dispatch_roundtrip(tiny_trained,
+                                                        tmp_path, rng):
+    """train -> persist -> 'fresh process' -> model-guided dispatch."""
+    store, models, fp, _ = tiny_trained
+    models.save(tmp_path / "models")
+
+    # "fresh process": nothing installed, artifacts reloaded from disk
+    clear_store()
+    clear_models()
+    loaded = ModelSet.load(tmp_path / "models")
+    assert len(loaded) == 1 and not loaded.skipped
+    serving_store = RecordStore()                 # empty: no exact, no nearest
+    install_store(serving_store)
+    install_models(loaded)
+
+    a = jnp.asarray(rng.normal(size=(384, 256)), jnp.bfloat16)
+    b = jnp.asarray(rng.normal(size=(256, 256)) / 16.0, jnp.bfloat16)
+    got = np.asarray(dispatch.matmul(a, b, prefer_kernel=True), np.float32)
+    want = np.asarray(ref.matmul_ref(a, b), np.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+    assert loaded.hits == 1                       # tier 2 served the shape
+    assert serving_store.nearest_hits == 0        # tier 3 never consulted
+
+    # second dispatch of the same shape: memo hit, still exactly one search
+    np.asarray(dispatch.matmul(a, b, prefer_kernel=True))
+    assert loaded.hits == 2
+
+
+def test_model_remeasure_hook_picks_measured_best(tiny_trained):
+    _, models, fp, backend = tiny_trained
+    inputs = gemm_input(768, 128, 768)
+    pure = models.predict("gemm", inputs, backend=fp)
+    ms = ModelSet(measurer=backend.measure, remeasure_top_k=6)
+    ms.models = models.models
+    cfg, tflops = ms.predict("gemm", inputs, backend=fp)
+    assert GEMM_SPACE.contains(cfg)
+    # the re-measured winner's throughput is a real measurement
+    assert tflops == pytest.approx(
+        backend.measure("gemm", cfg, inputs))
+    assert pure is not None
+
+
+def test_unknown_model_schema_is_skipped_with_warning(tiny_trained, tmp_path):
+    _, models, _, _ = tiny_trained
+    d = tmp_path / "models"
+    meta_path = next(iter(models.models.values())).save(d)
+    payload = json.loads(meta_path.read_text())
+    payload["model_schema_version"] = MODEL_SCHEMA_VERSION + 99
+    meta_path.write_text(json.dumps(payload))
+
+    with pytest.warns(RuntimeWarning, match="schema"):
+        loaded = ModelSet.load(d)
+    assert len(loaded) == 0
+    assert len(loaded.skipped) == 1
+    # a serving process keeps running on the lower tiers
+    assert loaded.predict("gemm", gemm_input(512, 128, 512)) is None
+
+
+def test_torn_artifact_is_skipped(tiny_trained, tmp_path):
+    _, models, _, _ = tiny_trained
+    d = tmp_path / "models"
+    meta_path = next(iter(models.models.values())).save(d)
+    meta_path.write_text('{"model_schema_version": 1, "space"')   # torn JSON
+    with pytest.warns(RuntimeWarning):
+        loaded = ModelSet.load(d)
+    assert len(loaded) == 0 and loaded.skipped
+
+
+def test_torn_npz_weights_are_skipped(tiny_trained, tmp_path):
+    """A valid meta .json next to truncated weights must not crash load."""
+    _, models, _, _ = tiny_trained
+    d = tmp_path / "models"
+    meta_path = next(iter(models.models.values())).save(d)
+    npz = meta_path.with_suffix(".npz")
+    npz.write_bytes(npz.read_bytes()[:20])        # crashed mid-write
+    with pytest.warns(RuntimeWarning, match="damaged"):
+        loaded = ModelSet.load(d)
+    assert len(loaded) == 0 and loaded.skipped
+
+
+# ---------------------------------------------------------------------------
+# dispatch degradation
+# ---------------------------------------------------------------------------
+
+def test_dispatch_degrades_to_heuristics_and_warns_once(rng):
+    install_store(RecordStore())                  # "healthy-looking" but empty
+    a = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(64, 128)) / 8.0, jnp.float32)
+    with pytest.warns(RuntimeWarning, match="heuristics"):
+        got = np.asarray(dispatch.matmul(a, b, prefer_kernel=True),
+                         np.float32)
+    np.testing.assert_allclose(got, np.asarray(ref.matmul_ref(a, b)),
+                               rtol=1e-4, atol=1e-4)
+    # warn-once: the second miss is silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        np.asarray(dispatch.matmul(a, b, prefer_kernel=True))
+
+
+def test_engine_warns_on_missing_store_and_serves(tmp_path):
+    import jax
+
+    from repro.models import ModelConfig, init_params
+    from repro.serve import Engine, ServeConfig
+
+    cfg = ModelConfig(name="t", n_layers=1, d_model=32, n_heads=2, n_kv=1,
+                      d_ff=64, vocab=64, dtype=jnp.float32, attn_chunk=16,
+                      logit_chunk=16, remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.warns(RuntimeWarning, match="does not exist"):
+        engine = Engine(cfg, params, ServeConfig(
+            max_len=32, slots=1, tunedb=str(tmp_path / "missing.jsonl")))
+    assert len(engine.tunedb_store) == 0
+    outs = engine.generate([np.arange(4)], max_new=4)
+    assert len(outs[0]) == 4
+
+
+def test_engine_warns_on_fully_torn_store(tmp_path):
+    import jax
+
+    from repro.models import ModelConfig, init_params
+    from repro.serve import Engine, ServeConfig
+
+    db = tmp_path / "torn.jsonl"
+    db.write_text('{"space": "gemm", "inp\n{"gar\n')   # nothing parseable
+    cfg = ModelConfig(name="t", n_layers=1, d_model=32, n_heads=2, n_kv=1,
+                      d_ff=64, vocab=64, dtype=jnp.float32, attn_chunk=16,
+                      logit_chunk=16, remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.warns(RuntimeWarning, match="torn"):
+        engine = Engine(cfg, params, ServeConfig(max_len=32, slots=1,
+                                                 tunedb=str(db)))
+    assert engine.tunedb_store.n_skipped == 2
+
+
+def test_engine_warmstart_loads_models(tiny_trained, tmp_path):
+    import jax
+
+    from repro.models import ModelConfig, init_params
+    from repro.serve import Engine, ServeConfig
+    from repro.tunedb.model import get_models
+
+    store, models, fp, _ = tiny_trained
+    db = tmp_path / "serve.jsonl"
+    disk = RecordStore.open(db)
+    for rec in store.records():
+        disk.add(rec)
+    models.save(default_models_dir(db))           # auto-discovered sibling
+
+    cfg = ModelConfig(name="t", n_layers=1, d_model=32, n_heads=2, n_kv=1,
+                      d_ff=64, vocab=64, dtype=jnp.float32, attn_chunk=16,
+                      logit_chunk=16, remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = Engine(cfg, params, ServeConfig(max_len=32, slots=1,
+                                             tunedb=str(db)))
+    assert get_models() is engine.tunedb_models
+    assert len(engine.tunedb_models) == 1
+
+    # a later Engine with a DIFFERENT store must not keep serving the
+    # previous store's regressors (tunedb_models="" disables the tier)
+    other = tmp_path / "other.jsonl"
+    RecordStore.open(other).add(
+        TuneRecord(space="gemm", inputs=gemm_input(512, 16, 2048),
+                   config=dict(CFG), tflops=1.0))
+    Engine(cfg, params, ServeConfig(max_len=32, slots=1, tunedb=str(other),
+                                    tunedb_models=""))
+    assert get_models() is None
+
+
+# ---------------------------------------------------------------------------
+# session sample collection
+# ---------------------------------------------------------------------------
+
+def test_session_skip_existing_is_fingerprint_scoped(tmp_path):
+    """A shape tuned on another backend is NOT 'already tuned' here."""
+    from repro.core.tuner import InputAwareTuner
+    from repro.tunedb.session import TuningSession
+
+    tuner = InputAwareTuner.train(
+        GEMM_SPACE, n_samples=400, hidden=(8, 8), epochs=2,
+        backend=SimulatedTPUBackend(noise=0.02), seed=0)
+    store = RecordStore.open(tmp_path / "db.jsonl")
+    shape = gemm_input(512, 128, 512)
+    store.add(TuneRecord(space="gemm", inputs=shape, config=dict(CFG),
+                         tflops=50.0, backend="some-other-backend"))
+
+    r = TuningSession(tuner, store, None, remeasure=False,
+                      workers=1).run(shapes=[shape])
+    assert r.tuned == 1 and r.skipped == 0        # other backend != tuned here
+    fp = backend_fingerprint(tuner.backend)
+    assert store.contains("gemm", shape, backend=fp)
+    # and THIS fingerprint's record short-circuits the next session
+    r2 = TuningSession(tuner, store, None, remeasure=False,
+                       workers=1).run(shapes=[shape])
+    assert r2.tuned == 0 and r2.skipped == 1
+
+
+def test_best_config_is_fingerprint_scoped(tmp_path):
+    """best_config must not serve another backend's record as its own."""
+    from repro.core.tuner import InputAwareTuner
+
+    tuner = InputAwareTuner.train(
+        GEMM_SPACE, n_samples=400, hidden=(8, 8), epochs=2,
+        backend=SimulatedTPUBackend(noise=0.02), seed=0)
+    store = RecordStore.open(tmp_path / "db.jsonl")
+    shape = gemm_input(512, 128, 512)
+    foreign = dict(CFG, bm=8, bn=1024)            # implausible tuned answer
+    store.add(TuneRecord(space="gemm", inputs=shape, config=foreign,
+                         tflops=50.0, backend="some-other-backend"))
+
+    tuner.store = store
+    cfg = tuner.best_config(shape, remeasure=False)
+    fp = backend_fingerprint(tuner.backend)
+    mine = store.get("gemm", shape, backend=fp)
+    assert mine is not None                       # fresh search committed
+    assert cfg == mine.config
+
+
+def test_cli_predict_no_legal_config_fails_cleanly(tiny_trained, tmp_path,
+                                                   capsys, monkeypatch):
+    from repro.tunedb import model as model_mod
+
+    _, models, _, _ = tiny_trained
+    d = tmp_path / "models"
+    models.save(d)
+
+    def boom(self, inputs, *, top_k=1, candidates=None):
+        raise ValueError(f"no legal configuration for inputs {inputs}")
+    monkeypatch.setattr(model_mod.PerfModel, "predict_config", boom)
+    rc = tunedb_main(["predict", "--models-dir", str(d), "--space", "gemm",
+                      "--shape", "M=512,N=128,K=512"])
+    assert rc == 1
+    assert "predict failed" in capsys.readouterr().err
+
+
+def test_session_commits_measured_topk_as_samples(tmp_path):
+    from repro.core.tuner import InputAwareTuner
+    from repro.tunedb.session import TuningSession
+
+    tuner = InputAwareTuner.train(
+        GEMM_SPACE, n_samples=400, hidden=(8, 8), epochs=2,
+        backend=SimulatedTPUBackend(noise=0.02), seed=0)
+    store = RecordStore.open(tmp_path / "db.jsonl")
+    report = TuningSession(tuner, store, None, remeasure=True,
+                           workers=1).run(shapes=[gemm_input(512, 128, 512)])
+    assert report.tuned == 1
+    assert len(store) == 1                        # one serving record
+    assert store.n_samples >= 5                   # losing top-k became samples
+    # and they persist: a fresh open sees the same training log
+    fresh = RecordStore.open(tmp_path / "db.jsonl")
+    assert fresh.n_samples == store.n_samples
+    assert len(fresh.training_records()) == 1 + store.n_samples
+
+
+# ---------------------------------------------------------------------------
+# CLI: tune -> train -> predict -> models from one store
+# ---------------------------------------------------------------------------
+
+def test_cli_train_predict_models_roundtrip(tmp_path, capsys):
+    db = tmp_path / "db.jsonl"
+    rc = tunedb_main([
+        "tune", "--space", "gemm", "--store", str(db),
+        "--train-samples", "400", "--epochs", "2", "--workers", "1",
+        "--shape", "M=512,N=128,K=512", "--shape", "M=1024,N=128,K=512"])
+    assert rc == 0
+
+    rc = tunedb_main([
+        "train", "--store", str(db), "--samples-per-shape", "30",
+        "--min-samples", "20", "--epochs", "3", "--hidden", "16,16"])
+    assert rc == 0
+    assert default_models_dir(db).is_dir()
+
+    capsys.readouterr()
+    rc = tunedb_main(["predict", "--store", str(db), "--space", "gemm",
+                      "--shape", "M=768,N=128,K=512", "--top-k", "3"])
+    assert rc == 0
+    out = json.loads(capsys.readouterr().out.strip())
+    assert GEMM_SPACE.contains(out["config"])
+    assert out["predicted_tflops"] > 0
+    assert len(out["top_k"]) == 3
+
+    rc = tunedb_main(["models", "--store", str(db)])
+    assert rc == 0
+    stats = json.loads(capsys.readouterr().out)
+    assert len(stats["models"]) == 1
+
+    # stats reports the sample log
+    rc = tunedb_main(["stats", "--store", str(db)])
+    assert rc == 0
+    st = json.loads(capsys.readouterr().out)
+    assert st["store"]["sample_records"] >= 60
+
+
+def test_cli_predict_without_model_fails_cleanly(tmp_path, capsys):
+    rc = tunedb_main(["predict", "--store", str(tmp_path / "db.jsonl"),
+                      "--space", "gemm", "--shape", "M=512,N=128,K=512"])
+    assert rc == 1
+    assert "no model" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# gate checker
+# ---------------------------------------------------------------------------
+
+def test_check_gates_validates_results(tmp_path, capsys):
+    from benchmarks.check_gates import check
+
+    d = tmp_path / "bench"
+    d.mkdir()
+    (d / "tunedb.json").write_text(json.dumps(
+        {"overhead_frac": 0.01, "pass": True}))
+    (d / "model.json").write_text(json.dumps(
+        {"quality": {"pass": True, "geomean": 0.95, "threshold": 0.9,
+                     "geomean_nearest": 0.9},
+         "overhead": {"pass": True, "added_frac": 0.001, "cold_model_ms": 50},
+         "pass": True}))
+    (d / "other.json").write_text(json.dumps({"pass": True}))
+    assert check(d, require=["tunedb", "model"]) == 0
+
+    # a failing gate and a missing required file both fail the run
+    (d / "model.json").write_text(json.dumps(
+        {"quality": {"pass": False, "geomean": 0.5, "threshold": 0.9,
+                     "geomean_nearest": 0.9},
+         "overhead": {"pass": True, "added_frac": 0.001, "cold_model_ms": 50},
+         "pass": False}))
+    capsys.readouterr()
+    assert check(d, require=["tunedb", "model"]) == 1
+    assert check(d / "nope", require=["tunedb"]) == 1
+    report = capsys.readouterr().out
+    assert "FAIL" in report
+
+    # a required-but-unparseable result file fails the run too
+    (d / "model.json").write_text('{"quality": {"pa')
+    assert check(d, require=["tunedb", "model"]) == 1
