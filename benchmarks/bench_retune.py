@@ -1,0 +1,249 @@
+"""E12 — continuous retuning: a traffic shift triggers tune+retrain+hot-swap.
+
+The closed-loop claim of PR 3: when serving traffic's hot-shape mass moves to
+shapes nobody tuned, the RetuneController must notice (telemetry epoch
+drift), tune the novel shapes in-process, retrain the affected regressors,
+and atomically hot-swap the serving store/ModelSet — no restart.  Two gates:
+
+  1. QUALITY — after a synthetic traffic shift (a new hot GEMM set absent
+     from the store) and one controller pass, dispatch resolution for the
+     new hot set must reach >= 90% of the oracle-best TFLOPS (geomean).
+     The oracle is an exhaustive noise-free scan per shape; the pre-retune
+     resolution (model/nearest tiers trained on yesterday's shapes) is
+     reported alongside as the staleness baseline.
+
+  2. OVERHEAD — the controller must be ~free when traffic is steady: the
+     per-tick cost it adds to a decode loop (jit tick-telemetry replay +
+     an epoch-diff poll every ``retune_interval`` ticks, amortized) must
+     stay < 2% of a decode tick.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.backend import SimulatedTPUBackend
+from repro.core.search import enumerate_legal
+from repro.core.space import GEMM_SPACE, gemm_input
+from repro.core.tuner import clear_tuners
+from repro.kernels import dispatch
+from repro.tunedb import (RecordStore, TuneRecord, clear_store,
+                          clear_telemetry, get_telemetry, install_serving,
+                          serving_state)
+from repro.tunedb.controller import RetuneConfig, RetuneController
+from repro.tunedb.model import clear_models, collect_samples, train_models
+from repro.tunedb.session import backend_fingerprint
+
+from .common import get_trained_tuner, save, table
+
+QUALITY_THRESHOLD = 0.90        # post-retune fraction of oracle-best TFLOPS
+OVERHEAD_THRESHOLD = 0.02       # controller's share of a decode tick
+RETUNE_INTERVAL = 64            # ticks between polls (ServeConfig default)
+
+# yesterday's hot set: what the fleet tuned before the shift ...
+OLD_HOT = [(m, n, k)
+           for m in (256, 1024, 4096)
+           for n in (16, 64, 256)
+           for k in (512, 2560)]
+# ... and where traffic moves: novel shapes with no store record
+NEW_HOT = [(384, 48, 1536), (1792, 24, 896), (896, 320, 896),
+           (2304, 96, 1152), (576, 160, 2304)]
+
+
+def _geomean(xs) -> float:
+    return float(np.exp(np.mean(np.log(np.maximum(xs, 1e-9)))))
+
+
+def _build_store(label: SimulatedTPUBackend, fp: str, topk: int
+                 ) -> RecordStore:
+    """Tuned best + measured top-k per OLD shape (a past session's output)."""
+    store = RecordStore()
+    for m, n, k in OLD_HOT:
+        inputs = gemm_input(m, n, k)
+        scored = sorted(((c, label.measure("gemm", c, inputs))
+                         for c in enumerate_legal(GEMM_SPACE, inputs)),
+                        key=lambda t: -t[1])
+        store.add(TuneRecord(space="gemm", inputs=inputs, config=scored[0][0],
+                             tflops=scored[0][1], backend=fp,
+                             source="session"))
+        for cfg, tf in scored[1:1 + topk]:
+            store.add(TuneRecord(space="gemm", inputs=inputs,
+                                 config=dict(cfg), tflops=tf, backend=fp,
+                                 source="sample"))
+    return store
+
+
+def _resolution_ratios(oracle: SimulatedTPUBackend) -> dict:
+    """dispatch._tuned_cfg quality on the NEW hot set vs the oracle best."""
+    out = {}
+    for m, n, k in NEW_HOT:
+        inputs = gemm_input(m, n, k)
+        best = max(oracle.measure("gemm", c, inputs)
+                   for c in enumerate_legal(GEMM_SPACE, inputs))
+        cfg = dispatch._tuned_cfg("gemm", inputs)
+        out[(m, n, k)] = (oracle.measure("gemm", cfg, inputs) / best
+                          if cfg else 0.0)
+    return out
+
+
+def _overhead(controller: RetuneController, fast: bool) -> dict:
+    """Steady-state controller cost against a real jitted decode tick."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import ModelConfig, init_params
+    from repro.serve import Engine, ServeConfig
+
+    cfg = ModelConfig(name="bench", n_layers=2, d_model=128, n_heads=4,
+                      n_kv=2, d_ff=256, vocab=128, dtype=jnp.float32,
+                      attn_chunk=16, logit_chunk=16, remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = Engine(cfg, params, ServeConfig(max_len=128, slots=2))
+    rng = np.random.default_rng(0)
+    engine.generate([rng.integers(0, 128, 8)], max_new=4)   # compile
+    n_ticks = 24 if fast else 96
+    ticks_before = engine.ticks
+    t0 = time.perf_counter()
+    engine.generate([rng.integers(0, 128, 8)], max_new=n_ticks)
+    t_tick = ((time.perf_counter() - t0)
+              / max(engine.ticks - ticks_before, 1))
+
+    # the two costs retuning adds to that tick: the jit tick-telemetry
+    # replay, and (amortized) the controller's no-trigger epoch-diff poll
+    shapes = engine._decode_shapes or []
+    tel = get_telemetry()
+    iters = 300 if fast else 2000
+    t1 = time.perf_counter()
+    for _ in range(iters):
+        tel.record_ticks(shapes)
+    t_hook = (time.perf_counter() - t1) / iters
+
+    # steady-state polls: the window holds only already-tuned traffic, so
+    # every poll runs the full epoch diff + untuned-mass scan and declines
+    controller.reset_baseline()
+    for m, n, k in OLD_HOT:
+        tel.record("gemm", gemm_input(m, n, k), n=5)
+    t2 = time.perf_counter()
+    for _ in range(iters):
+        assert controller.maybe_retune() is None     # steady: no trigger
+    t_poll = (time.perf_counter() - t2) / iters
+
+    added = (t_hook + t_poll / RETUNE_INTERVAL) / t_tick
+    rows = [
+        {"path": "decode tick (jitted, 2L/128d engine)",
+         "cost": f"{t_tick*1e3:.2f} ms"},
+        {"path": f"tick hook: record_ticks x{len(shapes)} shapes",
+         "cost": f"{t_hook*1e6:.1f} us"},
+        {"path": f"controller poll (1/{RETUNE_INTERVAL} ticks, no trigger)",
+         "cost": f"{t_poll*1e6:.1f} us"},
+    ]
+    print()
+    print(table(rows, ["path", "cost"], "E12 — steady-state controller cost"))
+    print(f"\ncontroller adds {added*100:.3f}% of a decode tick "
+          f"(gate < {OVERHEAD_THRESHOLD:.0%})")
+    return {"tick_ms": t_tick * 1e3, "hook_us": t_hook * 1e6,
+            "poll_us": t_poll * 1e6, "interval": RETUNE_INTERVAL,
+            "n_decode_shapes": len(shapes), "added_frac": added,
+            "threshold": OVERHEAD_THRESHOLD,
+            "pass": added < OVERHEAD_THRESHOLD}
+
+
+def run(fast: bool = True) -> dict:
+    clear_tuners()
+    clear_store()
+    clear_models()
+    clear_telemetry()
+
+    label = SimulatedTPUBackend(noise=0.03)
+    oracle = SimulatedTPUBackend(noise=0.0)
+    fp = backend_fingerprint(label)
+    topk, per_shape, epochs = (10, 40, 60) if fast else (20, 100, 150)
+
+    # yesterday: a fleet tuned OLD_HOT, trained regressors, serving installed
+    t0 = time.time()
+    store = _build_store(label, fp, topk)
+    collect_samples(store, label, per_shape=per_shape, seed=0)
+    models = train_models(store, epochs=epochs, hidden=(64, 128, 64), seed=0)
+    models.measurer = label.measure
+    install_serving(store=store, models=models, fingerprint=None)
+    print(f"[retune] warm store: {len(store)} shapes, "
+          f"{store.n_samples} samples in {time.time()-t0:.1f}s")
+
+    # steady traffic on the old hot set, then the controller opens its epoch
+    tel = get_telemetry()
+    for m, n, k in OLD_HOT:
+        tel.record("gemm", gemm_input(m, n, k), n=20)
+    # a wider §6 re-measure pool than the tuner default: the retune session
+    # serves these configs as exact hits forever after, so spending a few
+    # extra measurements per novel shape buys real post-retune throughput
+    import dataclasses
+    tuner = dataclasses.replace(get_trained_tuner("gemm", fast=fast),
+                                top_k=24)
+    controller = RetuneController(
+        store, tuners={"gemm": tuner},
+        cfg=RetuneConfig(drift_threshold=0.25, untuned_mass_threshold=0.5,
+                         min_calls=32, top_k_shapes=len(NEW_HOT),
+                         workers=2, remeasure=True, retrain=True,
+                         train_epochs=40))
+    gen_before = serving_state().generation
+
+    # the shift: traffic moves to NEW_HOT, none of it in the store
+    pre = _resolution_ratios(oracle)         # stale tiers serve the new set
+    for m, n, k in NEW_HOT:
+        tel.record("gemm", gemm_input(m, n, k), n=40)
+
+    decisions = controller.check()
+    dec = decisions["gemm"]
+    print(f"[retune] shift detected: drift {dec.drift:.3f}, untuned mass "
+          f"{dec.untuned_mass:.3f}, {len(dec.novel_shapes)} novel shapes")
+    t0 = time.time()
+    report = controller.maybe_retune()
+    assert report is not None, "traffic shift failed to trigger a retune"
+    gen_after = serving_state().generation
+    print(f"[retune] epoch {report.epoch}: tuned {report.tuned}, retrained "
+          f"{report.retrained}, generation {gen_before} -> {gen_after} "
+          f"in {report.wall_s:.1f}s")
+
+    post = _resolution_ratios(oracle)        # exact hits on the fresh records
+    rows = [{"shape": f"{m}x{n}x{k}",
+             "pre-retune": f"{pre[(m, n, k)]:.3f}",
+             "post-retune": f"{post[(m, n, k)]:.3f}"}
+            for m, n, k in NEW_HOT]
+    g_pre, g_post = _geomean(list(pre.values())), _geomean(list(post.values()))
+    print()
+    print(table(rows, ["shape", "pre-retune", "post-retune"],
+                "E12 — fraction of oracle-best TFLOPS on the shifted hot set"))
+    print(f"\ngeomean: pre-retune {g_pre:.3f} -> post-retune {g_post:.3f} "
+          f"(gate >= {QUALITY_THRESHOLD})")
+    quality = {"geomean": g_post, "geomean_pre": g_pre,
+               "min": float(min(post.values())), "rows": rows,
+               "threshold": QUALITY_THRESHOLD,
+               "pass": g_post >= QUALITY_THRESHOLD}
+
+    overhead = _overhead(controller, fast)
+
+    ok = (quality["pass"] and overhead["pass"]
+          and report.tuned > 0 and gen_after > gen_before)
+    print(f"\nacceptance: quality {'PASS' if quality['pass'] else 'FAIL'} "
+          f"(geomean {g_post:.3f} >= {QUALITY_THRESHOLD}), overhead "
+          f"{'PASS' if overhead['pass'] else 'FAIL'} "
+          f"({overhead['added_frac']*100:.3f}% < {OVERHEAD_THRESHOLD:.0%})")
+    payload = {
+        "quality": quality, "overhead": overhead,
+        "shift": {"drift": dec.drift, "untuned_mass": dec.untuned_mass,
+                  "window_calls": dec.window_calls},
+        "retune": {"tuned": report.tuned, "retrained": report.retrained,
+                   "generation": gen_after, "wall_s": report.wall_s},
+        "pass": ok,
+    }
+    save("retune", payload)
+    clear_store()
+    clear_models()
+    clear_telemetry()
+    return payload
+
+
+if __name__ == "__main__":
+    run()

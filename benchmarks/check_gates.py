@@ -68,6 +68,26 @@ GATES: List[Gate] = [
             f"{_get(r, 'overhead', 'cold_model_ms', default=0):.0f} ms, "
             "paid once per novel shape)"),
     ),
+    Gate(
+        file="retune",
+        name="post-retune dispatch >= 90% of oracle TFLOPS on shifted hot set",
+        check=lambda r: _get(r, "quality", "pass") is True,
+        detail=lambda r: (
+            f"geomean {_get(r, 'quality', 'geomean', default=0):.3f} "
+            f"(threshold {_get(r, 'quality', 'threshold', default=0.9)}, "
+            f"pre-retune {_get(r, 'quality', 'geomean_pre', default=0):.3f})"),
+    ),
+    Gate(
+        file="retune",
+        name="retune controller adds < 2% to a steady-state decode tick",
+        check=lambda r: _get(r, "overhead", "pass") is True,
+        detail=lambda r: (
+            f"adds {_get(r, 'overhead', 'added_frac', default=1):.3%} "
+            f"of a decode tick (hook "
+            f"{_get(r, 'overhead', 'hook_us', default=0):.1f} us + poll "
+            f"{_get(r, 'overhead', 'poll_us', default=0):.1f} us / "
+            f"{_get(r, 'overhead', 'interval', default=64)} ticks)"),
+    ),
 ]
 
 

@@ -8,6 +8,7 @@ One benchmark per paper table/figure (DESIGN.md §8 experiment index):
   E9 roofline  — from dry-run artifacts (run launch.dryrun first)
   E10 tunedb   — record-store lookup overhead on the dispatch hot path
   E11 model    — model-guided dispatch: quality vs oracle + overhead
+  E12 retune   — continuous retuning: traffic shift -> session -> hot-swap
 
 Gate validation: ``python -m benchmarks.check_gates`` after a run.
 """
@@ -28,7 +29,7 @@ def main() -> None:
     fast = not args.full
 
     from . import (bench_conv, bench_gemm, bench_kernels, bench_mlp,
-                   bench_model, bench_roofline, bench_sampler,
+                   bench_model, bench_retune, bench_roofline, bench_sampler,
                    bench_selection, bench_tunedb)
     suites = {
         "sampler": lambda: bench_sampler.run(fast),
@@ -41,6 +42,7 @@ def main() -> None:
         "roofline": lambda: bench_roofline.run(fast),
         "tunedb": lambda: bench_tunedb.run(fast),
         "model": lambda: bench_model.run(fast),
+        "retune": lambda: bench_retune.run(fast),
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     t_all = time.time()

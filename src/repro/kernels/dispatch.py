@@ -39,7 +39,13 @@ def _warn_once(key: tuple, msg: str) -> None:
 
 
 def reset_fallback_warnings() -> None:
-    """Re-arm the warn-once latches (tests; store/model reinstall)."""
+    """Re-arm the warn-once latches (tests; store/model reinstall).
+
+    ``tunedb.store.install_serving`` calls this on EVERY install/hot-swap:
+    a fresh store or ModelSet generation that degrades deserves its own
+    warning — a latch left over from a degraded predecessor must not
+    silently swallow it.
+    """
     _WARNED.clear()
 
 
@@ -92,18 +98,21 @@ def _tuned_cfg(space_name: str, inputs: Mapping[str, int]
     models are installed), dispatch degrades to the vendor-style heuristics
     and warns once — a missing/torn store file or an unreadable model
     artifact must never take serving down.
+
+    The store, ModelSet, and fingerprint pin come from ONE atomic
+    ``serving_state()`` read: a concurrent retune hot-swap
+    (``install_serving``) flips the whole generation at once, so a
+    resolution never mixes the old store with the new models or vice versa.
     """
     from repro.core.tuner import get_tuner
     tuner = get_tuner(space_name)
     if tuner is not None:
         return tuner.best_config(inputs, remeasure=False)
-    from repro.tunedb.model import get_models
-    from repro.tunedb.store import active_fingerprint, get_store
-    store = get_store()
-    models = get_models()
+    from repro.tunedb.store import serving_state
+    state = serving_state()
+    store, models, fp = state.store, state.models, state.fingerprint
     if store is None and models is None:
         return None                      # untuned process: ops defaults
-    fp = active_fingerprint()
     if store is not None:
         rec = store.get(space_name, inputs, backend=fp)
         if rec is not None:              # tier 1: exact record hit

@@ -21,6 +21,15 @@ def main() -> None:
     p.add_argument("--max-new", type=int, default=32)
     p.add_argument("--max-len", type=int, default=256)
     p.add_argument("--temperature", type=float, default=0.0)
+    p.add_argument("--tunedb", default=None,
+                   help="warm-start kernel dispatch from this record store")
+    p.add_argument("--tunedb-backend", default=None,
+                   help="pin dispatch to one backend fingerprint")
+    p.add_argument("--retune", action="store_true",
+                   help="enable in-process continuous retuning "
+                        "(drift-triggered sessions + model hot-swap)")
+    p.add_argument("--retune-interval", type=int, default=64,
+                   help="decode ticks between retune-controller polls")
     args = p.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -34,7 +43,9 @@ def main() -> None:
     params = init_params(cfg, jax.random.PRNGKey(0))
     eng = Engine(cfg, params, ServeConfig(
         max_len=args.max_len, slots=args.slots,
-        temperature=args.temperature))
+        temperature=args.temperature, tunedb=args.tunedb,
+        tunedb_backend=args.tunedb_backend, retune=args.retune,
+        retune_interval=args.retune_interval))
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab, args.prompt_len)
                for _ in range(args.requests)]
@@ -46,6 +57,10 @@ def main() -> None:
     print(f"{len(outs)} requests, {total} tokens in {dt:.2f}s "
           f"({total/dt:.1f} tok/s, {eng.ticks} decode ticks, "
           f"{total/max(eng.ticks,1):.2f} tokens/tick)")
+    if eng.controller is not None:
+        st = eng.controller.stats()
+        print(f"retune: {st['retunes']} epoch(s) over {st['checks']} polls, "
+              f"serving generation {st['generation']}")
 
 
 if __name__ == "__main__":

@@ -40,6 +40,14 @@ class ServeConfig:
     # pin dispatch lookups to one backend fingerprint (multi-backend stores);
     # None keeps the any-backend single-backend behavior
     tunedb_backend: Optional[str] = None
+    # -- continuous retuning (tunedb.controller.RetuneController) ------------
+    retune: bool = False            # close the telemetry->tune->serve loop
+    retune_interval: int = 64       # decode ticks between controller polls
+    retune_drift: float = 0.25      # hot-shape mass TV distance trigger
+    retune_untuned_mass: float = 0.5   # untuned fraction of window trigger
+    retune_min_calls: int = 32      # window calls before a space is judged
+    retune_top_k: int = 4           # novel hot shapes tuned per session
+    retune_train: bool = True       # retrain + hot-swap regressors too
 
 
 @dataclasses.dataclass
@@ -50,7 +58,8 @@ class Request:
 
 
 class Engine:
-    def __init__(self, cfg: ModelConfig, params: Any, serve_cfg: ServeConfig):
+    def __init__(self, cfg: ModelConfig, params: Any, serve_cfg: ServeConfig,
+                 *, retune_tuners: Optional[Dict[str, Any]] = None):
         self.cfg, self.params, self.sc = cfg, params, serve_cfg
         # Warm start (tunedb): install the record store + model artifacts so
         # kernel dispatch resolves tuned configs from day-one traffic without
@@ -63,6 +72,7 @@ class Engine:
         # instead of failing the engine.
         self.tunedb_store = None
         self.tunedb_models = None
+        self._models_dir = None
         if serve_cfg.tunedb or serve_cfg.tunedb_models:
             import pathlib
             import warnings
@@ -90,9 +100,17 @@ class Engine:
                               fingerprint=serve_cfg.tunedb_backend)
                 if models_dir is None:       # auto-discover next to the store
                     models_dir = default_models_dir(store_path)
+            else:
+                # models-only config: no store install runs, but the explicit
+                # backend pin must still take effect — otherwise the model
+                # tier serves the newest any-backend regressor (or a prior
+                # engine's stale pin) despite `tunedb_backend`
+                from repro.tunedb.store import install_serving
+                install_serving(fingerprint=serve_cfg.tunedb_backend)
             models = ModelSet.load(models_dir) if models_dir else ModelSet()
             if len(models) or models.skipped:
                 self.tunedb_models = models
+            self._models_dir = models_dir or None
             # retarget the global model tier to THIS config's artifacts —
             # including installing None when there are none (or the tier is
             # disabled with tunedb_models="") so a previous Engine's
@@ -107,18 +125,75 @@ class Engine:
         self._decode = jax.jit(
             lambda p, t, c, i: decode_step(p, cfg, t, c, i))
         self._prefill_fns: Dict[int, Callable] = {}
+        # jit tick telemetry: dispatch records at TRACE time only, so the
+        # engine captures which kernel shapes each compiled program executes
+        # and replays them per tick — true frequencies, not a compile census
+        self._decode_shapes: Optional[List] = None
+        self._prefill_shapes: Dict[int, List] = {}
+        self.controller = None
+        self._next_retune_tick = 0
+        if serve_cfg.retune:
+            self._init_controller(retune_tuners)
+
+    def _init_controller(self, retune_tuners: Optional[Dict[str, Any]]) -> None:
+        """Close the loop in-process: drift-triggered sessions + hot-swap.
+
+        Uses the warm-start store when one was configured; otherwise installs
+        a fresh in-memory store so session results have somewhere to land
+        (and exact-tier dispatch picks them up immediately)."""
+        from repro.tunedb import RecordStore, install_store
+        from repro.tunedb.controller import RetuneConfig, RetuneController
+        from repro.tunedb.store import get_store
+        sc = self.sc
+        store = self.tunedb_store or get_store()
+        if store is None:
+            store = RecordStore()
+            install_store(store, fingerprint=sc.tunedb_backend)
+            self.tunedb_store = store
+        self.controller = RetuneController(
+            store,
+            tuners=retune_tuners,
+            models_dir=self._models_dir,
+            cfg=RetuneConfig(
+                drift_threshold=sc.retune_drift,
+                untuned_mass_threshold=sc.retune_untuned_mass,
+                min_calls=sc.retune_min_calls,
+                top_k_shapes=sc.retune_top_k,
+                retrain=sc.retune_train))
+        self._next_retune_tick = sc.retune_interval
+
+    def maybe_retune(self):
+        """Poll the retune controller every ``retune_interval`` decode ticks.
+
+        Returns the RetuneReport when a drift-triggered retune ran this
+        tick, else None.  A no-trigger poll is a telemetry snapshot diff —
+        microseconds against a multi-millisecond decode tick."""
+        if self.controller is None or self.ticks < self._next_retune_tick:
+            return None
+        self._next_retune_tick = self.ticks + self.sc.retune_interval
+        return self.controller.maybe_retune()
 
     # -- prefill ---------------------------------------------------------------
     def _prefill_one(self, slot: int, req: Request) -> None:
+        from repro.tunedb.telemetry import get_telemetry
+
         cfg, sc = self.cfg, self.sc
         n = len(req.prompt)
+        tokens = jnp.asarray(req.prompt[None])
         if n not in self._prefill_fns:
             def fn(params, tokens):
                 single = init_cache(cfg, 1, sc.max_len)
                 return prefill(params, cfg, {"tokens": tokens}, single)
             self._prefill_fns[n] = jax.jit(fn)
-        logits, single = self._prefill_fns[n](
-            self.params, jnp.asarray(req.prompt[None]))
+            # compiling call: capture the kernel shapes this prompt length
+            # traces (the census count doubles as this execution's tick)
+            with get_telemetry().capture() as cap:
+                logits, single = self._prefill_fns[n](self.params, tokens)
+            self._prefill_shapes[n] = cap.shapes
+        else:
+            logits, single = self._prefill_fns[n](self.params, tokens)
+            if self._prefill_shapes.get(n):
+                get_telemetry().record_ticks(self._prefill_shapes[n])
 
         def merge(big, small):
             # big (repeats, slots, ...); small (repeats, 1, ...)
@@ -159,14 +234,25 @@ class Engine:
 
             # one decode tick for every slot (idle slots run on garbage that
             # is discarded — static shapes, zero recompiles)
+            from repro.tunedb.telemetry import get_telemetry
             last = np.array([
                 (r.out[-1] if r is not None and r.out else 0)
                 for r in self.slot_req], np.int32)[:, None]
             idx = jnp.asarray(self.lengths, jnp.int32)      # per-slot position
-            logits, self.cache = self._decode(
-                self.params, jnp.asarray(last), self.cache, idx)
+            if self._decode_shapes is None:
+                # compiling tick: the trace-time census IS this tick's count
+                with get_telemetry().capture() as cap:
+                    logits, self.cache = self._decode(
+                        self.params, jnp.asarray(last), self.cache, idx)
+                self._decode_shapes = cap.shapes
+            else:
+                logits, self.cache = self._decode(
+                    self.params, jnp.asarray(last), self.cache, idx)
+                if self._decode_shapes:
+                    get_telemetry().record_ticks(self._decode_shapes)
             toks = self._sample(np.asarray(logits)[:, : cfg.vocab])
             self.ticks += 1
+            self.maybe_retune()
 
             for s, req in enumerate(self.slot_req):
                 if req is None:

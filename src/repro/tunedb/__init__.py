@@ -3,37 +3,49 @@
 The persistence backbone of the input-aware runtime:
 
   store.py      versioned append-only JSONL record store (fingerprint-keyed),
-                nearest-shape lookup
-  telemetry.py  (space, input-shape) frequency counters fed by kernel dispatch
+                nearest-shape lookup, and the ATOMIC process-global serving
+                state (store + ModelSet + fingerprint pin swap as one
+                generation: ``install_serving`` / ``serving_state``)
+  telemetry.py  (space, input-shape) frequency counters fed by kernel
+                dispatch, engine tick counters for true frequencies under
+                jit, and epoch snapshots (``snapshot``/``diff``) for drift
   model.py      performance regressors trained FROM the store, served per
                 (space, backend fingerprint) at dispatch (paper §5-§6)
   session.py    tune the top-K hot shapes on a worker pool, commit to a store
+  controller.py RetuneController — drift-triggered sessions, retrain, and
+                atomic store/ModelSet hot-swap: the loop closed in-process
   __main__.py   ``python -m repro.tunedb`` tune / train / predict / models /
-                stats / export / merge CLI
+                retune / watch / stats / export / merge CLI
 
-The loop: dispatch records every kernel call's shape -> a TuningSession mines
-the hottest shapes and tunes them -> ``train`` distills the accumulated
-measurements into per-(space, backend) MLP regressors -> serving processes
-warm-start from the store + model artifacts and resolve configs three-tier:
-exact record hit, model-guided search, nearest-shape fallback — no tuner in
-the process at all.
+The loop, continuous since PR 3: dispatch records every kernel call's shape
+(and the serving engine replays jit-compiled shapes per decode tick) -> the
+RetuneController diffs telemetry epochs and, when hot-shape mass drifts or
+untuned mass grows, runs a TuningSession over the novel shapes -> ``train``
+distills the grown measurement log into per-(space, backend) MLP regressors
+-> ``install_serving`` hot-swaps the process-global store/ModelSet in one
+generation, and dispatch keeps resolving three-tier (exact hit ->
+model-guided search -> nearest-shape) without a restart.
 """
 
-from .store import (SCHEMA_VERSION, RecordStore, TuneRecord,
-                    active_fingerprint, clear_store, get_store, input_key,
-                    install_store, normalize_config)
-from .telemetry import (ShapeTelemetry, clear_telemetry, get_telemetry,
-                        record_shape)
+from .store import (SCHEMA_VERSION, RecordStore, ServingState, TuneRecord,
+                    active_fingerprint, clear_store, get_store,
+                    input_key, install_generation, install_serving,
+                    install_store, normalize_config, serving_state)
+from .telemetry import (ShapeTelemetry, SpaceDrift, TelemetrySnapshot,
+                        clear_telemetry, get_telemetry, record_shape)
 
 __all__ = [
-    "SCHEMA_VERSION", "RecordStore", "TuneRecord", "active_fingerprint",
-    "clear_store", "get_store", "input_key", "install_store",
-    "normalize_config",
-    "ShapeTelemetry", "clear_telemetry", "get_telemetry", "record_shape",
+    "SCHEMA_VERSION", "RecordStore", "ServingState", "TuneRecord",
+    "active_fingerprint", "clear_store", "get_store", "input_key",
+    "install_generation", "install_serving", "install_store",
+    "normalize_config", "serving_state",
+    "ShapeTelemetry", "SpaceDrift", "TelemetrySnapshot", "clear_telemetry",
+    "get_telemetry", "record_shape",
     "TuningSession", "TuneJob", "SessionReport", "backend_fingerprint",
     "MODEL_SCHEMA_VERSION", "ModelSet", "PerfModel", "clear_models",
     "collect_samples", "default_models_dir", "get_models", "harvest",
     "install_models", "train_models",
+    "RetuneConfig", "RetuneController", "RetuneReport", "SpaceDecision",
 ]
 
 _SESSION_NAMES = ("TuningSession", "TuneJob", "SessionReport",
@@ -41,6 +53,8 @@ _SESSION_NAMES = ("TuningSession", "TuneJob", "SessionReport",
 _MODEL_NAMES = ("MODEL_SCHEMA_VERSION", "ModelSet", "PerfModel",
                 "clear_models", "collect_samples", "default_models_dir",
                 "get_models", "harvest", "install_models", "train_models")
+_CONTROLLER_NAMES = ("RetuneConfig", "RetuneController", "RetuneReport",
+                     "SpaceDecision")
 
 
 def __getattr__(name):
@@ -54,4 +68,8 @@ def __getattr__(name):
         from . import model
 
         return getattr(model, name)
+    if name in _CONTROLLER_NAMES:
+        from . import controller
+
+        return getattr(controller, name)
     raise AttributeError(name)

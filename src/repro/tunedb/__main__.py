@@ -8,6 +8,13 @@ Subcommands:
           MLP performance models and persist versioned artifacts
   predict model-guided config for a shape (the §6 runtime search, offline)
   models  list persisted model artifacts and their training metadata
+  retune  one controller pass over a telemetry dump: diff it against the
+          saved epoch baseline (``<telemetry>.epoch``), and when hot-shape
+          drift or untuned mass crosses threshold, tune the novel shapes,
+          retrain the affected regressors, and advance the baseline
+  watch   poll a telemetry dump on an interval, running ``retune`` passes
+          until interrupted (or ``--max-polls``) — the out-of-process
+          continuous-retuning daemon
   stats   print store (and optional telemetry) statistics as JSON
   export  compact a store to latest-record-per-shape
   merge   fold several stores into one (newest record per shape wins)
@@ -18,6 +25,8 @@ Example round trip:
   $ python -m repro.tunedb train --store /tmp/tunedb.jsonl
   $ python -m repro.tunedb predict --store /tmp/tunedb.jsonl \\
         --space gemm --shape M=4096,N=16,K=2560
+  $ python -m repro.tunedb watch --telemetry /tmp/shapes.json \\
+        --store /tmp/tunedb.jsonl --interval 60
 """
 
 from __future__ import annotations
@@ -184,6 +193,106 @@ def _cmd_predict(args: argparse.Namespace) -> int:
     return 0
 
 
+def _build_retune_controller(args: argparse.Namespace, telemetry, baseline,
+                             tuners=None):
+    from .controller import RetuneConfig, RetuneController
+    from .model import default_models_dir
+
+    def tuner_factory(space_name: str):
+        from repro.core.backend import SimulatedTPUBackend
+        from repro.core.space import SPACES
+        from repro.core.tuner import InputAwareTuner
+        if args.load_tuner:
+            return InputAwareTuner.load(args.load_tuner, SPACES[space_name],
+                                        backend=SimulatedTPUBackend())
+        print(f"[tunedb] training {space_name} tuner "
+              f"({args.train_samples} samples, {args.epochs} epochs)...")
+        return InputAwareTuner.train(
+            SPACES[space_name], n_samples=args.train_samples,
+            epochs=args.epochs, backend=SimulatedTPUBackend(), seed=args.seed)
+
+    store = RecordStore.open(args.store)
+    return RetuneController(
+        store, telemetry=telemetry, tuners=tuners,
+        tuner_factory=tuner_factory,
+        models_dir=(args.models_dir or default_models_dir(args.store)
+                    if not args.no_train else None),
+        cfg=RetuneConfig(
+            drift_threshold=args.drift, untuned_mass_threshold=args.untuned,
+            min_calls=args.min_calls, top_k_shapes=args.top_k,
+            workers=args.workers, retrain=not args.no_train, seed=args.seed),
+        baseline=baseline, verbose=True)
+
+
+def _baseline_path(args: argparse.Namespace) -> str:
+    return args.baseline or args.telemetry + ".epoch"
+
+
+def _load_baseline(args: argparse.Namespace):
+    path = _baseline_path(args)
+    if os.path.exists(path):
+        return ShapeTelemetry.load(path).snapshot()
+    return ShapeTelemetry().snapshot()      # first epoch: everything is new
+
+
+def _retune_pass(args: argparse.Namespace, tuner_cache=None) -> int:
+    """One detect(+tune+train+baseline-advance) pass; returns tuned count.
+
+    ``tuner_cache`` (a mutable dict) carries trained tuners across the watch
+    loop's per-poll controllers, so a shifting workload does not re-train a
+    tuner from scratch on every poll."""
+    import shutil
+
+    if not os.path.exists(args.telemetry):
+        print(f"[tunedb] telemetry file not found: {args.telemetry}",
+              file=sys.stderr)
+        return -1
+    telemetry = ShapeTelemetry.load(args.telemetry)
+    controller = _build_retune_controller(args, telemetry,
+                                          _load_baseline(args), tuner_cache)
+    decisions = controller.check()
+    for dec in decisions.values():
+        mark = dec.reason or "steady"
+        print(f"[retune:{dec.space}] {mark}: drift {dec.drift:.3f} "
+              f"(>= {args.drift} triggers), untuned mass "
+              f"{dec.untuned_mass:.3f} (>= {args.untuned} triggers), "
+              f"{dec.window_calls} window calls, "
+              f"{len(dec.novel_shapes)} novel hot shapes")
+    report = (controller.force_retune(decisions) if args.force
+              else controller.maybe_retune(decisions))
+    if tuner_cache is not None:
+        tuner_cache.update(controller.tuners())
+    if report is None:
+        print("[tunedb] no retune: traffic within thresholds")
+        return 0
+    # the consumed telemetry becomes the next epoch's baseline
+    shutil.copyfile(args.telemetry, _baseline_path(args))
+    print(f"[tunedb] retuned {report.tuned} shape(s) in {report.wall_s:.1f}s; "
+          f"retrained {report.retrained or 'nothing'}; serving generation "
+          f"{report.generation} -> {args.store}")
+    return report.tuned
+
+
+def _cmd_retune(args: argparse.Namespace) -> int:
+    return 1 if _retune_pass(args) < 0 else 0
+
+
+def _cmd_watch(args: argparse.Namespace) -> int:
+    import time as _time
+
+    polls = 0
+    tuner_cache: Dict[str, object] = {}     # trained once, reused per poll
+    while True:
+        polls += 1
+        print(f"[tunedb] watch poll {polls}"
+              + (f"/{args.max_polls}" if args.max_polls else ""))
+        # a missing dump is just "not yet"
+        _retune_pass(args, tuner_cache)
+        if args.max_polls and polls >= args.max_polls:
+            return 0
+        _time.sleep(args.interval)
+
+
 def _cmd_models(args: argparse.Namespace) -> int:
     from .model import ModelSet, default_models_dir
 
@@ -288,6 +397,50 @@ def build_parser() -> argparse.ArgumentParser:
     mo.add_argument("--store", default=DEFAULT_STORE)
     mo.add_argument("--models-dir", default=None)
     mo.set_defaults(fn=_cmd_models)
+
+    def add_retune_args(rp):
+        rp.add_argument("--store", default=DEFAULT_STORE)
+        rp.add_argument("--telemetry", required=True,
+                        help="telemetry JSON dump (ShapeTelemetry.save)")
+        rp.add_argument("--baseline", default=None,
+                        help="epoch-baseline telemetry dump "
+                             "(default: <telemetry>.epoch)")
+        rp.add_argument("--models-dir", default=None,
+                        help="retrained artifacts dir "
+                             "(default: <store>.models/)")
+        rp.add_argument("--drift", type=float, default=0.25,
+                        help="hot-shape mass TV-distance trigger")
+        rp.add_argument("--untuned", type=float, default=0.5,
+                        help="untuned window-mass trigger")
+        rp.add_argument("--min-calls", type=int, default=32,
+                        help="window calls before a space is judged")
+        rp.add_argument("--top-k", type=int, default=4,
+                        help="novel hot shapes tuned per retune")
+        rp.add_argument("--workers", type=int, default=2)
+        rp.add_argument("--no-train", action="store_true",
+                        help="skip the regressor retrain step")
+        rp.add_argument("--force", action="store_true",
+                        help="retune every space with novel hot shapes, "
+                             "ignoring the thresholds")
+        rp.add_argument("--load-tuner", default=None,
+                        help="load a trained tuner dir instead of training")
+        rp.add_argument("--train-samples", type=int, default=4000)
+        rp.add_argument("--epochs", type=int, default=12)
+        rp.add_argument("--seed", type=int, default=0)
+
+    rt = sub.add_parser(
+        "retune", help="one drift-triggered retune pass over a telemetry dump")
+    add_retune_args(rt)
+    rt.set_defaults(fn=_cmd_retune)
+
+    w = sub.add_parser(
+        "watch", help="poll telemetry and retune continuously")
+    add_retune_args(w)
+    w.add_argument("--interval", type=float, default=60.0,
+                   help="seconds between polls")
+    w.add_argument("--max-polls", type=int, default=0,
+                   help="stop after this many polls (0 = forever)")
+    w.set_defaults(fn=_cmd_watch)
 
     s = sub.add_parser("stats", help="print store/telemetry statistics")
     s.add_argument("--store", default=DEFAULT_STORE)

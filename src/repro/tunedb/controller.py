@@ -1,0 +1,340 @@
+"""Continuous retuning: the telemetry -> tune -> train -> serve loop, closed.
+
+PR 1 built the pieces as manual CLI steps (mine telemetry, run a session,
+train models, restart serving with the new artifacts); this module runs them
+*in-process*.  A :class:`RetuneController` keeps an epoch baseline snapshot
+of the global :class:`~repro.tunedb.telemetry.ShapeTelemetry` and, on every
+``maybe_retune()`` poll (the serving engine calls it every
+``ServeConfig.retune_interval`` decode ticks):
+
+  1. **detect** — ``telemetry.diff(baseline)`` yields per-space hot-shape
+     mass drift (total-variation distance between the baseline distribution
+     and the traffic window since it) plus the window's shapes; the
+     controller adds *untuned hot mass* — the fraction of window calls
+     landing on shapes with no store record under the active fingerprint.
+     This is the staleness signal MLKAPS (arXiv:2501.05811) samples
+     adaptively against, and that the model-driven adaptive-library line
+     (arXiv:1806.07060) closes with an online update loop.
+  2. **tune** — when drift or untuned mass crosses its threshold (and the
+     window has enough calls to mean anything), a
+     :class:`~repro.tunedb.session.TuningSession` runs over the window's
+     novel hot shapes and commits ``source="retune"`` records (plus the
+     measured top-k as training samples).
+  3. **train** — the affected ``(space, backend)`` regressors retrain from
+     the grown measurement log (``train_models``); untouched regressors are
+     carried over unchanged.
+  4. **swap** — ``install_serving`` flips the process-global
+     (store, ModelSet, fingerprint) to a new generation in ONE atomic
+     assignment: dispatch never sees a torn store/model pair, per-shape
+     memos are invalidated, and the warn-once degradation latches re-arm.
+     The baseline snapshot advances, opening the next epoch.
+
+The controller is deliberately synchronous and cheap when idle: a no-trigger
+poll is a snapshot diff over the telemetry dict (microseconds against a
+multi-millisecond decode tick — bench_retune.py gates it at <2%).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+import warnings
+from typing import Callable, Dict, List, Mapping, Optional
+
+from .session import TuningSession, backend_fingerprint
+from .store import RecordStore, input_key, install_serving, serving_state
+from .telemetry import ShapeTelemetry, SpaceDrift, get_telemetry
+
+
+def _default_tuner_factory(space_name: str):
+    """Train a small input-aware tuner on demand (serving processes that
+    enable retuning without shipping one in).  Deliberately modest sizes:
+    the controller runs inside a serving loop, not a tuning fleet."""
+    from repro.core.backend import SimulatedTPUBackend
+    from repro.core.space import SPACES
+    from repro.core.tuner import InputAwareTuner
+    return InputAwareTuner.train(
+        SPACES[space_name], n_samples=4000, hidden=(32, 64, 32), epochs=12,
+        backend=SimulatedTPUBackend(noise=0.02), seed=0)
+
+
+@dataclasses.dataclass(frozen=True)
+class RetuneConfig:
+    """Thresholds and session/retrain knobs for the retune loop."""
+
+    drift_threshold: float = 0.25        # TV distance that counts as a shift
+    untuned_mass_threshold: float = 0.5  # window mass on record-less shapes
+    min_calls: int = 32                  # window calls before a space is judged
+    top_k_shapes: int = 4                # novel hot shapes per session
+    workers: int = 2
+    remeasure: bool = True               # session top-k re-measurement (§6)
+    retrain: bool = True                 # retrain regressors after a session
+    min_train_samples: int = 24
+    train_epochs: int = 20
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SpaceDecision:
+    """One space's verdict for one controller poll."""
+
+    space: str
+    drift: float
+    untuned_mass: float
+    window_calls: int
+    novel_shapes: List[Dict[str, int]]   # hot window shapes with no record
+    trigger: bool
+    reason: str                          # "drift" | "untuned" | ""
+
+
+@dataclasses.dataclass
+class RetuneReport:
+    """What one triggered retune epoch did."""
+
+    epoch: int                           # epoch number this retune OPENED
+    generation: int                      # serving generation after the swap
+    decisions: Dict[str, SpaceDecision]
+    sessions: Dict[str, object]          # space -> SessionReport
+    retrained: List[str]                 # "space/backend" regressors replaced
+    wall_s: float = 0.0
+
+    @property
+    def tuned(self) -> int:
+        return sum(r.tuned for r in self.sessions.values())
+
+
+class RetuneController:
+    """Drift-triggered sessions + retrain + atomic serving hot-swap.
+
+    ``tuners`` maps space name -> a trained tuner (anything with ``.search``
+    / ``.backend`` / ``.space``, i.e. ``InputAwareTuner``); spaces without
+    one fall back to ``tuner_factory`` (trained once, cached).  ``store``
+    is where sessions commit — normally the installed serving store, so
+    exact-tier hits appear the moment a record lands.  ``models_dir`` (when
+    set) persists every retrained ModelSet, keeping on-disk artifacts in
+    step with the hot-swapped in-process ones.
+    """
+
+    def __init__(self, store: RecordStore, *,
+                 telemetry: Optional[ShapeTelemetry] = None,
+                 tuners: Optional[Mapping[str, object]] = None,
+                 tuner_factory: Optional[Callable[[str], object]] = None,
+                 models_dir=None,
+                 cfg: Optional[RetuneConfig] = None,
+                 baseline=None,
+                 verbose: bool = False):
+        self.store = store
+        self.telemetry = telemetry if telemetry is not None else get_telemetry()
+        self.cfg = cfg or RetuneConfig()
+        self.models_dir = models_dir
+        self.verbose = verbose
+        self._tuners: Dict[str, object] = dict(tuners or {})
+        self._tuner_factory = tuner_factory or _default_tuner_factory
+        self._lock = threading.Lock()        # one retune at a time
+        self.epoch = 0
+        self.checks = 0                      # polls (triggered or not)
+        self.retunes = 0                     # epochs that actually retuned
+        self.last_report: Optional[RetuneReport] = None
+        # (space, key) pairs a session already worked on: a shape whose
+        # committed record can never serve (e.g. a fingerprint pin the
+        # session backend does not match) must not re-trigger forever
+        self._attempted: set = set()
+        self._warned_pins: set = set()
+        # `baseline` lets the CLI resume an epoch across processes (a saved
+        # TelemetrySnapshot); in-process callers start at "now"
+        self._baseline = (baseline if baseline is not None
+                          else self.telemetry.snapshot())
+
+    # -- detection ------------------------------------------------------------
+    def _decide(self, drift: SpaceDrift, fingerprint: Optional[str]
+                ) -> SpaceDecision:
+        cfg = self.cfg
+        untuned_calls = 0
+        novel: List[Dict[str, int]] = []
+        for inputs, count in drift.window_shapes:
+            if not self.store.contains(drift.space, inputs,
+                                       backend=fingerprint):
+                untuned_calls += count      # honest mass, attempted or not
+                if (len(novel) < cfg.top_k_shapes
+                        and (drift.space, input_key(drift.space, inputs))
+                        not in self._attempted):
+                    novel.append(dict(inputs))
+        mass = (untuned_calls / drift.window_calls
+                if drift.window_calls else 0.0)
+        reason = ""
+        if drift.window_calls >= cfg.min_calls and novel:
+            if drift.drift >= cfg.drift_threshold:
+                reason = "drift"
+            elif mass >= cfg.untuned_mass_threshold:
+                reason = "untuned"
+        return SpaceDecision(
+            space=drift.space, drift=drift.drift, untuned_mass=mass,
+            window_calls=drift.window_calls, novel_shapes=novel,
+            trigger=bool(reason), reason=reason)
+
+    def reset_baseline(self) -> None:
+        """Open a fresh epoch at "now" without retuning — callers that know
+        the accumulated telemetry is already served (warm-up, benches)."""
+        self._baseline = self.telemetry.snapshot()
+
+    def check(self) -> Dict[str, SpaceDecision]:
+        """Detection only — no sessions, no swap, baseline untouched."""
+        self.checks += 1
+        fp = serving_state().fingerprint
+        return {space: self._decide(drift, fp)
+                for space, drift in self.telemetry.diff(self._baseline).items()}
+
+    # -- the loop -------------------------------------------------------------
+    def _tuner_for(self, space: str):
+        tuner = self._tuners.get(space)
+        if tuner is None:
+            tuner = self._tuners[space] = self._tuner_factory(space)
+        return tuner
+
+    def tuners(self) -> Dict[str, object]:
+        """The per-space tuner cache (factory-trained ones included) — a
+        caller that rebuilds controllers (the CLI watch loop) carries this
+        across instances instead of re-training per poll."""
+        return dict(self._tuners)
+
+    def maybe_retune(self, decisions: Optional[Dict[str, SpaceDecision]]
+                     = None) -> Optional[RetuneReport]:
+        """One poll: detect, and when triggered, tune + retrain + hot-swap.
+
+        Returns the :class:`RetuneReport` when a triggered epoch ran, else
+        ``None``.  ``decisions`` lets a caller that already ran ``check()``
+        (the CLI prints them first) skip the second detection pass.
+        """
+        with self._lock:
+            t0 = time.time()
+            if decisions is None:
+                decisions = self.check()
+            triggered = {s: d for s, d in decisions.items() if d.trigger}
+            if not triggered:
+                return None
+            return self._retune(decisions, triggered, t0)
+
+    def force_retune(self, decisions: Optional[Dict[str, SpaceDecision]]
+                     = None) -> Optional[RetuneReport]:
+        """Retune every space with novel hot window shapes, thresholds be
+        damned (the CLI ``retune --force`` path)."""
+        with self._lock:
+            t0 = time.time()
+            if decisions is None:
+                decisions = self.check()
+            forced = {s: d for s, d in decisions.items() if d.novel_shapes}
+            if not forced:
+                return None
+            return self._retune(decisions, forced, t0)
+
+    def _retune(self, decisions: Dict[str, SpaceDecision],
+                triggered: Dict[str, SpaceDecision], t0: float
+                ) -> RetuneReport:
+        cfg = self.cfg
+        state = serving_state()
+        sessions: Dict[str, object] = {}
+        affected_backends = set()
+        for space, dec in triggered.items():
+            tuner = self._tuner_for(space)
+            session_fp = backend_fingerprint(tuner.backend)
+            if (state.fingerprint is not None
+                    and session_fp != state.fingerprint
+                    and (space, session_fp) not in self._warned_pins):
+                self._warned_pins.add((space, session_fp))
+                warnings.warn(
+                    f"retune session for {space!r} commits records under "
+                    f"backend {session_fp!r}, which the active fingerprint "
+                    f"pin {state.fingerprint!r} will never serve from the "
+                    "exact tier; give the controller a tuner measuring "
+                    "under the pinned backend", RuntimeWarning, stacklevel=3)
+            session = TuningSession(
+                tuner, self.store, None, workers=cfg.workers,
+                remeasure=cfg.remeasure, skip_existing=True,
+                collect_samples=True, source="retune")
+            report = session.run(shapes=dec.novel_shapes,
+                                 verbose=self.verbose)
+            sessions[space] = report
+            # never re-plan these shapes: if their records cannot serve
+            # (pin mismatch) or their jobs keep failing, retriggering every
+            # poll would churn generations without changing anything
+            for inputs in dec.novel_shapes:
+                self._attempted.add((space, input_key(space, inputs)))
+            affected_backends.add((space, session_fp))
+            if self.verbose:
+                print(f"[retune:{space}] {dec.reason}: drift {dec.drift:.2f}, "
+                      f"untuned mass {dec.untuned_mass:.2f} -> "
+                      f"{report.tuned} tuned, {report.failed} failed")
+
+        if not any(r.tuned for r in sessions.values()):
+            # nothing landed — there is no serving change to publish, so do
+            # NOT flip the generation (that would invalidate every memo for
+            # a no-op); just open the next epoch so this window is spent
+            self._baseline = self.telemetry.snapshot()
+            self.epoch += 1
+            self.last_report = RetuneReport(
+                epoch=self.epoch, generation=state.generation,
+                decisions=decisions, sessions=sessions, retrained=[],
+                wall_s=time.time() - t0)
+            return self.last_report
+
+        fresh = None
+        retrained: List[str] = []
+        if cfg.retrain:                  # at least one session tuned here
+            from .model import train_models
+            for space, fp in sorted(affected_backends):
+                part = train_models(
+                    self.store, space=space, backend=fp,
+                    min_samples=cfg.min_train_samples,
+                    epochs=cfg.train_epochs, seed=cfg.seed)
+                fresh = part if fresh is None else fresh.merged_with(part)
+            if fresh is not None and not len(fresh):
+                fresh = None
+            if fresh is not None:
+                retrained = [f"{s}/{b}" for s, b in sorted(fresh.models)]
+
+        # ONE atomic generation flip: store + models; the fingerprint pin is
+        # deliberately left untouched.  Merge and swap against the state
+        # CURRENT at swap time, not the entry snapshot — the session/retrain
+        # above can take a while, and an install_serving made meanwhile
+        # (say, a new Engine retargeting the store) must not be silently
+        # reverted by this read-modify-write.
+        cur = serving_state()
+        if cur.store is not None and cur.store is not self.store:
+            warnings.warn(
+                "serving was retargeted to a different store during the "
+                "retune; skipping the hot-swap (the session results stay in "
+                "the controller's store)", RuntimeWarning, stacklevel=3)
+            new_state = cur
+        else:
+            new_models = cur.models
+            if fresh is not None:
+                new_models = (cur.models.merged_with(fresh)
+                              if cur.models is not None else fresh)
+                if self.models_dir:
+                    new_models.save(self.models_dir)
+            new_state = install_serving(store=self.store, models=new_models)
+            self.retunes += 1
+        self._baseline = self.telemetry.snapshot()
+        self.epoch += 1
+        self.last_report = RetuneReport(
+            epoch=self.epoch, generation=new_state.generation,
+            decisions=decisions, sessions=sessions, retrained=retrained,
+            wall_s=time.time() - t0)
+        return self.last_report
+
+    # -- reporting ------------------------------------------------------------
+    def stats(self) -> Dict[str, object]:
+        return {
+            "epoch": self.epoch,
+            "checks": self.checks,
+            "retunes": self.retunes,
+            "generation": serving_state().generation,
+            "config": dataclasses.asdict(self.cfg),
+            "last": None if self.last_report is None else {
+                "epoch": self.last_report.epoch,
+                "tuned": self.last_report.tuned,
+                "retrained": list(self.last_report.retrained),
+                "wall_s": self.last_report.wall_s,
+            },
+        }

@@ -323,6 +323,22 @@ class ModelSet:
         self.models[pm.key] = pm
         self._memo.clear()
 
+    def invalidate_memos(self) -> None:
+        """Drop per-shape resolutions (called on serving-state installs)."""
+        self._memo.clear()
+
+    def merged_with(self, newer: "ModelSet") -> "ModelSet":
+        """A fresh ModelSet carrying this set's models overridden by
+        ``newer``'s — the retrain hot-swap: untouched (space, backend)
+        regressors keep serving, retrained ones replace their ancestors.
+        The SERVING configuration (measurer, re-measure width) stays this
+        set's — a freshly trained set carries defaults, not policy."""
+        out = ModelSet(measurer=self.measurer or newer.measurer,
+                       remeasure_top_k=self.remeasure_top_k)
+        out.models.update(self.models)
+        out.models.update(newer.models)
+        return out
+
     def __len__(self) -> int:
         return len(self.models)
 
@@ -431,21 +447,20 @@ class ModelSet:
 
 
 # ---------------------------------------------------------------------------
-# Process-global model set: the dispatcher's model-guided tier (like the
-# global store, installed by serve warm-start or tests).
+# Process-global model set: the dispatcher's model-guided tier.  The actual
+# reference lives in store.ServingState so a store+models hot-swap is ONE
+# atomic generation flip — these are the models-only views of it.
 # ---------------------------------------------------------------------------
-
-_GLOBAL_MODELS: Optional[ModelSet] = None
-
 
 def install_models(models: Optional[ModelSet]) -> None:
     """Make model-guided resolution visible to the kernel dispatcher."""
-    global _GLOBAL_MODELS
-    _GLOBAL_MODELS = models
+    from .store import install_serving
+    install_serving(models=models)
 
 
 def get_models() -> Optional[ModelSet]:
-    return _GLOBAL_MODELS
+    from .store import serving_state
+    return serving_state().models
 
 
 def clear_models() -> None:

@@ -89,7 +89,8 @@ class TuningSession:
                  top_k_shapes: int = 8, workers: int = 4,
                  remeasure: bool = True, skip_existing: bool = True,
                  collect_samples: bool = True,
-                 progress_path: Optional[os.PathLike] = None):
+                 progress_path: Optional[os.PathLike] = None,
+                 source: str = "session"):
         self.tuner = tuner
         self.store = store
         self.telemetry = telemetry
@@ -97,6 +98,9 @@ class TuningSession:
         self.workers = max(1, workers)
         self.remeasure = remeasure
         self.skip_existing = skip_existing
+        # what the committed records' `source` field says; the controller
+        # stamps "retune" so drift-triggered records are auditable in the log
+        self.source = source
         # commit every top-k measurement (not only the winner) to the store
         # as source="sample" training data for the performance model
         self.collect_samples = collect_samples
@@ -155,7 +159,7 @@ class TuningSession:
     def _run_job(self, job: TuneJob) -> Tuple[TuneRecord, List[TuneRecord]]:
         result = self.tuner.search(job.inputs, remeasure=self.remeasure)
         rec = record_from_search(job.space, job.inputs, result,
-                                 self.tuner.backend, source="session")
+                                 self.tuner.backend, source=self.source)
         samples: List[TuneRecord] = []
         if self.collect_samples and result.measured:
             # the losing top-k measurements are still labeled data points —

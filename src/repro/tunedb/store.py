@@ -230,10 +230,17 @@ class RecordStore:
 
     def get(self, space: str, inputs: Mapping[str, int], *,
             backend: Optional[str] = None) -> Optional[TuneRecord]:
-        """Exact lookup of the latest record for (space, inputs[, backend])."""
+        """Exact lookup of the latest record for (space, inputs[, backend]).
+
+        Counts BOTH outcomes: a miss here is a real serving event even when
+        a higher tier (model, heuristics) picks up the shape afterwards —
+        `stats()["lookups"]` must not flatter the store's coverage.
+        """
         rec = self._exact(space, inputs, backend)
         if rec is not None:
             self.hits += 1
+        else:
+            self.misses += 1
         return rec
 
     def contains(self, space: str, inputs: Mapping[str, int], *,
@@ -253,6 +260,11 @@ class RecordStore:
         neighbors within a combined ~4x dimension drift — past that a
         config says more about the other shape than about this one.
         ``backend`` restricts both tiers to records of one fingerprint.
+
+        Accounting: an exact hit counts as ``hits``, a served neighbor as
+        ``nearest_hits``; a full miss is NOT counted here — the exact-tier
+        ``get()`` that precedes this call in dispatch already attributed it,
+        and double-counting made the miss column overstate store gaps.
         """
         inputs = normalize_inputs(inputs)
         exact = self._exact(space, inputs, backend)
@@ -281,8 +293,6 @@ class RecordStore:
             self._nearest_memo[memo_key] = best
         if best is not None:
             self.nearest_hits += 1
-        else:
-            self.misses += 1
         return best
 
     def records(self, *, backend: Optional[str] = None) -> List[TuneRecord]:
@@ -327,6 +337,11 @@ class RecordStore:
         """Distinct backend fingerprints with serving records."""
         with self._lock:
             return sorted({b for b, _ in self._index})
+
+    def invalidate_memos(self) -> None:
+        """Drop the nearest-lookup memo (called on serving-state installs)."""
+        with self._lock:
+            self._nearest_memo.clear()
 
     def __len__(self) -> int:
         return len(self._index)
@@ -386,11 +401,65 @@ class RecordStore:
 
 
 # ---------------------------------------------------------------------------
-# Process-global store: the dispatcher's fallback when no tuner is installed.
+# Process-global serving state: the dispatcher's (store, models, fingerprint)
+# view, swapped ATOMICALLY as one generation so a hot-swap mid-resolution can
+# never hand dispatch a torn store/model pair (old store + new models).
 # ---------------------------------------------------------------------------
 
-_GLOBAL_STORE: Optional[RecordStore] = None
-_ACTIVE_FINGERPRINT: Optional[str] = None
+@dataclasses.dataclass(frozen=True)
+class ServingState:
+    """One immutable generation of the dispatcher's tuned-serving view."""
+
+    store: Optional[RecordStore] = None
+    models: Optional[object] = None          # tunedb.model.ModelSet
+    fingerprint: Optional[str] = None        # backend pin (None = any)
+    generation: int = 0                      # bumps on every install
+
+
+_STATE = ServingState()
+_STATE_LOCK = threading.Lock()
+_KEEP = object()          # sentinel: "leave this field as installed"
+
+
+def serving_state() -> ServingState:
+    """The current generation — ONE atomic read for a consistent view."""
+    return _STATE
+
+
+def install_generation() -> int:
+    return _STATE.generation
+
+
+def install_serving(*, store: object = _KEEP, models: object = _KEEP,
+                    fingerprint: object = _KEEP) -> ServingState:
+    """Atomically swap any subset of the dispatcher's serving state.
+
+    Every install starts a new generation: the reference flips in one
+    assignment (readers see either the old tuple or the new one, never a
+    mix), the warn-once degradation latches re-arm (a fresh install deserves
+    fresh warnings if IT degrades — the reinstall contract
+    ``dispatch.reset_fallback_warnings`` documents), and the incoming
+    store/ModelSet memos are invalidated so no pre-swap resolution leaks
+    into the new generation.  Fields left at the default keep their
+    installed value (e.g. a models-only hot-swap).
+    """
+    global _STATE
+    with _STATE_LOCK:
+        cur = _STATE
+        new = ServingState(
+            store=cur.store if store is _KEEP else store,
+            models=cur.models if models is _KEEP else models,
+            fingerprint=(cur.fingerprint if fingerprint is _KEEP
+                         else fingerprint),
+            generation=cur.generation + 1)
+        _STATE = new
+    for obj in (new.store, new.models):
+        invalidate = getattr(obj, "invalidate_memos", None)
+        if callable(invalidate):
+            invalidate()
+    from repro.kernels.dispatch import reset_fallback_warnings
+    reset_fallback_warnings()
+    return new
 
 
 def install_store(store: Optional[RecordStore], *,
@@ -401,18 +470,16 @@ def install_store(store: Optional[RecordStore], *,
     backend's records — the multi-backend serving mode.  ``None`` keeps the
     any-backend behavior a single-backend store expects.
     """
-    global _GLOBAL_STORE, _ACTIVE_FINGERPRINT
-    _GLOBAL_STORE = store
-    _ACTIVE_FINGERPRINT = fingerprint
+    install_serving(store=store, fingerprint=fingerprint)
 
 
 def get_store() -> Optional[RecordStore]:
-    return _GLOBAL_STORE
+    return _STATE.store
 
 
 def active_fingerprint() -> Optional[str]:
     """The backend fingerprint dispatch lookups are pinned to (None = any)."""
-    return _ACTIVE_FINGERPRINT
+    return _STATE.fingerprint
 
 
 def clear_store() -> None:

@@ -14,21 +14,40 @@ The record path is deliberately cheap — a tuple-key dict upsert under a lock
 dispatch path where the op itself costs microseconds.  bench_tunedb.py holds
 the full resolution stack to <5% of interpret-mode dispatch cost.
 
-Counting semantics under jit: dispatch runs inside traced functions (the
-serving engine jits decode/prefill), where ``record`` executes once per
-COMPILATION, not per device execution — so for jitted callers telemetry is a
-census of distinct compiled shapes, while eager callers contribute true call
-frequencies.  Per-execution counts under jit would need host callbacks on
-the hot path (see ROADMAP tunedb next-steps).
+Counting semantics under jit — census vs ticks: dispatch runs inside traced
+functions (the serving engine jits decode/prefill), where ``record`` executes
+once per COMPILATION, not per device execution.  Left alone that makes
+telemetry a census of distinct compiled shapes for jitted callers, while
+eager callers contribute true call frequencies.  Two engine-fed hooks close
+the gap without host callbacks on the device hot path:
+
+  * ``capture()`` — a context manager that collects every (space, inputs)
+    recorded inside its block.  The engine wraps the *tracing* call of a
+    jitted decode/prefill in it, learning exactly which kernel shapes that
+    compiled program executes.
+  * ``record_ticks(shapes, n=1)`` — bump each captured shape by ``n`` per
+    later execution of the compiled program.  Decode ticks therefore
+    contribute true execution frequencies; the one-off trace-time census
+    count is the +1 of the compiling call itself.
+
+Epoch semantics: ``snapshot()`` freezes the current counters into an
+immutable :class:`TelemetrySnapshot`; ``diff(prev)`` compares the *window*
+of traffic since ``prev`` against the distribution ``prev`` had accumulated,
+returning per-space :class:`SpaceDrift` — the total-variation distance
+between the two hot-shape mass distributions plus the window's shape counts.
+That is the drift signal the :class:`~repro.tunedb.controller.RetuneController`
+thresholds to auto-launch tuning sessions when traffic shifts.
 """
 
 from __future__ import annotations
 
+import contextlib
+import dataclasses
 import json
 import os
 import pathlib
 import threading
-from typing import Dict, List, Mapping, Optional, Tuple
+from typing import Dict, Iterable, List, Mapping, Optional, Tuple
 
 from .store import normalize_inputs
 
@@ -39,29 +58,103 @@ def _shape_key(inputs: Mapping[str, int]) -> Tuple[Tuple[str, int], ...]:
     return tuple(sorted(inputs.items()))
 
 
+@dataclasses.dataclass(frozen=True)
+class TelemetrySnapshot:
+    """An immutable epoch snapshot of one telemetry's counters."""
+
+    seq: int                            # monotonic per-telemetry epoch number
+    # space -> shape-key -> (inputs, count); counts are cumulative at snap time
+    counts: Dict[str, Dict[tuple, Tuple[Dict[str, int], int]]]
+
+    def total(self, space: Optional[str] = None) -> int:
+        spaces = [space] if space is not None else list(self.counts)
+        return sum(c for s in spaces
+                   for _, c in self.counts.get(s, {}).values())
+
+
+@dataclasses.dataclass(frozen=True)
+class SpaceDrift:
+    """How one space's traffic moved between two telemetry epochs."""
+
+    space: str
+    drift: float                  # TV distance: prev mass vs window mass
+    window_calls: int             # calls recorded since the prev snapshot
+    prev_calls: int               # calls the prev snapshot had accumulated
+    # (inputs, window count) for every shape hit in the window, hottest first
+    window_shapes: List[Tuple[Dict[str, int], int]]
+
+
+class _Capture:
+    """Accumulates the (space, inputs) pairs recorded during a capture()."""
+
+    def __init__(self) -> None:
+        self.shapes: List[Tuple[str, Dict[str, int]]] = []
+
+
 class ShapeTelemetry:
-    """Thread-safe (space, input-shape) frequency counter."""
+    """Thread-safe (space, input-shape) frequency counter with epochs."""
 
     def __init__(self) -> None:
         self._lock = threading.Lock()
         # space -> shape-key tuple -> (inputs, count)
         self._counts: Dict[str, Dict[tuple, Tuple[Dict[str, int], int]]] = {}
+        self._ticks: Dict[str, int] = {}     # space -> engine tick bumps
+        self._seq = 0                        # snapshot epoch counter
+        self._captures: List[_Capture] = []
 
     # -- hot path -------------------------------------------------------------
     def record(self, space: str, inputs: Mapping[str, int], n: int = 1) -> None:
+        # raw-key fast path: numeric values hash like their int forms, so an
+        # existing bucket is a plain dict hit with NO normalization copy —
+        # the per-tick replay cost bench_retune gates.  Only a first-seen
+        # (or string-valued) shape pays normalize_inputs.
         key = _shape_key(inputs)
         with self._lock:
             per_space = self._counts.setdefault(space, {})
             cur = per_space.get(key)
-            if cur is None:
-                per_space[key] = (normalize_inputs(inputs), n)
-            else:
-                per_space[key] = (cur[0], cur[1] + n)
+            if cur is None:                 # first sight (or string values)
+                ninputs = normalize_inputs(inputs)
+                key = _shape_key(ninputs)
+                cur = per_space.get(key, (ninputs, 0))
+            per_space[key] = (cur[0], cur[1] + n)
+            for cap in self._captures:
+                cap.shapes.append((space, dict(cur[0])))
+
+    # -- jit tick hooks -------------------------------------------------------
+    @contextlib.contextmanager
+    def capture(self):
+        """Collect every shape recorded inside the block (trace-time census).
+
+        The engine wraps the compiling call of a jitted decode/prefill in
+        this, then replays the captured shapes with :meth:`record_ticks` on
+        every later execution — recovering true frequencies under jit.
+        """
+        cap = _Capture()
+        with self._lock:
+            self._captures.append(cap)
+        try:
+            yield cap
+        finally:
+            with self._lock:
+                self._captures.remove(cap)
+
+    def record_ticks(self, shapes: Iterable[Tuple[str, Mapping[str, int]]],
+                     n: int = 1) -> None:
+        """Bump each captured (space, inputs) by ``n`` executed ticks."""
+        per_space: Dict[str, int] = {}
+        for space, inputs in shapes:
+            self.record(space, inputs, n=n)
+            per_space[space] = per_space.get(space, 0) + n
+        with self._lock:
+            for space, k in per_space.items():
+                self._ticks[space] = self._ticks.get(space, 0) + k
 
     # -- mining ---------------------------------------------------------------
     def count(self, space: str, inputs: Mapping[str, int]) -> int:
-        cur = self._counts.get(space, {}).get(_shape_key(inputs))
-        return 0 if cur is None else cur[1]
+        key = _shape_key(normalize_inputs(inputs))
+        with self._lock:
+            cur = self._counts.get(space, {}).get(key)
+            return 0 if cur is None else cur[1]
 
     def total(self, space: Optional[str] = None) -> int:
         with self._lock:
@@ -84,6 +177,55 @@ class ShapeTelemetry:
     def clear(self) -> None:
         with self._lock:
             self._counts.clear()
+            self._ticks.clear()
+            self._seq = 0
+
+    # -- epochs ---------------------------------------------------------------
+    def snapshot(self) -> TelemetrySnapshot:
+        """Freeze the current counters into an immutable epoch snapshot."""
+        with self._lock:
+            self._seq += 1
+            return TelemetrySnapshot(
+                seq=self._seq,
+                counts={s: dict(per_space)
+                        for s, per_space in self._counts.items()})
+
+    def diff(self, prev: TelemetrySnapshot) -> Dict[str, SpaceDrift]:
+        """Per-space hot-shape mass drift of the window since ``prev``.
+
+        Drift is the total-variation distance between two distributions over
+        shapes: the mass ``prev`` had accumulated vs the mass of the *window*
+        (counts gained since ``prev``).  Steady traffic diffs near 0; a
+        window dominated by shapes ``prev`` never saw diffs near 1.  A space
+        with an empty window reports drift 0 (nothing new to act on).
+        """
+        cur = self.snapshot()
+        out: Dict[str, SpaceDrift] = {}
+        for space in sorted(set(cur.counts) | set(prev.counts)):
+            now = cur.counts.get(space, {})
+            old = prev.counts.get(space, {})
+            window: Dict[tuple, Tuple[Dict[str, int], int]] = {}
+            for key, (inputs, c) in now.items():
+                gained = c - old.get(key, (None, 0))[1]
+                if gained > 0:
+                    window[key] = (inputs, gained)
+            wtot = sum(c for _, c in window.values())
+            otot = sum(c for _, c in old.values())
+            if wtot == 0:
+                drift = 0.0
+            elif otot == 0:
+                drift = 1.0                  # everything in the window is new
+            else:
+                keys = set(window) | set(old)
+                drift = 0.5 * sum(
+                    abs(window.get(k, (None, 0))[1] / wtot
+                        - old.get(k, (None, 0))[1] / otot) for k in keys)
+            shapes = sorted(window.values(),
+                            key=lambda t: (-t[1], sorted(t[0].items())))
+            out[space] = SpaceDrift(
+                space=space, drift=drift, window_calls=wtot, prev_calls=otot,
+                window_shapes=[(dict(i), c) for i, c in shapes])
+        return out
 
     # -- persistence -----------------------------------------------------------
     def save(self, path: os.PathLike) -> None:
@@ -96,6 +238,7 @@ class ShapeTelemetry:
                     s: [{"inputs": i, "count": c}
                         for i, c in per_space.values()]
                     for s, per_space in self._counts.items()},
+                "ticks": dict(self._ticks),
             }
         tmp = path.with_name(path.name + ".tmp")
         with tmp.open("w", encoding="utf-8") as fh:
@@ -111,12 +254,24 @@ class ShapeTelemetry:
         for space, entries in payload.get("counts", {}).items():
             for e in entries:
                 t.record(space, e["inputs"], n=int(e["count"]))
+        with t._lock:
+            t._ticks.update({s: int(n) for s, n
+                             in payload.get("ticks", {}).items()})
         return t
 
     def merge(self, other: "ShapeTelemetry") -> None:
-        for space, per_space in other._counts.items():
-            for inputs, count in list(per_space.values()):
+        # snapshot under OTHER's lock: a concurrent record()/clear() on it
+        # must not mutate the dicts mid-iteration
+        with other._lock:
+            items = [(space, [v for v in per_space.values()])
+                     for space, per_space in other._counts.items()]
+            ticks = dict(other._ticks)
+        for space, values in items:
+            for inputs, count in values:
                 self.record(space, inputs, n=count)
+        with self._lock:
+            for space, n in ticks.items():
+                self._ticks[space] = self._ticks.get(space, 0) + n
 
     def stats(self) -> Dict[str, object]:
         with self._lock:
@@ -124,6 +279,8 @@ class ShapeTelemetry:
                 "spaces": {s: {"shapes": len(m),
                                "calls": sum(c for _, c in m.values())}
                            for s, m in self._counts.items()},
+                "ticks": dict(self._ticks),
+                "epoch": self._seq,
             }
 
 

@@ -1,0 +1,582 @@
+"""Continuous retuning: telemetry epochs, drift-triggered sessions, atomic
+store/model hot-swap — plus the serving-path fixes that ride along.
+
+Pins the PR-3 contracts: ``snapshot``/``diff`` measure hot-shape mass drift
+between telemetry epochs; engine tick counters recover true execution
+frequencies under jit (not a compile census); a traffic shift drives the
+RetuneController through session -> retrain -> ``install_serving`` without a
+process restart; the swap is ONE atomic generation (a reader never sees a
+torn store/model pair); and every install re-arms the warn-once degradation
+latches.
+"""
+
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.backend import SimulatedTPUBackend
+from repro.core.space import GEMM_SPACE, gemm_input
+from repro.core.tuner import InputAwareTuner, clear_tuners
+from repro.kernels import dispatch
+from repro.tunedb import (RecordStore, ShapeTelemetry, TuneRecord,
+                          clear_store, clear_telemetry, get_store,
+                          get_telemetry, install_generation, install_serving,
+                          install_store, serving_state)
+from repro.tunedb.controller import RetuneConfig, RetuneController
+from repro.tunedb.model import ModelSet, clear_models, get_models
+from repro.tunedb.session import backend_fingerprint
+from repro.tunedb.__main__ import main as tunedb_main
+
+CFG = {"bm": 64, "bn": 128, "bk": 128, "k_unroll": 1, "k_split": 1,
+       "order": 0, "acc32": 1, "prefetch": 2}
+
+
+@pytest.fixture(autouse=True)
+def _clean_globals():
+    def reset():
+        clear_tuners()
+        clear_store()
+        clear_models()
+        clear_telemetry()
+        dispatch.reset_fallback_warnings()
+    reset()
+    yield
+    reset()
+
+
+@pytest.fixture(scope="module")
+def tiny_tuner():
+    return InputAwareTuner.train(
+        GEMM_SPACE, n_samples=600, hidden=(16, 16), epochs=4,
+        backend=SimulatedTPUBackend(noise=0.02), seed=0)
+
+
+def _rec(m, n, k, *, backend="test", bits=16):
+    return TuneRecord(space="gemm", inputs=gemm_input(m, n, k, bits),
+                      config=dict(CFG), tflops=100.0, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# telemetry epochs + drift
+# ---------------------------------------------------------------------------
+
+def test_snapshot_diff_steady_traffic_is_driftless():
+    t = ShapeTelemetry()
+    for _ in range(10):
+        t.record("gemm", gemm_input(512, 16, 512))
+        t.record("gemm", gemm_input(128, 128, 128))
+    snap = t.snapshot()
+    # the SAME mix keeps flowing: window distribution == baseline
+    for _ in range(5):
+        t.record("gemm", gemm_input(512, 16, 512))
+        t.record("gemm", gemm_input(128, 128, 128))
+    d = t.diff(snap)["gemm"]
+    assert d.drift == pytest.approx(0.0)
+    assert d.window_calls == 10
+    assert d.prev_calls == 20
+    # an empty window is no signal at all
+    assert t.diff(t.snapshot())["gemm"].drift == 0.0
+
+
+def test_snapshot_diff_detects_hot_mass_shift():
+    t = ShapeTelemetry()
+    old = gemm_input(512, 16, 512)
+    for _ in range(20):
+        t.record("gemm", old)
+    snap = t.snapshot()
+    new = gemm_input(4096, 16, 2560)
+    for _ in range(20):
+        t.record("gemm", new)
+    d = t.diff(snap)["gemm"]
+    assert d.drift == pytest.approx(1.0)          # window is 100% novel mass
+    assert d.window_shapes[0] == (new, 20)
+    # a half-shifted window: TV distance of {1.0 old} vs {.5 old, .5 new}
+    for _ in range(20):
+        t.record("gemm", old)
+    d2 = t.diff(snap)["gemm"]
+    assert d2.drift == pytest.approx(0.5)
+    # a space born after the snapshot is all drift
+    t.record("conv", {"N": 1, "H": 8, "W": 8, "C": 4, "K": 8, "R": 3,
+                      "S": 3, "dtype_bits": 16})
+    assert t.diff(snap)["conv"].drift == pytest.approx(1.0)
+
+
+def test_telemetry_count_normalizes_and_locks():
+    t = ShapeTelemetry()
+    t.record("gemm", {"M": 512, "N": 16, "K": 512, "dtype_bits": 16,
+                      "trans_a": 0, "trans_b": 0})
+    # float-valued dims (JSON round trips) hit the same bucket
+    assert t.count("gemm", {"M": 512.0, "N": 16.0, "K": 512.0,
+                            "dtype_bits": 16.0, "trans_a": 0.0,
+                            "trans_b": 0.0}) == 1
+
+
+def test_telemetry_merge_is_safe_under_concurrent_records():
+    src, dst = ShapeTelemetry(), ShapeTelemetry()
+    shape = gemm_input(256, 256, 256)
+    for _ in range(100):
+        src.record("gemm", shape)
+    stop = threading.Event()
+
+    def hammer():
+        i = 0
+        while not stop.is_set():
+            src.record("gemm", gemm_input(64 + (i % 7), 64, 64))
+            i += 1
+
+    w = threading.Thread(target=hammer)
+    w.start()
+    try:
+        for _ in range(50):
+            dst.merge(src)                 # must never blow up mid-iteration
+    finally:
+        stop.set()
+        w.join()
+    assert dst.count("gemm", shape) == 50 * 100
+
+
+# ---------------------------------------------------------------------------
+# tick counters under jit
+# ---------------------------------------------------------------------------
+
+def test_capture_and_record_ticks_recover_jit_frequencies(rng):
+    tel = get_telemetry()
+    a = jnp.asarray(rng.normal(size=(16, 32)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(32, 128)), jnp.float32)
+    shape = gemm_input(16, 128, 32, 32)
+
+    f = jax.jit(lambda a, b: dispatch.matmul(a, b) * 2.0)
+    with tel.capture() as cap:
+        f(a, b)                            # compiling call: trace-time census
+    assert ("gemm", shape) in cap.shapes
+    assert tel.count("gemm", shape) == 1
+    for _ in range(9):                     # later executions record NOTHING…
+        f(a, b)
+    assert tel.count("gemm", shape) == 1   # …the documented jit census gap
+    for _ in range(9):                     # …until the tick hook replays them
+        tel.record_ticks(cap.shapes)
+    assert tel.count("gemm", shape) == 10  # true execution frequency
+    assert tel.stats()["ticks"]["gemm"] == 9
+
+
+def test_engine_ticks_feed_true_decode_frequencies():
+    from repro.models import ModelConfig, init_params
+    from repro.serve import Engine, ServeConfig
+
+    cfg = ModelConfig(name="t", n_layers=1, d_model=32, n_heads=2, n_kv=1,
+                      d_ff=64, vocab=64, dtype=jnp.float32, attn_chunk=16,
+                      logit_chunk=16, remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = Engine(cfg, params, ServeConfig(max_len=64, slots=2))
+    engine.generate([np.arange(4), np.arange(6)], max_new=12)
+    assert engine._decode_shapes            # capture saw the traced kernels
+    tel = get_telemetry()
+    space, shape = engine._decode_shapes[0]
+    # one census count (the compiling tick) + one tick per later execution:
+    # the count tracks engine.ticks, not the number of compilations
+    per_trace = sum(1 for s in engine._decode_shapes if s == (space, shape))
+    assert tel.count(space, shape) == per_trace * engine.ticks
+    assert tel.stats()["ticks"][space] > 0
+    # prefill lengths 4 and 6 each compiled once and captured their shapes
+    assert set(engine._prefill_shapes) == {4, 6}
+
+
+# ---------------------------------------------------------------------------
+# atomic install: generations, torn views, latch re-arming
+# ---------------------------------------------------------------------------
+
+def test_install_serving_swaps_one_generation():
+    s1, m1 = RecordStore(), ModelSet()
+    g0 = install_generation()
+    st = install_serving(store=s1, models=m1, fingerprint="bk-A")
+    assert st.generation == g0 + 1
+    assert serving_state().store is s1
+    assert serving_state().models is m1
+    assert serving_state().fingerprint == "bk-A"
+    # partial swap keeps the unmentioned fields
+    st2 = install_serving(models=None)
+    assert st2.store is s1 and st2.fingerprint == "bk-A"
+    assert st2.generation == st.generation + 1
+    assert get_store() is s1 and get_models() is None
+
+
+def test_hot_swap_never_shows_torn_store_model_pair():
+    """A reader doing ONE serving_state() read always sees a matched
+    (store, models) pair, no matter how fast a writer flips generations."""
+    pairs = [(RecordStore(), ModelSet()) for _ in range(2)]
+    valid = {id(s): id(m) for s, m in pairs}
+    install_serving(store=pairs[0][0], models=pairs[0][1])
+    stop = threading.Event()
+    torn = []
+
+    def writer():
+        i = 0
+        while not stop.is_set():
+            s, m = pairs[i % 2]
+            install_serving(store=s, models=m)
+            i += 1
+
+    def reader():
+        while not stop.is_set():
+            st = serving_state()           # the atomic read dispatch does
+            if valid.get(id(st.store)) != id(st.models):
+                torn.append((st.store, st.models))
+
+    threads = [threading.Thread(target=writer)] + \
+        [threading.Thread(target=reader) for _ in range(3)]
+    for t in threads:
+        t.start()
+    import time
+    time.sleep(0.3)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not torn
+
+
+def test_install_rearms_warn_once_latches(rng):
+    """The docstring contract 'reset_fallback_warnings (tests; store/model
+    reinstall)': a degraded process that gets a FRESH store must warn again
+    if the fresh store degrades too — the old latch must not swallow it."""
+    import warnings as _w
+
+    install_store(RecordStore())                  # empty -> degraded
+    a = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(64, 128)) / 8.0, jnp.float32)
+    with pytest.warns(RuntimeWarning, match="heuristics"):
+        np.asarray(dispatch.matmul(a, b, prefer_kernel=True))
+    with _w.catch_warnings():                     # latched: silent now
+        _w.simplefilter("error")
+        np.asarray(dispatch.matmul(a, b, prefer_kernel=True))
+
+    install_store(RecordStore())                  # reinstall re-arms
+    with pytest.warns(RuntimeWarning, match="heuristics"):
+        np.asarray(dispatch.matmul(a, b, prefer_kernel=True))
+
+
+def test_install_invalidates_nearest_memo():
+    store = RecordStore()
+    store.add(_rec(1024, 16, 2048))
+    probe = gemm_input(1152, 16, 2048)
+    assert store.nearest("gemm", probe) is not None
+    assert store._nearest_memo                    # memoized resolution
+    install_store(store)
+    assert not store._nearest_memo                # new generation, clean memo
+
+
+# ---------------------------------------------------------------------------
+# the controller loop
+# ---------------------------------------------------------------------------
+
+def test_controller_triggers_on_drift_and_hot_swaps(tiny_tuner, tmp_path):
+    """The acceptance loop in miniature: shift traffic -> drift trips ->
+    session commits -> regressors retrain -> one atomic generation flip —
+    all without touching the engine or restarting anything."""
+    store = RecordStore.open(tmp_path / "db.jsonl")
+    fp = backend_fingerprint(tiny_tuner.backend)
+    install_serving(store=store, models=None, fingerprint=None)
+
+    tel = get_telemetry()
+    old = gemm_input(512, 16, 512)
+    for _ in range(40):
+        tel.record("gemm", old)
+    controller = RetuneController(
+        store, tuners={"gemm": tiny_tuner},
+        cfg=RetuneConfig(drift_threshold=0.25, untuned_mass_threshold=0.5,
+                         min_calls=16, top_k_shapes=2, workers=1,
+                         remeasure=True, retrain=True, train_epochs=3,
+                         min_train_samples=5))
+    assert controller.maybe_retune() is None      # steady: nothing to do
+
+    new = gemm_input(2560, 16, 2560)
+    for _ in range(40):
+        tel.record("gemm", new)
+    dec = controller.check()["gemm"]
+    assert dec.trigger and dec.reason == "drift"
+    assert dec.untuned_mass == pytest.approx(1.0)
+    assert dec.novel_shapes == [new]
+
+    gen0 = install_generation()
+    report = controller.maybe_retune()
+    assert report is not None and report.tuned == 1
+    assert store.contains("gemm", new, backend=fp)
+    rec = store.get("gemm", new, backend=fp)
+    assert rec.source == "retune"                 # auditable in the log
+    assert report.retrained == [f"gemm/{fp}"]
+    assert install_generation() > gen0            # the hot-swap happened
+    assert serving_state().store is store
+    assert len(get_models()) == 1                 # retrained regressor serves
+    # the epoch advanced: the same (already-served) traffic does not re-trip
+    assert controller.maybe_retune() is None
+    assert controller.retunes == 1
+
+
+def test_controller_untuned_mass_trigger_without_drift(tiny_tuner):
+    """A brand-new process: traffic is steady from tick one, so drift never
+    fires — but everything is untuned, and THAT must trigger."""
+    store = RecordStore()
+    install_store(store)
+    tel = get_telemetry()
+    controller = RetuneController(
+        store, tuners={"gemm": tiny_tuner},
+        cfg=RetuneConfig(drift_threshold=1.1,     # drift can never fire
+                         untuned_mass_threshold=0.5, min_calls=16,
+                         top_k_shapes=1, workers=1, retrain=False))
+    for _ in range(20):
+        tel.record("gemm", gemm_input(512, 128, 512))
+    dec = controller.check()["gemm"]
+    assert dec.trigger and dec.reason == "untuned"
+    report = controller.maybe_retune()
+    assert report is not None and report.tuned == 1
+    assert report.retrained == []                 # retrain disabled
+
+
+def test_controller_below_min_calls_stays_quiet(tiny_tuner):
+    store = RecordStore()
+    controller = RetuneController(
+        store, tuners={"gemm": tiny_tuner},
+        cfg=RetuneConfig(min_calls=64, top_k_shapes=1))
+    tel = get_telemetry()
+    for _ in range(10):                           # loud shift, tiny window
+        tel.record("gemm", gemm_input(2560, 16, 2560))
+    dec = controller.check()["gemm"]
+    assert dec.drift == pytest.approx(1.0) and not dec.trigger
+
+
+def test_pin_mismatch_warns_and_does_not_livelock(tiny_tuner):
+    """Serving pinned to a fingerprint the session backend does not measure
+    under: the committed records can never serve from the pinned exact
+    tier.  The controller must warn, remember the attempt, and NOT
+    re-trigger (and re-flip generations) on every poll forever."""
+    store = RecordStore()
+    install_serving(store=store, models=None, fingerprint="pinned-other")
+    tel = get_telemetry()
+    controller = RetuneController(
+        store, tuners={"gemm": tiny_tuner},
+        cfg=RetuneConfig(min_calls=8, top_k_shapes=1, workers=1,
+                         retrain=False))
+    for _ in range(20):
+        tel.record("gemm", gemm_input(512, 128, 512))
+    with pytest.warns(RuntimeWarning, match="fingerprint pin"):
+        r1 = controller.maybe_retune()
+    assert r1 is not None and r1.tuned == 1       # the session did run
+    gen = install_generation()
+    # traffic keeps flowing on the same (still pin-unserved) hot shape:
+    # it was attempted once — no re-trigger, no generation churn
+    for _ in range(20):
+        tel.record("gemm", gemm_input(512, 128, 512))
+    assert controller.maybe_retune() is None
+    assert install_generation() == gen
+
+
+def test_zero_tuned_epoch_skips_the_hot_swap(tiny_tuner):
+    """A triggered epoch where every job is skipped (the shape is already
+    tuned under the session backend, just not under the serving pin) must
+    not flip the serving generation — there is nothing new to publish."""
+    store = RecordStore()
+    fp = backend_fingerprint(tiny_tuner.backend)
+    shape = gemm_input(512, 128, 512)
+    store.add(TuneRecord(space="gemm", inputs=shape, config=dict(CFG),
+                         tflops=50.0, backend=fp))
+    install_serving(store=store, models=None, fingerprint="pinned-other")
+    tel = get_telemetry()
+    controller = RetuneController(
+        store, tuners={"gemm": tiny_tuner},
+        cfg=RetuneConfig(min_calls=8, top_k_shapes=1, workers=1,
+                         retrain=True))
+    for _ in range(20):
+        tel.record("gemm", shape)                 # novel UNDER THE PIN only
+    gen0 = install_generation()
+    with pytest.warns(RuntimeWarning, match="fingerprint pin"):
+        report = controller.maybe_retune()
+    assert report is not None and report.tuned == 0
+    assert report.sessions["gemm"].skipped == 1
+    assert install_generation() == gen0           # no no-op generation flip
+    assert controller.retunes == 0                # not a served epoch
+    # the epoch still advanced: the spent window does not re-trigger
+    assert controller.maybe_retune() is None
+
+
+def test_retune_does_not_clobber_concurrent_retarget(tiny_tuner,
+                                                     monkeypatch):
+    """install_serving made DURING a (long) session/retrain — say a new
+    Engine retargeting the store — must survive the retune's final swap:
+    the controller re-reads the state at swap time and declines to publish
+    over a store it no longer owns (and never touches the pin)."""
+    from repro.tunedb import active_fingerprint
+    import repro.tunedb.session as session_mod
+
+    store = RecordStore()
+    install_store(store)
+    tel = get_telemetry()
+    controller = RetuneController(
+        store, tuners={"gemm": tiny_tuner},
+        cfg=RetuneConfig(min_calls=8, top_k_shapes=1, workers=1,
+                         retrain=False))
+    for _ in range(20):
+        tel.record("gemm", gemm_input(512, 128, 512))
+
+    other = RecordStore()
+    orig_run = session_mod.TuningSession.run
+
+    def run_then_retarget(self, *a, **kw):
+        out = orig_run(self, *a, **kw)
+        install_store(other, fingerprint="bk-B")   # the concurrent engine
+        return out
+    monkeypatch.setattr(session_mod.TuningSession, "run", run_then_retarget)
+
+    with pytest.warns(RuntimeWarning, match="retargeted"):
+        report = controller.maybe_retune()
+    assert report is not None and report.tuned == 1   # the work still landed
+    assert get_store() is other                       # retarget preserved
+    assert active_fingerprint() == "bk-B"             # pin preserved
+    assert controller.retunes == 0                    # swap did not publish
+
+
+def test_merged_with_keeps_serving_policy():
+    """The retrain hot-swap must not reset a configured §6 re-measure width
+    or drop the measurer: fresh sets carry defaults, not serving policy."""
+    measure = lambda space, cfg, inputs: 1.0
+    old = ModelSet(measurer=measure, remeasure_top_k=24)
+    out = old.merged_with(ModelSet())                 # freshly trained set
+    assert out.remeasure_top_k == 24
+    assert out.measurer is measure
+
+
+def test_engine_retunes_in_the_generate_loop(tiny_tuner):
+    """End-to-end: a serving engine with the controller enabled notices its
+    own (novel) decode shapes and retunes mid-generate — no restart."""
+    from repro.models import ModelConfig, init_params
+    from repro.serve import Engine, ServeConfig
+
+    cfg = ModelConfig(name="t", n_layers=1, d_model=32, n_heads=2, n_kv=1,
+                      d_ff=64, vocab=64, dtype=jnp.float32, attn_chunk=16,
+                      logit_chunk=16, remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = Engine(
+        cfg, params,
+        ServeConfig(max_len=64, slots=2, retune=True, retune_interval=8,
+                    retune_min_calls=8, retune_top_k=2, retune_train=False),
+        retune_tuners={"gemm": tiny_tuner})
+    assert engine.controller is not None
+    store = get_store()
+    assert store is engine.tunedb_store and len(store) == 0
+    gen0 = install_generation()
+
+    outs = engine.generate([np.arange(4), np.arange(6)], max_new=24)
+    assert all(len(o) == 24 for o in outs)        # serving never stopped
+    assert engine.controller.retunes >= 1         # the loop closed in-band
+    assert install_generation() > gen0
+    assert len(store) >= 1                        # its own hot shapes, tuned
+    rec = store.records()[0]
+    assert rec.source == "retune"
+
+
+# ---------------------------------------------------------------------------
+# serving-path fix: models-only engine config must honor the backend pin
+# ---------------------------------------------------------------------------
+
+def test_models_only_engine_config_pins_fingerprint(tmp_path):
+    from repro.models import ModelConfig, init_params
+    from repro.serve import Engine, ServeConfig
+    from repro.tunedb import active_fingerprint
+
+    # a prior engine pinned bk-A via a store config
+    db = tmp_path / "a.jsonl"
+    RecordStore.open(db).add(_rec(512, 16, 2048, backend="bk-A"))
+    cfg = ModelConfig(name="t", n_layers=1, d_model=32, n_heads=2, n_kv=1,
+                      d_ff=64, vocab=64, dtype=jnp.float32, attn_chunk=16,
+                      logit_chunk=16, remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    Engine(cfg, params, ServeConfig(max_len=32, slots=1, tunedb=str(db),
+                                    tunedb_backend="bk-A"))
+    assert active_fingerprint() == "bk-A"
+
+    # a models-only engine (no store path) with an explicit bk-B pin: the
+    # pin must take effect even though install_store never runs
+    Engine(cfg, params, ServeConfig(max_len=32, slots=1,
+                                    tunedb_models=str(tmp_path / "none"),
+                                    tunedb_backend="bk-B"))
+    assert active_fingerprint() == "bk-B"
+    # and a models-only engine with NO pin retargets to any-backend
+    Engine(cfg, params, ServeConfig(max_len=32, slots=1,
+                                    tunedb_models=str(tmp_path / "none")))
+    assert active_fingerprint() is None
+
+
+# ---------------------------------------------------------------------------
+# CLI: retune / watch
+# ---------------------------------------------------------------------------
+
+def _dump_telemetry(path, shapes_counts):
+    t = ShapeTelemetry()
+    for inputs, n in shapes_counts:
+        t.record("gemm", inputs, n=n)
+    t.save(path)
+
+
+def test_cli_retune_pass_and_epoch_baseline(tmp_path, capsys):
+    db = tmp_path / "db.jsonl"
+    tel_path = tmp_path / "tel.json"
+    _dump_telemetry(tel_path, [(gemm_input(512, 16, 512), 40)])
+
+    # first epoch: everything is new -> untuned mass trips, store fills
+    rc = tunedb_main([
+        "retune", "--store", str(db), "--telemetry", str(tel_path),
+        "--min-calls", "16", "--top-k", "1", "--workers", "1",
+        "--no-train", "--train-samples", "400", "--epochs", "2"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "retuned 1 shape(s)" in out
+    assert RecordStore.open(db).contains("gemm", gemm_input(512, 16, 512),
+                                         backend=None)
+    assert (tmp_path / "tel.json.epoch").exists()    # baseline advanced
+
+    # same telemetry again: zero drift against the saved baseline -> no-op
+    rc = tunedb_main([
+        "retune", "--store", str(db), "--telemetry", str(tel_path),
+        "--min-calls", "16", "--top-k", "1", "--workers", "1", "--no-train",
+        "--train-samples", "400", "--epochs", "2"])
+    assert rc == 0
+    assert "no retune" in capsys.readouterr().out
+
+
+def test_cli_watch_polls_and_stops(tmp_path, capsys):
+    db = tmp_path / "db.jsonl"
+    tel_path = tmp_path / "tel.json"
+    _dump_telemetry(tel_path, [(gemm_input(512, 16, 512), 40)])
+    rc = tunedb_main([
+        "watch", "--store", str(db), "--telemetry", str(tel_path),
+        "--interval", "0", "--max-polls", "2", "--min-calls", "16",
+        "--top-k", "1", "--workers", "1", "--no-train",
+        "--train-samples", "400", "--epochs", "2"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "watch poll 1/2" in out and "watch poll 2/2" in out
+    # poll 1 retuned; poll 2 saw the advanced baseline and declined
+    assert "retuned 1 shape(s)" in out and "no retune" in out
+
+
+def test_cli_retune_missing_telemetry_fails_cleanly(tmp_path, capsys):
+    rc = tunedb_main(["retune", "--store", str(tmp_path / "db.jsonl"),
+                      "--telemetry", str(tmp_path / "nope.json")])
+    assert rc == 1
+    assert "not found" in capsys.readouterr().err
+
+
+def test_retune_report_in_stats(tiny_tuner):
+    store = RecordStore()
+    controller = RetuneController(store, tuners={"gemm": tiny_tuner},
+                                  cfg=RetuneConfig(min_calls=1, workers=1,
+                                                   retrain=False))
+    tel = get_telemetry()
+    for _ in range(8):
+        tel.record("gemm", gemm_input(512, 128, 512))
+    controller.maybe_retune()
+    st = controller.stats()
+    assert st["retunes"] == 1 and st["last"]["tuned"] == 1
+    assert json.dumps(st)                          # JSON-serializable

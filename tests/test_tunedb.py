@@ -118,7 +118,33 @@ def test_nearest_shape_fallback():
     assert store.nearest("gemm", gemm_input(1024, 16, 2048, 32)) is None
     # absurdly far shapes are not neighbors
     assert store.nearest("gemm", gemm_input(8, 8, 8)) is None
+    # misses are the EXACT tier's to report (get); nearest() never
+    # double-attributes them (see test_get_counts_misses_once)
+    assert store.misses == 0
+
+
+def test_get_counts_misses_once():
+    """Dispatch's three-tier flow books exactly one miss per unserved exact
+    lookup — previously get() never counted misses, so a model-tier serve
+    after an exact miss made the store look better than it was; and the
+    get->nearest chain double-counted the no-neighbor case."""
+    store = RecordStore()
+    store.add(_rec(1024, 16, 2048, bm=128))
+    hot = gemm_input(1024, 16, 2048)
+    assert store.get("gemm", hot) is not None
+    assert (store.hits, store.misses) == (1, 0)
+    # exact miss, regardless of what a later tier does with the shape
+    assert store.get("gemm", gemm_input(8, 8, 8)) is None
+    assert (store.hits, store.misses) == (1, 1)
+    # the dispatch chain: get() misses (booked), nearest() finds no
+    # neighbor — still ONE miss for the one resolution
+    assert store.get("gemm", gemm_input(9, 9, 9)) is None
+    assert store.nearest("gemm", gemm_input(9, 9, 9)) is None
     assert store.misses == 2
+    # float-valued dims (JSON round trips) hit the same bucket
+    assert store.get("gemm", {k: float(v) for k, v in hot.items()}) is not None
+    assert store.stats()["lookups"] == {
+        "hits": 2, "nearest": 0, "misses": 2}
 
 
 def test_store_merge_and_export(tmp_path):
