@@ -88,6 +88,29 @@ GATES: List[Gate] = [
             f"{_get(r, 'overhead', 'poll_us', default=0):.1f} us / "
             f"{_get(r, 'overhead', 'interval', default=64)} ticks)"),
     ),
+    Gate(
+        file="fleet",
+        name="4-worker fleet >= 3x single-session job throughput",
+        check=lambda r: _get(r, "speedup", "pass") is True,
+        detail=lambda r: (
+            f"{_get(r, 'speedup', 'speedup', default=0):.2f}x with "
+            f"{_get(r, 'speedup', 'workers', default=4)} workers "
+            f"({_get(r, 'speedup', 'fleet_jobs_per_s', default=0):.2f} vs "
+            f"{_get(r, 'speedup', 'serial_jobs_per_s', default=0):.2f} "
+            f"jobs/s, threshold "
+            f"{_get(r, 'speedup', 'threshold', default=3.0):.0f}x)"),
+    ),
+    Gate(
+        file="fleet",
+        name="fleet-merged store record-equivalent to a serial session",
+        check=lambda r: _get(r, "equivalence", "pass") is True,
+        detail=lambda r: (
+            f"{_get(r, 'equivalence', 'records_fleet', default=0)} records, "
+            f"views match={_get(r, 'equivalence', 'views_match')}, "
+            f"log sizes match={_get(r, 'equivalence', 'log_sizes_match')}, "
+            "provenance preserved="
+            f"{_get(r, 'equivalence', 'provenance_preserved')}"),
+    ),
 ]
 
 

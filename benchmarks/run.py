@@ -9,6 +9,7 @@ One benchmark per paper table/figure (DESIGN.md §8 experiment index):
   E10 tunedb   — record-store lookup overhead on the dispatch hot path
   E11 model    — model-guided dispatch: quality vs oracle + overhead
   E12 retune   — continuous retuning: traffic shift -> session -> hot-swap
+  E13 fleet    — distributed tuning: 4-worker throughput + merge equivalence
 
 Gate validation: ``python -m benchmarks.check_gates`` after a run.
 """
@@ -28,9 +29,9 @@ def main() -> None:
     args = p.parse_args()
     fast = not args.full
 
-    from . import (bench_conv, bench_gemm, bench_kernels, bench_mlp,
-                   bench_model, bench_retune, bench_roofline, bench_sampler,
-                   bench_selection, bench_tunedb)
+    from . import (bench_conv, bench_fleet, bench_gemm, bench_kernels,
+                   bench_mlp, bench_model, bench_retune, bench_roofline,
+                   bench_sampler, bench_selection, bench_tunedb)
     suites = {
         "sampler": lambda: bench_sampler.run(fast),
         "mlp": lambda: bench_mlp.run(fast),
@@ -43,6 +44,7 @@ def main() -> None:
         "tunedb": lambda: bench_tunedb.run(fast),
         "model": lambda: bench_model.run(fast),
         "retune": lambda: bench_retune.run(fast),
+        "fleet": lambda: bench_fleet.run(fast),
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     t_all = time.time()

@@ -30,6 +30,23 @@ def main() -> None:
                         "(drift-triggered sessions + model hot-swap)")
     p.add_argument("--retune-interval", type=int, default=64,
                    help="decode ticks between retune-controller polls")
+    p.add_argument("--retune-async", action="store_true",
+                   help="run triggered retune epochs on a background "
+                        "thread: polls submit and return, the swap lands "
+                        "when the session+retrain completes")
+    p.add_argument("--retune-fleet", default=None,
+                   help="fleet directory to publish drift-triggered plans "
+                        "to (run `python -m repro.tunedb fleet worker` "
+                        "processes against it); implies --retune-async")
+    p.add_argument("--retune-cooldown-ticks", type=int, default=0,
+                   help="decode ticks a retune blocks the next trigger for")
+    p.add_argument("--retune-max-sessions", type=int, default=0,
+                   help="retune sessions allowed per --retune-window "
+                        "seconds (0 = unlimited)")
+    p.add_argument("--retune-window", type=float, default=600.0)
+    p.add_argument("--retune-min-gain", type=float, default=0.0,
+                   help="skip epochs whose projected gain over the "
+                        "nearest-record tier is below this fraction")
     args = p.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -45,7 +62,13 @@ def main() -> None:
         max_len=args.max_len, slots=args.slots,
         temperature=args.temperature, tunedb=args.tunedb,
         tunedb_backend=args.tunedb_backend, retune=args.retune,
-        retune_interval=args.retune_interval))
+        retune_interval=args.retune_interval,
+        retune_async=args.retune_async,
+        retune_fleet=args.retune_fleet,
+        retune_cooldown_ticks=args.retune_cooldown_ticks,
+        retune_max_sessions=args.retune_max_sessions,
+        retune_window_s=args.retune_window,
+        retune_min_gain=args.retune_min_gain))
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab, args.prompt_len)
                for _ in range(args.requests)]
@@ -58,6 +81,15 @@ def main() -> None:
           f"({total/dt:.1f} tok/s, {eng.ticks} decode ticks, "
           f"{total/max(eng.ticks,1):.2f} tokens/tick)")
     if eng.controller is not None:
+        if eng.controller.async_active():
+            print("waiting for the in-flight async retune to land...")
+            if (eng.controller.wait_async(timeout=60.0) is None
+                    and eng.controller.async_active()):
+                # a fleet with no live workers can outwait this launcher;
+                # the published jobs persist on the bus either way
+                print("async retune still in flight after 60s — exiting; "
+                      "fleet jobs stay queued (run `fleet worker` / "
+                      "`fleet drain --wait` to finish and merge them)")
         st = eng.controller.stats()
         print(f"retune: {st['retunes']} epoch(s) over {st['checks']} polls, "
               f"serving generation {st['generation']}")

@@ -17,6 +17,7 @@ exactness is correctness, not merely efficiency, for hybrid/SSM archs.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -40,6 +41,14 @@ class ServeConfig:
     # pin dispatch lookups to one backend fingerprint (multi-backend stores);
     # None keeps the any-backend single-backend behavior
     tunedb_backend: Optional[str] = None
+    # -- model-tier confidence gating (tunedb.model.ModelSet) ----------------
+    # fall back to nearest-neighbor when the model's top-1 margin over top-2
+    # is below this relative threshold (0 = trust every argmax) ...
+    tunedb_margin: float = 0.0
+    # ... or when the shape sits off the training manifold: any input
+    # feature more than this many standard deviations from the featurizer's
+    # training stats (0 disables the gate)
+    tunedb_max_z: float = 6.0
     # -- continuous retuning (tunedb.controller.RetuneController) ------------
     retune: bool = False            # close the telemetry->tune->serve loop
     retune_interval: int = 64       # decode ticks between controller polls
@@ -48,6 +57,21 @@ class ServeConfig:
     retune_min_calls: int = 32      # window calls before a space is judged
     retune_top_k: int = 4           # novel hot shapes tuned per session
     retune_train: bool = True       # retrain + hot-swap regressors too
+    # run triggered epochs on a background thread (submit-and-return polls)
+    # instead of inline on the decode tick that tripped the threshold
+    retune_async: bool = False
+    # fleet directory to publish drift-triggered plans to (lease files for
+    # external `fleet worker` processes); implies async submission
+    retune_fleet: Optional[str] = None
+    # cap retune epochs: engine ticks between sessions / sessions per window
+    retune_cooldown_ticks: int = 0
+    retune_max_sessions: int = 0    # per retune_window_s (0 = unlimited)
+    retune_window_s: float = 600.0
+    # skip epochs whose projected gain over the nearest-record tier is small
+    retune_min_gain: float = 0.0
+    # append per-decode-tick wall seconds to Engine.tick_times (benchmarks
+    # and the fleet acceptance test; off in production serving)
+    record_tick_times: bool = False
 
 
 @dataclasses.dataclass
@@ -108,6 +132,10 @@ class Engine:
                 from repro.tunedb.store import install_serving
                 install_serving(fingerprint=serve_cfg.tunedb_backend)
             models = ModelSet.load(models_dir) if models_dir else ModelSet()
+            # serving policy lives on the ModelSet: confidence gating keeps a
+            # confidently-wrong regressor from undercutting a nearby record
+            models.margin_threshold = serve_cfg.tunedb_margin
+            models.max_feature_z = serve_cfg.tunedb_max_z
             if len(models) or models.skipped:
                 self.tunedb_models = models
             self._models_dir = models_dir or None
@@ -130,9 +158,15 @@ class Engine:
         # and replays them per tick — true frequencies, not a compile census
         self._decode_shapes: Optional[List] = None
         self._prefill_shapes: Dict[int, List] = {}
+        # per-decode-tick (start perf_counter, wall seconds, thread-CPU
+        # seconds) when ServeConfig.record_tick_times — the fleet bench/test
+        # reads this.  Thread CPU time is the de-noised "did THIS thread do
+        # the work" clock: an inline retune session lands in it, scheduler
+        # preemption and other threads' work do not.
+        self.tick_times: List[tuple] = []
         self.controller = None
         self._next_retune_tick = 0
-        if serve_cfg.retune:
+        if serve_cfg.retune or serve_cfg.retune_fleet:
             self._init_controller(retune_tuners)
 
     def _init_controller(self, retune_tuners: Optional[Dict[str, Any]]) -> None:
@@ -154,12 +188,18 @@ class Engine:
             store,
             tuners=retune_tuners,
             models_dir=self._models_dir,
+            async_mode=sc.retune_async,
+            fleet_dir=sc.retune_fleet,
             cfg=RetuneConfig(
                 drift_threshold=sc.retune_drift,
                 untuned_mass_threshold=sc.retune_untuned_mass,
                 min_calls=sc.retune_min_calls,
                 top_k_shapes=sc.retune_top_k,
-                retrain=sc.retune_train))
+                retrain=sc.retune_train,
+                cooldown_ticks=sc.retune_cooldown_ticks,
+                max_sessions_per_window=sc.retune_max_sessions,
+                session_window_s=sc.retune_window_s,
+                min_gain=sc.retune_min_gain))
         self._next_retune_tick = sc.retune_interval
 
     def maybe_retune(self):
@@ -167,11 +207,15 @@ class Engine:
 
         Returns the RetuneReport when a drift-triggered retune ran this
         tick, else None.  A no-trigger poll is a telemetry snapshot diff —
-        microseconds against a multi-millisecond decode tick."""
+        microseconds against a multi-millisecond decode tick.  In async
+        mode (``retune_async``/``retune_fleet``) a triggered poll only
+        submits the epoch; the report surfaces on the first poll after the
+        background session+merge+retrain completes its atomic swap.
+        """
         if self.controller is None or self.ticks < self._next_retune_tick:
             return None
         self._next_retune_tick = self.ticks + self.sc.retune_interval
-        return self.controller.maybe_retune()
+        return self.controller.maybe_retune(tick=self.ticks)
 
     # -- prefill ---------------------------------------------------------------
     def _prefill_one(self, slot: int, req: Request) -> None:
@@ -235,6 +279,8 @@ class Engine:
             # one decode tick for every slot (idle slots run on garbage that
             # is discarded — static shapes, zero recompiles)
             from repro.tunedb.telemetry import get_telemetry
+            if sc.record_tick_times:
+                t_tick, c_tick = time.perf_counter(), time.thread_time()
             last = np.array([
                 (r.out[-1] if r is not None and r.out else 0)
                 for r in self.slot_req], np.int32)[:, None]
@@ -265,4 +311,8 @@ class Engine:
                     self.slot_req[s] = None
                     self.lengths[s] = 0
                     active -= 1
+            if sc.record_tick_times:
+                self.tick_times.append((t_tick,
+                                        time.perf_counter() - t_tick,
+                                        time.thread_time() - c_tick))
         return [r.out for r in queue]

@@ -12,10 +12,13 @@ The persistence backbone of the input-aware runtime:
   model.py      performance regressors trained FROM the store, served per
                 (space, backend fingerprint) at dispatch (paper §5-§6)
   session.py    tune the top-K hot shapes on a worker pool, commit to a store
-  controller.py RetuneController — drift-triggered sessions, retrain, and
+  controller.py RetuneController — drift-triggered sessions (inline, async
+                background thread, or published to a fleet), retrain, and
                 atomic store/ModelSet hot-swap: the loop closed in-process
+  fleet/        distributed tuning: filesystem lease protocol, coordinator,
+                sharded workers (``<store>.shards/<worker_id>.jsonl``)
   __main__.py   ``python -m repro.tunedb`` tune / train / predict / models /
-                retune / watch / stats / export / merge CLI
+                retune / watch / fleet / stats / export / merge CLI
 
 The loop, continuous since PR 3: dispatch records every kernel call's shape
 (and the serving engine replays jit-compiled shapes per decode tick) -> the
@@ -46,6 +49,8 @@ __all__ = [
     "collect_samples", "default_models_dir", "get_models", "harvest",
     "install_models", "train_models",
     "RetuneConfig", "RetuneController", "RetuneReport", "SpaceDecision",
+    "Coordinator", "FleetDir", "FleetJob", "FleetReport", "Worker",
+    "WorkerReport", "run_fleet_inline",
 ]
 
 _SESSION_NAMES = ("TuningSession", "TuneJob", "SessionReport",
@@ -55,6 +60,8 @@ _MODEL_NAMES = ("MODEL_SCHEMA_VERSION", "ModelSet", "PerfModel",
                 "get_models", "harvest", "install_models", "train_models")
 _CONTROLLER_NAMES = ("RetuneConfig", "RetuneController", "RetuneReport",
                      "SpaceDecision")
+_FLEET_NAMES = ("Coordinator", "FleetDir", "FleetJob", "FleetReport",
+                "Worker", "WorkerReport", "run_fleet_inline")
 
 
 def __getattr__(name):
@@ -72,4 +79,8 @@ def __getattr__(name):
         from . import controller
 
         return getattr(controller, name)
+    if name in _FLEET_NAMES:
+        from . import fleet
+
+        return getattr(fleet, name)
     raise AttributeError(name)

@@ -15,6 +15,14 @@ Subcommands:
   watch   poll a telemetry dump on an interval, running ``retune`` passes
           until interrupted (or ``--max-polls``) — the out-of-process
           continuous-retuning daemon
+  fleet   distributed tuning over a shared directory:
+            fleet start   publish a plan as lease files (mined from
+                          telemetry and/or explicit --shape jobs); --wait
+                          merges shards, retrains, writes the FleetReport
+            fleet worker  claim jobs, tune, append to a private shard store
+            fleet status  queue/lease/done/failed counts + shard sizes
+            fleet drain   tell workers to exit once the queue empties;
+                          --wait finalizes like ``start --wait``
   stats   print store (and optional telemetry) statistics as JSON
   export  compact a store to latest-record-per-shape
   merge   fold several stores into one (newest record per shape wins)
@@ -27,6 +35,12 @@ Example round trip:
         --space gemm --shape M=4096,N=16,K=2560
   $ python -m repro.tunedb watch --telemetry /tmp/shapes.json \\
         --store /tmp/tunedb.jsonl --interval 60
+
+Fleet round trip (one coordinator terminal, N worker terminals):
+  $ python -m repro.tunedb fleet start --fleet /tmp/fleet \\
+        --store /tmp/tunedb.jsonl --telemetry /tmp/shapes.json --drain
+  $ python -m repro.tunedb fleet worker --fleet /tmp/fleet   # xN machines
+  $ python -m repro.tunedb fleet drain --fleet /tmp/fleet --wait --train
 """
 
 from __future__ import annotations
@@ -293,6 +307,158 @@ def _cmd_watch(args: argparse.Namespace) -> int:
         _time.sleep(args.interval)
 
 
+# ---------------------------------------------------------------------------
+# fleet: distributed tuning over a shared directory
+# ---------------------------------------------------------------------------
+
+def _fleet_finalize(coord, args: argparse.Namespace, t0: float) -> int:
+    """Wait out the outstanding jobs, merge, optionally retrain, report.
+
+    The report's done/failed counts are cumulative DIRECTORY state (a
+    reused fleet dir keeps its history); the exit code judges only this
+    invocation — failures that appeared while it waited.
+    """
+    import time as _time
+
+    from .model import default_models_dir
+
+    failed_before = coord.fleet.counts()["failed"]
+    ok = coord.wait(timeout_s=args.timeout if args.timeout > 0 else None,
+                    poll_s=0.2, verbose=True)
+    coord.poll()                         # final merge after the last worker
+    retrained: List[str] = []
+    if args.train and coord.affected:
+        models_dir = args.models_dir or default_models_dir(coord.store.path)
+        retrained = coord.retrain(models_dir=models_dir,
+                                  min_samples=args.min_samples,
+                                  epochs=args.epochs, seed=args.seed)
+        print(f"[fleet] retrained {retrained or 'nothing'} -> {models_dir}")
+    rep = coord.report(retrained=retrained, wall_s=_time.time() - t0)
+    print(json.dumps(rep.to_dict(), indent=1, sort_keys=True))
+    if not ok:
+        print(f"[fleet] timed out with {coord.outstanding()} job(s) "
+              "outstanding", file=sys.stderr)
+    return 0 if ok and rep.failed <= failed_before else 1
+
+
+def _add_fleet_finalize_args(sp) -> None:
+    sp.add_argument("--timeout", type=float, default=0.0,
+                    help="give up waiting after this many seconds "
+                         "(0 = wait forever)")
+    sp.add_argument("--train", action="store_true",
+                    help="retrain the affected regressors after the merge")
+    sp.add_argument("--models-dir", default=None,
+                    help="retrained artifacts dir (default: <store>.models/)")
+    sp.add_argument("--min-samples", type=int, default=24)
+    sp.add_argument("--epochs", type=int, default=20)
+    sp.add_argument("--seed", type=int, default=0)
+
+
+def _cmd_fleet_start(args: argparse.Namespace) -> int:
+    import time as _time
+
+    from repro.core.space import SPACES
+
+    from .fleet import Coordinator, FleetJob
+
+    t0 = _time.time()
+    store = RecordStore.open(args.store)
+    coord = Coordinator(args.fleet, store,
+                        lease_timeout_s=args.lease_timeout,
+                        max_attempts=args.max_attempts)
+    jobs: List[FleetJob] = []
+    if args.telemetry:
+        if not os.path.exists(args.telemetry):
+            raise SystemExit(f"telemetry file not found: {args.telemetry}")
+        telemetry = ShapeTelemetry.load(args.telemetry)
+        jobs += coord.plan_from_telemetry(
+            telemetry, spaces=[args.space] if args.space else None,
+            top_k=args.top_k, backend=args.backend,
+            skip_existing=not args.retune)
+    if args.shape and not args.space:
+        raise SystemExit("--shape needs --space")
+    for spec in args.shape:
+        space = SPACES[args.space]
+        jobs.append(FleetJob(space=args.space,
+                             inputs=_parse_shape(spec, space)))
+    if not jobs and not args.wait:
+        print("[fleet] nothing to publish (no --telemetry/--shape jobs, or "
+              "the store already serves them)", file=sys.stderr)
+    # --retune also force-requeues jobs a previous run of this fleet dir
+    # already completed: a terminal marker must not pin a shape forever
+    n = coord.publish(jobs, force=args.retune)
+    print(f"[fleet] published {n} job(s) ({len(jobs) - n} already known) "
+          f"-> {args.fleet}")
+    if args.drain:
+        coord.fleet.request_drain()
+    else:
+        # restarting a plan revives a previously drained directory even
+        # when every job was already queued (publish had nothing to add)
+        coord.fleet.clear_drain()
+    if args.wait:
+        return _fleet_finalize(coord, args, t0)
+    return 0
+
+
+def _cmd_fleet_worker(args: argparse.Namespace) -> int:
+    from .fleet import Worker
+
+    def tuner_factory(space_name: str):
+        from repro.core.backend import SimulatedTPUBackend
+        from repro.core.space import SPACES
+        from repro.core.tuner import InputAwareTuner
+        if args.load_tuner:
+            return InputAwareTuner.load(args.load_tuner, SPACES[space_name],
+                                        backend=SimulatedTPUBackend())
+        print(f"[fleet] training {space_name} tuner "
+              f"({args.train_samples} samples, {args.epochs} epochs)...")
+        return InputAwareTuner.train(
+            SPACES[space_name], n_samples=args.train_samples,
+            epochs=args.epochs, backend=SimulatedTPUBackend(),
+            seed=args.seed)
+
+    worker = Worker(args.fleet, worker_id=args.worker_id,
+                    tuner_factory=tuner_factory,
+                    remeasure=not args.no_remeasure, verbose=True)
+    print(f"[fleet] worker {worker.worker_id} claiming from {args.fleet}")
+    report = worker.run(
+        max_jobs=args.max_jobs if args.max_jobs > 0 else None,
+        idle_timeout_s=(args.idle_timeout if args.idle_timeout > 0
+                        else None))
+    print(f"[fleet] worker {report.worker_id}: {report.tuned} tuned, "
+          f"{report.failed} failed, {report.lost} lost in "
+          f"{report.wall_s:.1f}s")
+    for err in report.errors:
+        print(f"[fleet]   failed: {err}", file=sys.stderr)
+    return 1 if report.failed and not report.tuned else 0
+
+
+def _cmd_fleet_status(args: argparse.Namespace) -> int:
+    from .fleet import FleetDir
+
+    fleet = FleetDir(args.fleet)
+    out = fleet.status()
+    report = fleet.root / "report.json"
+    if report.exists():
+        out["report"] = json.loads(report.read_text())
+    print(json.dumps(out, indent=1, sort_keys=True))
+    return 0
+
+
+def _cmd_fleet_drain(args: argparse.Namespace) -> int:
+    import time as _time
+
+    from .fleet import Coordinator, FleetDir
+
+    t0 = _time.time()
+    FleetDir(args.fleet).request_drain()
+    print(f"[fleet] drain requested: workers exit once {args.fleet} "
+          "has an empty queue")
+    if args.wait:
+        return _fleet_finalize(Coordinator(args.fleet), args, t0)
+    return 0
+
+
 def _cmd_models(args: argparse.Namespace) -> int:
     from .model import ModelSet, default_models_dir
 
@@ -441,6 +607,67 @@ def build_parser() -> argparse.ArgumentParser:
     w.add_argument("--max-polls", type=int, default=0,
                    help="stop after this many polls (0 = forever)")
     w.set_defaults(fn=_cmd_watch)
+
+    fl = sub.add_parser("fleet", help="distributed tuning over a shared dir")
+    fsub = fl.add_subparsers(dest="fleet_cmd", required=True)
+
+    fs = fsub.add_parser("start", help="init a fleet dir and publish a plan")
+    fs.add_argument("--fleet", required=True, help="fleet directory (the bus)")
+    fs.add_argument("--store", default=DEFAULT_STORE,
+                    help="parent record store (shards land next to it)")
+    fs.add_argument("--telemetry", default=None,
+                    help="mine hot shapes from this telemetry dump")
+    fs.add_argument("--space", default=None,
+                    choices=["gemm", "conv", "attention", "ssd"],
+                    help="restrict mining to one space (required by --shape)")
+    fs.add_argument("--shape", action="append", default=[],
+                    help="explicit job, e.g. M=4096,N=16,K=2560 (repeatable)")
+    fs.add_argument("--top-k", type=int, default=8,
+                    help="hot shapes per space to publish")
+    fs.add_argument("--backend", default=None,
+                    help="skip shapes already tuned under this fingerprint "
+                         "(default: any backend)")
+    fs.add_argument("--retune", action="store_true",
+                    help="publish shapes the store already serves too")
+    fs.add_argument("--lease-timeout", type=float, default=30.0,
+                    help="seconds without a heartbeat before a lease is "
+                         "returned to the queue")
+    fs.add_argument("--max-attempts", type=int, default=3)
+    fs.add_argument("--drain", action="store_true",
+                    help="mark the plan final: workers exit when it empties")
+    fs.add_argument("--wait", action="store_true",
+                    help="poll until every job lands, merging shards as "
+                         "they fill; then report")
+    _add_fleet_finalize_args(fs)
+    fs.set_defaults(fn=_cmd_fleet_start)
+
+    fw = fsub.add_parser("worker", help="run one fleet worker process")
+    fw.add_argument("--fleet", required=True)
+    fw.add_argument("--worker-id", default=None,
+                    help="stable shard id (default: host-pid-random)")
+    fw.add_argument("--max-jobs", type=int, default=0,
+                    help="exit after this many claims (0 = until drained)")
+    fw.add_argument("--idle-timeout", type=float, default=0.0,
+                    help="exit after this long with an empty queue "
+                         "(0 = wait for DRAIN)")
+    fw.add_argument("--no-remeasure", action="store_true")
+    fw.add_argument("--load-tuner", default=None,
+                    help="load a trained tuner dir instead of training")
+    fw.add_argument("--train-samples", type=int, default=4000)
+    fw.add_argument("--epochs", type=int, default=12)
+    fw.add_argument("--seed", type=int, default=0)
+    fw.set_defaults(fn=_cmd_fleet_worker)
+
+    fst = fsub.add_parser("status", help="print fleet state as JSON")
+    fst.add_argument("--fleet", required=True)
+    fst.set_defaults(fn=_cmd_fleet_status)
+
+    fd = fsub.add_parser("drain", help="stop the fleet once the queue empties")
+    fd.add_argument("--fleet", required=True)
+    fd.add_argument("--wait", action="store_true",
+                    help="wait for outstanding jobs, merge, and report")
+    _add_fleet_finalize_args(fd)
+    fd.set_defaults(fn=_cmd_fleet_drain)
 
     s = sub.add_parser("stats", help="print store/telemetry statistics")
     s.add_argument("--store", default=DEFAULT_STORE)

@@ -29,22 +29,42 @@ of the global :class:`~repro.tunedb.telemetry.ShapeTelemetry` and, on every
      memos are invalidated, and the warn-once degradation latches re-arm.
      The baseline snapshot advances, opening the next epoch.
 
-The controller is deliberately synchronous and cheap when idle: a no-trigger
-poll is a snapshot diff over the telemetry dict (microseconds against a
-multi-millisecond decode tick — bench_retune.py gates it at <2%).
+A no-trigger poll is a snapshot diff over the telemetry dict (microseconds
+against a multi-millisecond decode tick — bench_retune.py gates it at <2%).
+Triggered epochs come in two execution modes:
+
+  * **inline** (the PR 3 behavior): session + retrain run on the polling
+    thread — the decode tick that trips the threshold pays for the epoch.
+  * **async** (``async_mode=True``): the poll only *submits* the epoch and
+    returns immediately; a background thread runs the plan — through a
+    fleet directory (``fleet_dir``: jobs published as lease files for
+    external ``fleet worker`` processes, shards merged back by the
+    coordinator) or an in-process session when no fleet is attached — and
+    performs the same atomic ``install_serving`` swap when merge+retrain
+    complete.  ``maybe_retune()`` never stalls a decode tick; the next
+    poll after completion returns the finished report.
+
+Epoch admission is budgeted: ``cooldown_ticks`` spaces retunes out along
+the engine's tick clock, ``max_sessions_per_window`` caps them per
+wall-clock window, and ``min_gain`` skips epochs whose projected win
+(model-predicted TFLOPS vs what the nearest record already serves) is too
+small to pay for a session.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import logging
 import threading
 import time
 import warnings
-from typing import Callable, Dict, List, Mapping, Optional
+from typing import Callable, Dict, List, Mapping, Optional, Set, Tuple
 
-from .session import TuningSession, backend_fingerprint
+from .session import SessionReport, TuningSession, backend_fingerprint
 from .store import RecordStore, input_key, install_serving, serving_state
 from .telemetry import ShapeTelemetry, SpaceDrift, get_telemetry
+
+log = logging.getLogger(__name__)
 
 
 def _default_tuner_factory(space_name: str):
@@ -73,6 +93,19 @@ class RetuneConfig:
     min_train_samples: int = 24
     train_epochs: int = 20
     seed: int = 0
+    # -- epoch budget ---------------------------------------------------------
+    # engine ticks a freshly retuned epoch blocks the next trigger for
+    # (0 = no cooldown; needs the caller to pass its tick clock)
+    cooldown_ticks: int = 0
+    # retune sessions allowed per `session_window_s` wall-clock window
+    # (0 = unlimited)
+    max_sessions_per_window: int = 0
+    session_window_s: float = 600.0
+    # skip epochs whose projected relative gain — best model-predicted
+    # TFLOPS over what the nearest record already serves — is below this
+    # (0 = tune whenever triggered).  Shapes with no record AND no model
+    # prediction count as unbounded gain: nothing serves them today.
+    min_gain: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,6 +119,9 @@ class SpaceDecision:
     novel_shapes: List[Dict[str, int]]   # hot window shapes with no record
     trigger: bool
     reason: str                          # "drift" | "untuned" | ""
+    # best (model-predicted - nearest-served) / nearest-served over the novel
+    # shapes; None when no shape had both sides to compare (unbounded gain)
+    projected_gain: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -98,6 +134,7 @@ class RetuneReport:
     sessions: Dict[str, object]          # space -> SessionReport
     retrained: List[str]                 # "space/backend" regressors replaced
     wall_s: float = 0.0
+    mode: str = "inline"                 # inline | async | fleet
 
     @property
     def tuned(self) -> int:
@@ -114,6 +151,14 @@ class RetuneController:
     exact-tier hits appear the moment a record lands.  ``models_dir`` (when
     set) persists every retrained ModelSet, keeping on-disk artifacts in
     step with the hot-swapped in-process ones.
+
+    ``async_mode`` moves triggered epochs off the polling thread: the poll
+    submits and returns, a daemon thread runs the plan and performs the
+    atomic swap when it completes.  ``fleet_dir`` routes the plan through a
+    :class:`~repro.tunedb.fleet.Coordinator` instead of an in-process
+    session — external ``fleet worker`` processes do the tuning, the
+    coordinator merges their shards into ``store`` (provenance intact),
+    and the swap happens only after merge+retrain report complete.
     """
 
     def __init__(self, store: RecordStore, *,
@@ -123,12 +168,22 @@ class RetuneController:
                  models_dir=None,
                  cfg: Optional[RetuneConfig] = None,
                  baseline=None,
+                 async_mode: bool = False,
+                 fleet_dir=None,
+                 fleet_lease_timeout_s: float = 30.0,
+                 fleet_timeout_s: float = 600.0,
+                 fleet_poll_s: float = 0.25,
                  verbose: bool = False):
         self.store = store
         self.telemetry = telemetry if telemetry is not None else get_telemetry()
         self.cfg = cfg or RetuneConfig()
         self.models_dir = models_dir
         self.verbose = verbose
+        self.async_mode = async_mode or fleet_dir is not None
+        self.fleet_dir = fleet_dir
+        self.fleet_lease_timeout_s = fleet_lease_timeout_s
+        self.fleet_timeout_s = fleet_timeout_s
+        self.fleet_poll_s = fleet_poll_s
         self._tuners: Dict[str, object] = dict(tuners or {})
         self._tuner_factory = tuner_factory or _default_tuner_factory
         self._lock = threading.Lock()        # one retune at a time
@@ -136,6 +191,20 @@ class RetuneController:
         self.checks = 0                      # polls (triggered or not)
         self.retunes = 0                     # epochs that actually retuned
         self.last_report: Optional[RetuneReport] = None
+        # async state: at most one in-flight background epoch
+        self._async: Optional[threading.Thread] = None
+        self._async_report: Optional[RetuneReport] = None
+        self.async_submits = 0
+        self.async_submit_t: Optional[float] = None   # perf_counter stamps
+        self.async_done_t: Optional[float] = None
+        # every background epoch's [submit, done] perf_counter window —
+        # observability for "did any tick overlap a session" analyses
+        self.async_windows: List[List[Optional[float]]] = []
+        # epoch budget state
+        self._last_retune_tick: Optional[int] = None
+        self._session_starts: List[float] = []
+        # (space, key, generation) -> projected gain (min_gain planning memo)
+        self._gain_memo: Dict[tuple, Optional[float]] = {}
         # (space, key) pairs a session already worked on: a shape whose
         # committed record can never serve (e.g. a fingerprint pin the
         # session backend does not match) must not re-trigger forever
@@ -147,6 +216,44 @@ class RetuneController:
                           else self.telemetry.snapshot())
 
     # -- detection ------------------------------------------------------------
+    def _projected_gain(self, space: str, novel: List[Dict[str, int]],
+                        fingerprint: Optional[str]) -> Optional[float]:
+        """Best relative win a session could plausibly buy over the novel
+        shapes: model-predicted achievable TFLOPS vs what the nearest-record
+        tier already serves.  None when no shape has both sides — an
+        un-projectable epoch is unbounded upside, not zero.
+        """
+        state = serving_state()
+        models = state.models
+        best: Optional[float] = None
+        for inputs in novel:
+            # memoized per serving generation: a low-gain epoch that keeps
+            # polling must not re-pay the exhaustive model scan every time
+            memo_key = (space, input_key(space, inputs), state.generation)
+            if memo_key in self._gain_memo:
+                gain = self._gain_memo[memo_key]
+            else:
+                gain = None
+                near = self.store.nearest(space, inputs, backend=fingerprint,
+                                          count=False)    # planning probe
+                pm = models.resolve_model(space, fingerprint) \
+                    if models is not None else None
+                if near is not None and near.tflops > 0 and pm is not None:
+                    try:
+                        res = pm.predict_config(inputs, top_k=1)
+                        gain = ((float(res.predicted_tflops) - near.tflops)
+                                / near.tflops)
+                    except Exception:   # noqa: BLE001 — no legal cfg
+                        gain = None
+                if len(self._gain_memo) > 1024:
+                    self._gain_memo.clear()
+                self._gain_memo[memo_key] = gain
+            if gain is None:
+                return None         # a shape nothing serves or projects today
+            if best is None or gain > best:
+                best = gain
+        return best
+
     def _decide(self, drift: SpaceDrift, fingerprint: Optional[str]
                 ) -> SpaceDecision:
         cfg = self.cfg
@@ -168,10 +275,22 @@ class RetuneController:
                 reason = "drift"
             elif mass >= cfg.untuned_mass_threshold:
                 reason = "untuned"
+        gain: Optional[float] = None
+        if reason and cfg.min_gain > 0:
+            gain = self._projected_gain(drift.space, novel, fingerprint)
+            if gain is not None and gain < cfg.min_gain:
+                # the nearest tier already serves within min_gain of what
+                # the model thinks is achievable: a session is not worth
+                # its wall clock — spend the window, keep the records
+                log.debug(
+                    "retune[%s]: skipping %s epoch, projected gain %.3f "
+                    "< min_gain %.3f over %d novel shape(s)",
+                    drift.space, reason, gain, cfg.min_gain, len(novel))
+                reason = ""
         return SpaceDecision(
             space=drift.space, drift=drift.drift, untuned_mass=mass,
             window_calls=drift.window_calls, novel_shapes=novel,
-            trigger=bool(reason), reason=reason)
+            trigger=bool(reason), reason=reason, projected_gain=gain)
 
     def reset_baseline(self) -> None:
         """Open a fresh epoch at "now" without retuning — callers that know
@@ -198,27 +317,139 @@ class RetuneController:
         across instances instead of re-training per poll."""
         return dict(self._tuners)
 
+    # -- epoch budget ---------------------------------------------------------
+    def _budget_blocks(self, tick: Optional[int]) -> Optional[str]:
+        """Why the budget refuses a retune right now (None = go ahead)."""
+        cfg = self.cfg
+        if (cfg.cooldown_ticks > 0 and tick is not None
+                and self._last_retune_tick is not None
+                and tick - self._last_retune_tick < cfg.cooldown_ticks):
+            return (f"cooldown: {tick - self._last_retune_tick} of "
+                    f"{cfg.cooldown_ticks} ticks since the last retune")
+        if cfg.max_sessions_per_window > 0:
+            horizon = time.time() - cfg.session_window_s
+            self._session_starts = [t for t in self._session_starts
+                                    if t >= horizon]
+            if len(self._session_starts) >= cfg.max_sessions_per_window:
+                return (f"budget: {len(self._session_starts)} sessions in "
+                        f"the last {cfg.session_window_s:.0f}s "
+                        f"(cap {cfg.max_sessions_per_window})")
+        return None
+
+    def _note_session_start(self, tick: Optional[int]) -> None:
+        self._session_starts.append(time.time())
+        if tick is not None:
+            self._last_retune_tick = tick
+
+    # -- async plumbing -------------------------------------------------------
+    def async_active(self) -> bool:
+        """True while a submitted background epoch is still running."""
+        th = self._async
+        return th is not None and th.is_alive()
+
+    def wait_async(self, timeout: Optional[float] = None
+                   ) -> Optional[RetuneReport]:
+        """Block until the in-flight background epoch (if any) finishes and
+        return its report — tests and orderly shutdowns."""
+        th = self._async
+        if th is None:
+            return None
+        th.join(timeout)
+        if th.is_alive():
+            return None
+        self._async = None
+        report, self._async_report = self._async_report, None
+        return report
+
+    def _submit_async(self, decisions: Dict[str, SpaceDecision],
+                      triggered: Dict[str, SpaceDecision], t0: float,
+                      tick: Optional[int]) -> None:
+        """Launch the epoch on a daemon thread; the poll returns at once.
+
+        The swap at the end of the thread is the same atomic
+        ``install_serving`` flip as the inline path — the polling thread
+        only ever sees the old generation or the complete new one.
+        """
+        fleet_dir = self.fleet_dir
+        if fleet_dir is not None and self.store.path is None:
+            if "fleet-store" not in self._warned_pins:
+                self._warned_pins.add("fleet-store")
+                warnings.warn(
+                    "fleet retunes need a disk-backed store (workers shard "
+                    "next to it); falling back to the in-process async "
+                    "session", RuntimeWarning, stacklevel=3)
+            fleet_dir = None
+        self._note_session_start(tick)
+        self.async_submits += 1
+        # perf_counter, not wall time: consumers correlate these with other
+        # perf_counter stamps (the engine's per-tick times)
+        self.async_submit_t = time.perf_counter()
+        self.async_done_t = None
+        window = [self.async_submit_t, None]
+        self.async_windows.append(window)
+
+        def body():
+            try:
+                with self._lock:
+                    if fleet_dir is not None:
+                        self._async_report = self._retune_fleet(
+                            decisions, triggered, t0, fleet_dir)
+                    else:
+                        report = self._retune(decisions, triggered, t0)
+                        report.mode = "async"
+                        self._async_report = report
+            except Exception:   # noqa: BLE001 — a dead thread must be seen
+                log.exception("async retune epoch failed")
+                self._async_report = None
+            finally:
+                self.async_done_t = window[1] = time.perf_counter()
+
+        th = threading.Thread(target=body, name="tunedb-retune", daemon=True)
+        self._async = th
+        th.start()
+
     def maybe_retune(self, decisions: Optional[Dict[str, SpaceDecision]]
-                     = None) -> Optional[RetuneReport]:
+                     = None, *, tick: Optional[int] = None
+                     ) -> Optional[RetuneReport]:
         """One poll: detect, and when triggered, tune + retrain + hot-swap.
 
         Returns the :class:`RetuneReport` when a triggered epoch ran, else
         ``None``.  ``decisions`` lets a caller that already ran ``check()``
         (the CLI prints them first) skip the second detection pass.
+        ``tick`` is the caller's decode-tick clock — the ``cooldown_ticks``
+        budget is keyed to it (no tick, no cooldown).
+
+        In async mode a triggered poll *submits* the epoch and returns
+        ``None`` immediately; the first poll after the background run
+        completes returns its report.  At most one epoch is in flight.
         """
+        if self.async_mode:
+            if self.async_active():
+                return None              # one in-flight epoch at a time
+            done = self.wait_async()
+            if done is not None:
+                return done              # reap exactly once
+        blocked = self._budget_blocks(tick)
+        if blocked is not None:
+            log.debug("retune poll skipped (%s)", blocked)
+            return None
+        t0 = time.time()
+        if decisions is None:
+            decisions = self.check()
+        triggered = {s: d for s, d in decisions.items() if d.trigger}
+        if not triggered:
+            return None
+        if self.async_mode:
+            self._submit_async(decisions, triggered, t0, tick)
+            return None
         with self._lock:
-            t0 = time.time()
-            if decisions is None:
-                decisions = self.check()
-            triggered = {s: d for s, d in decisions.items() if d.trigger}
-            if not triggered:
-                return None
+            self._note_session_start(tick)
             return self._retune(decisions, triggered, t0)
 
     def force_retune(self, decisions: Optional[Dict[str, SpaceDecision]]
                      = None) -> Optional[RetuneReport]:
         """Retune every space with novel hot window shapes, thresholds be
-        damned (the CLI ``retune --force`` path)."""
+        damned (the CLI ``retune --force`` path).  Always inline."""
         with self._lock:
             t0 = time.time()
             if decisions is None:
@@ -226,6 +457,7 @@ class RetuneController:
             forced = {s: d for s, d in decisions.items() if d.novel_shapes}
             if not forced:
                 return None
+            self._note_session_start(None)
             return self._retune(decisions, forced, t0)
 
     def _retune(self, decisions: Dict[str, SpaceDecision],
@@ -265,7 +497,98 @@ class RetuneController:
                 print(f"[retune:{space}] {dec.reason}: drift {dec.drift:.2f}, "
                       f"untuned mass {dec.untuned_mass:.2f} -> "
                       f"{report.tuned} tuned, {report.failed} failed")
+        return self._finish_epoch(decisions, sessions, affected_backends,
+                                  t0, state, "inline")
 
+    def _retune_fleet(self, decisions: Dict[str, SpaceDecision],
+                      triggered: Dict[str, SpaceDecision], t0: float,
+                      fleet_dir) -> RetuneReport:
+        """Run one triggered epoch through the fleet bus.
+
+        Jobs are published as lease files for external worker processes;
+        the coordinator requeues crashed workers' leases, merges completed
+        shards into the serving store (provenance intact), and only then —
+        merge done, regressors retrained — does the epoch publish the new
+        generation.  A fleet that never finishes within ``fleet_timeout_s``
+        still publishes whatever landed (partial progress serves; the
+        leftover jobs stay queued for the fleet to finish later).
+        """
+        from .fleet import Coordinator, FleetJob
+
+        state = serving_state()
+        coord = Coordinator(fleet_dir, self.store,
+                            lease_timeout_s=self.fleet_lease_timeout_s)
+        # markers left by PREVIOUS fleet runs of this directory must not be
+        # credited (or debited) to this epoch's plan
+        stale_done = {m.name for m in coord.fleet.done.glob("*.json")}
+        stale_failed = {m.name for m in coord.fleet.failed.glob("*.json")}
+        jobs: List[FleetJob] = []
+        for space, dec in triggered.items():
+            for inputs in dec.novel_shapes:
+                jobs.append(FleetJob(space=space, inputs=dict(inputs),
+                                     source="retune"))
+                self._attempted.add((space, input_key(space, inputs)))
+        published = coord.publish(jobs)
+        if self.verbose:
+            print(f"[retune:fleet] published {published} job(s) "
+                  f"-> {fleet_dir}")
+        finished = coord.wait(timeout_s=self.fleet_timeout_s,
+                              poll_s=self.fleet_poll_s,
+                              verbose=self.verbose)
+        if not finished:
+            warnings.warn(
+                f"fleet retune timed out after {self.fleet_timeout_s:.0f}s "
+                f"with {coord.outstanding()} job(s) outstanding; publishing "
+                "the records that did land", RuntimeWarning, stacklevel=2)
+            # the stragglers stay queued for the fleet — let them COUNT AS
+            # NOVEL again, so the epoch that their traffic eventually
+            # re-triggers republishes (idempotent) and merges their
+            # late-landing shard records into the serving store
+            done_now = {m.name for m in coord.fleet.done.glob("*.json")}
+            fail_now = {m.name for m in coord.fleet.failed.glob("*.json")}
+            for job in jobs:
+                name = f"{job.job_id}.json"
+                if name not in done_now and name not in fail_now:
+                    self._attempted.discard(
+                        (job.space, input_key(job.space, job.inputs)))
+        coord.poll()                     # final merge after the last worker
+        if (state.fingerprint is not None and coord.affected
+                and all(b != state.fingerprint for _, b in coord.affected)
+                and ("fleet", state.fingerprint) not in self._warned_pins):
+            self._warned_pins.add(("fleet", state.fingerprint))
+            warnings.warn(
+                f"fleet workers committed records under backends "
+                f"{sorted({b for _, b in coord.affected})}, none matching "
+                f"the active fingerprint pin {state.fingerprint!r}; the "
+                "exact tier will not serve them", RuntimeWarning,
+                stacklevel=2)
+        # synthesize per-space session reports from the fleet outcome so
+        # RetuneReport reads the same in both execution modes (only markers
+        # that appeared during THIS epoch count)
+        done_ids = {p.stem for p in coord.fleet.done.glob("*.json")
+                    if p.name not in stale_done}
+        failed_ids = {p.stem for p in coord.fleet.failed.glob("*.json")
+                      if p.name not in stale_failed}
+        sessions: Dict[str, object] = {}
+        for space, dec in triggered.items():
+            ids = [j.job_id for j in jobs if j.space == space]
+            tuned = sum(1 for i in ids if i in done_ids)
+            failed = sum(1 for i in ids if i in failed_ids)
+            sessions[space] = SessionReport(
+                space=space, jobs=len(ids), tuned=tuned,
+                skipped=len(dec.novel_shapes) - len(ids), failed=failed,
+                wall_s=time.time() - t0)
+        affected = set(coord.affected)
+        report = self._finish_epoch(decisions, sessions, affected, t0,
+                                    state, "fleet")
+        coord.report(retrained=report.retrained, wall_s=report.wall_s)
+        return report
+
+    def _finish_epoch(self, decisions: Dict[str, SpaceDecision],
+                      sessions: Dict[str, object],
+                      affected_backends: Set[Tuple[str, str]], t0: float,
+                      entry_state, mode: str) -> RetuneReport:
+        cfg = self.cfg
         if not any(r.tuned for r in sessions.values()):
             # nothing landed — there is no serving change to publish, so do
             # NOT flip the generation (that would invalidate every memo for
@@ -273,9 +596,9 @@ class RetuneController:
             self._baseline = self.telemetry.snapshot()
             self.epoch += 1
             self.last_report = RetuneReport(
-                epoch=self.epoch, generation=state.generation,
+                epoch=self.epoch, generation=entry_state.generation,
                 decisions=decisions, sessions=sessions, retrained=[],
-                wall_s=time.time() - t0)
+                wall_s=time.time() - t0, mode=mode)
             return self.last_report
 
         fresh = None
@@ -320,7 +643,7 @@ class RetuneController:
         self.last_report = RetuneReport(
             epoch=self.epoch, generation=new_state.generation,
             decisions=decisions, sessions=sessions, retrained=retrained,
-            wall_s=time.time() - t0)
+            wall_s=time.time() - t0, mode=mode)
         return self.last_report
 
     # -- reporting ------------------------------------------------------------
@@ -331,10 +654,18 @@ class RetuneController:
             "retunes": self.retunes,
             "generation": serving_state().generation,
             "config": dataclasses.asdict(self.cfg),
+            "async": {
+                "enabled": self.async_mode,
+                "fleet_dir": (None if self.fleet_dir is None
+                              else str(self.fleet_dir)),
+                "submits": self.async_submits,
+                "in_flight": self.async_active(),
+            },
             "last": None if self.last_report is None else {
                 "epoch": self.last_report.epoch,
                 "tuned": self.last_report.tuned,
                 "retrained": list(self.last_report.retrained),
                 "wall_s": self.last_report.wall_s,
+                "mode": self.last_report.mode,
             },
         }

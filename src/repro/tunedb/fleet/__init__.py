@@ -1,0 +1,27 @@
+"""repro.tunedb.fleet — distributed tuning: coordinator + sharded workers.
+
+The single-process :class:`~repro.tunedb.session.TuningSession` scaled out
+MITuna-style over a shared filesystem (no network, no daemon):
+
+  lease.py        the coordination bus: job files claimed by atomic rename,
+                  heartbeat mtime refresh, lease expiry, done markers, DRAIN
+  worker.py       claim -> tune -> append to a private shard store
+                  (``<store>.shards/<worker_id>.jsonl``)
+  coordinator.py  publish plans, requeue crashed workers' jobs, merge shards
+                  into the parent store (provenance preserved), retrain the
+                  affected regressors, write a FleetReport
+
+CLI: ``python -m repro.tunedb fleet {start,worker,status,drain}``.  The
+serving loop reaches it through the RetuneController's async mode, which
+submits drift-triggered plans to a fleet directory instead of tuning inline.
+"""
+
+from .coordinator import Coordinator, FleetReport, run_fleet_inline
+from .lease import FleetDir, FleetJob, job_id_for
+from .worker import Worker, WorkerReport, default_worker_id
+
+__all__ = [
+    "Coordinator", "FleetReport", "run_fleet_inline",
+    "FleetDir", "FleetJob", "job_id_for",
+    "Worker", "WorkerReport", "default_worker_id",
+]

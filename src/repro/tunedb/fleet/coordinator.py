@@ -1,0 +1,366 @@
+"""Fleet coordinator: publish a tuning plan, merge shards, report.
+
+The coordinator owns the authoritative :class:`~repro.tunedb.store.
+RecordStore` and the fleet directory; workers own their shards.  Its loop:
+
+  1. **publish** — one lease-file job per planned shape (idempotent by
+     job id, so re-publishing a plan after a restart queues only what is
+     not already queued, leased, done, or failed).
+  2. **poll** — sweep queue entries whose job completed anyway, requeue
+     expired leases (crashed workers), and *incrementally* merge every
+     shard's new records into the parent store.  Each shard has a cursor
+     file (``merged/<worker_id>.json``) recording how many records were
+     consumed, so a coordinator restart resumes the merge exactly where
+     the last one stopped — shards are append-only, like the store.
+  3. **finalize** — when nothing is outstanding (or the deadline hits),
+     retrain the regressors of every (space, backend) the merge touched
+     and write a :class:`FleetReport` next to the manifest.
+
+Merging preserves provenance: a record keeps its original ``source`` tag
+(``fleet``/``retune``/``sample`` — the model harvest and audits key on it)
+and gains ``merged_from=<worker_id>`` as the lineage of the merge itself.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import time
+from typing import Dict, Iterable, List, Mapping, Optional, Set, Tuple
+
+from ..store import RecordStore, SAMPLE_SOURCE, TuneRecord
+from .lease import REPORT, FleetDir, FleetJob, _atomic_write
+
+MERGED = "merged"                       # per-shard merge-cursor directory
+
+
+@dataclasses.dataclass
+class FleetReport:
+    """What one fleet run accomplished, written to ``<fleet>/report.json``."""
+
+    published: int = 0
+    done: int = 0
+    failed: int = 0
+    requeued: int = 0                   # expiry reclaims observed this run
+    merged_records: int = 0             # serving records folded into the store
+    merged_samples: int = 0             # training samples folded in
+    retrained: List[str] = dataclasses.field(default_factory=list)
+    workers: List[str] = dataclasses.field(default_factory=list)
+    wall_s: float = 0.0
+    jobs_per_s: float = 0.0
+
+    def to_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+class Coordinator:
+    """Publish :class:`FleetJob` leases, merge worker shards, retrain.
+
+    ``store`` must be disk-backed: the manifest records its path so worker
+    processes — which share nothing with the coordinator but the filesystem
+    — can place their shards next to it.  Opening a coordinator on an
+    existing fleet directory (``store=None``) resumes from the manifest.
+    """
+
+    def __init__(self, fleet_dir: os.PathLike,
+                 store: Optional[RecordStore] = None, *,
+                 lease_timeout_s: float = 30.0, max_attempts: int = 3):
+        self.fleet = FleetDir(fleet_dir)
+        if store is not None:
+            if store.path is None:
+                raise ValueError(
+                    "fleet coordination needs a disk-backed parent store "
+                    "(workers derive their shard paths from it)")
+            self.store = store
+            self.fleet.init(store.path, lease_timeout_s=lease_timeout_s,
+                            max_attempts=max_attempts)
+            # resuming an existing bus with a DIFFERENT store would merge
+            # into a file no worker shards next to — refuse, don't diverge
+            manifest_store = self.fleet.store_path()
+            if manifest_store != pathlib.Path(store.path).resolve():
+                raise ValueError(
+                    f"fleet dir {self.fleet.root} was created for store "
+                    f"{manifest_store}, not {store.path}; use a fresh "
+                    "fleet directory (or omit `store` to resume)")
+        else:
+            self.store = RecordStore.open(self.fleet.store_path())
+        m = self.fleet.manifest()
+        self.lease_timeout_s = float(m["lease_timeout_s"])
+        self.max_attempts = int(m["max_attempts"])
+        self._merged_dir = self.fleet.root / MERGED
+        self._merged_dir.mkdir(parents=True, exist_ok=True)
+        self.published = 0
+        self.requeued = 0
+        self.merged_records = 0
+        self.merged_samples = 0
+        # (space, backend) pairs the merge touched — the retrain set
+        self.affected: Set[Tuple[str, str]] = set()
+        # shard sizes at the last merge: an unchanged file is not re-parsed
+        # (the poll loop runs merge_completed every few hundred ms)
+        self._shard_sizes: Dict[str, int] = {}
+
+    # -- publish ---------------------------------------------------------------
+    def publish(self, jobs: Iterable, *, source: str = "fleet",
+                force: bool = False) -> int:
+        """Queue jobs (session ``TuneJob``s, ``FleetJob``s, or
+        ``(space, inputs, count)`` tuples).  Returns how many were new.
+        ``force`` re-queues jobs a PREVIOUS fleet run already finished
+        (their stale done/failed markers are dropped) — the re-tune path.
+        """
+        n = 0
+        for job in jobs:
+            if isinstance(job, FleetJob):
+                fj = job
+            elif isinstance(job, tuple):
+                space, inputs, count = job
+                fj = FleetJob(space=space, inputs=dict(inputs),
+                              count=int(count), source=source)
+            else:                       # session.TuneJob duck type
+                fj = FleetJob(space=job.space, inputs=dict(job.inputs),
+                              count=int(getattr(job, "count", 0)),
+                              source=source)
+            if self.fleet.publish(fj, force=force):
+                n += 1
+        if n:
+            # new work revives a previously drained directory — workers
+            # must not keep turning away at the stale DRAIN marker
+            self.fleet.clear_drain()
+        self.published += n
+        return n
+
+    def plan_from_telemetry(self, telemetry, *, spaces: Optional[List[str]]
+                            = None, top_k: int = 8,
+                            backend: Optional[str] = None,
+                            skip_existing: bool = True,
+                            source: str = "fleet") -> List[FleetJob]:
+        """Mine the top-K hot shapes per space into publishable jobs,
+        skipping shapes the parent store already serves (under ``backend``,
+        when the fleet tunes for a pinned fingerprint)."""
+        jobs: List[FleetJob] = []
+        for space in (spaces if spaces is not None else telemetry.spaces()):
+            for inputs, count in telemetry.hot_shapes(space, top_k):
+                if skip_existing and self.store.contains(space, inputs,
+                                                         backend=backend):
+                    continue
+                jobs.append(FleetJob(space=space, inputs=dict(inputs),
+                                     count=count, source=source))
+        return jobs
+
+    # -- shard merge -----------------------------------------------------------
+    def _cursor(self, worker_id: str) -> Tuple[int, int]:
+        """(records merged, byte offset consumed) for one shard."""
+        path = self._merged_dir / f"{worker_id}.json"
+        if not path.exists():
+            return 0, 0
+        try:
+            d = json.loads(path.read_text())
+            return int(d["merged"]), int(d.get("offset", -1))
+        except (ValueError, KeyError, TypeError):
+            return 0, 0
+
+    def _save_cursor(self, worker_id: str, merged: int, offset: int) -> None:
+        _atomic_write(self._merged_dir / f"{worker_id}.json",
+                      json.dumps({"merged": merged, "offset": offset,
+                                  "updated_at": time.time()}))
+
+    def merge_completed(self) -> Tuple[int, int]:
+        """Fold every shard's NEW records into the parent store.
+
+        Incremental and idempotent: each shard's cursor advances past the
+        records consumed, so calling this in a poll loop (or after a
+        coordinator restart) merges each record exactly once.  The serving
+        index stays newest-wins regardless — a job that ran twice (expiry
+        requeue racing a slow worker) lands twice in the log but serves
+        once.  Returns (serving records, samples) merged this call.
+        """
+        shard_dir = self.fleet.shard_dir()
+        if not shard_dir.is_dir():
+            return 0, 0
+        n_recs = n_samples = 0
+        # one durability barrier per merge PASS, not per record: a poll loop
+        # fsyncing the parent store per merged record stalls the workers'
+        # own shard writes on the shared filesystem
+        fsync_prev, self.store.fsync = self.store.fsync, False
+        try:
+            n_recs, n_samples = self._merge_pass(shard_dir)
+        finally:
+            self.store.fsync = fsync_prev
+            if fsync_prev and n_recs + n_samples:
+                self.store.sync()
+        self.merged_records += n_recs
+        self.merged_samples += n_samples
+        return n_recs, n_samples
+
+    def _merge_pass(self, shard_dir) -> Tuple[int, int]:
+        n_recs = n_samples = 0
+        for shard_path in sorted(shard_dir.glob("*.jsonl")):
+            worker_id = shard_path.stem
+            try:
+                size = shard_path.stat().st_size
+            except FileNotFoundError:
+                continue
+            if size == self._shard_sizes.get(worker_id):
+                continue                 # nothing appended since last merge
+            count, offset = self._cursor(worker_id)
+            # shards are append-only: seek past what previous passes
+            # consumed and parse only the NEW bytes (a poll loop re-decoding
+            # a growing shard from byte 0 every pass is O(n^2) over the
+            # run).  A pre-offset cursor (older format, offset<0) pays one
+            # full parse and skips the already-merged record count.
+            start, skip = (offset, 0) if offset >= 0 else (0, count)
+            with shard_path.open("rb") as fh:
+                fh.seek(start)
+                chunk = fh.read()
+            upto = chunk.rfind(b"\n")    # only COMPLETE lines are consumable
+            if upto < 0:
+                self._shard_sizes[worker_id] = size
+                continue                 # torn tail only: next append re-reads
+            fresh: List[TuneRecord] = []
+            for raw in chunk[:upto].split(b"\n"):
+                raw = raw.strip()
+                if not raw:
+                    continue
+                try:
+                    fresh.append(TuneRecord.from_json(raw.decode("utf-8")))
+                except (ValueError, TypeError, KeyError,
+                        UnicodeDecodeError):
+                    continue             # foreign garbage line: skipped
+            for rec in fresh[skip:]:
+                self.store.add(dataclasses.replace(rec,
+                                                   merged_from=worker_id))
+                if rec.source == SAMPLE_SOURCE:
+                    n_samples += 1
+                else:
+                    n_recs += 1
+                    self.affected.add((rec.space, rec.backend))
+            new_count = (len(fresh) if offset < 0
+                         else count + len(fresh))
+            self._save_cursor(worker_id, new_count, start + upto + 1)
+            # only after the cursor is durable: an exception above leaves
+            # the size entry stale, so the next poll re-reads the shard
+            # instead of stranding its records behind an "unchanged" skip
+            self._shard_sizes[worker_id] = size
+        return n_recs, n_samples
+
+    # -- the poll loop ---------------------------------------------------------
+    def poll(self) -> Dict[str, object]:
+        """One maintenance pass: sweep, reclaim expired leases, merge.
+
+        Deliberately cheap enough for a sub-second loop: directory entry
+        counts only — the full ``FleetDir.status()`` (which reads every
+        shard to count records) is for the CLI, not this path.
+        """
+        self.fleet.sweep_done()
+        reclaimed = self.fleet.reclaim_expired(
+            lease_timeout_s=self.lease_timeout_s,
+            max_attempts=self.max_attempts)
+        self.requeued += len(reclaimed)
+        recs, samples = self.merge_completed()
+        return {"counts": self.fleet.counts(),
+                "draining": self.fleet.draining(),
+                "reclaimed": reclaimed, "merged_now": recs + samples}
+
+    def outstanding(self) -> int:
+        return self.fleet.outstanding()
+
+    def wait(self, *, timeout_s: Optional[float] = None,
+             poll_s: float = 0.25, verbose: bool = False) -> bool:
+        """Poll until every published job is done or failed (True), or the
+        deadline passes (False).  Merging happens as shards fill, not at
+        the end — a long fleet's records serve as soon as they land."""
+        deadline = None if timeout_s is None else time.time() + timeout_s
+        while True:
+            status = self.poll()
+            left = self.outstanding()
+            if verbose:
+                c = status["counts"]
+                print(f"[fleet] queue {c['queue']}, leases {c['leases']}, "
+                      f"done {c['done']}, failed {c['failed']}")
+            if left == 0:
+                return True
+            if deadline is not None and time.time() >= deadline:
+                return False
+            time.sleep(poll_s)
+
+    # -- retrain + report ------------------------------------------------------
+    def retrain(self, *, models_dir: Optional[os.PathLike] = None,
+                min_samples: int = 24, epochs: int = 20,
+                seed: int = 0) -> List[str]:
+        """Retrain the regressors of every (space, backend) the merge
+        touched; persist artifacts when ``models_dir`` is given.  Returns
+        the ``space/backend`` keys retrained."""
+        if not self.affected:
+            return []
+        from ..model import train_models
+        fresh = None
+        for space, backend in sorted(self.affected):
+            part = train_models(self.store, space=space, backend=backend,
+                                min_samples=min_samples, epochs=epochs,
+                                seed=seed)
+            fresh = part if fresh is None else fresh.merged_with(part)
+        if fresh is None or not len(fresh):
+            return []
+        if models_dir:
+            fresh.save(models_dir)
+        self._fresh_models = fresh
+        return [f"{s}/{b}" for s, b in sorted(fresh.models)]
+
+    def fresh_models(self):
+        """The ModelSet the last ``retrain()`` produced (None before)."""
+        return getattr(self, "_fresh_models", None)
+
+    def report(self, *, retrained: Optional[List[str]] = None,
+               wall_s: float = 0.0, write: bool = True) -> FleetReport:
+        counts = self.fleet.counts()
+        workers = sorted({str(m.get("worker_id", "?"))
+                          for m in self.fleet.done_meta()})
+        rep = FleetReport(
+            published=self.published, done=counts["done"],
+            failed=counts["failed"], requeued=self.requeued,
+            merged_records=self.merged_records,
+            merged_samples=self.merged_samples,
+            retrained=list(retrained or []), workers=workers,
+            wall_s=wall_s,
+            jobs_per_s=(counts["done"] / wall_s if wall_s > 0 else 0.0))
+        if write:
+            _atomic_write(self.fleet.root / REPORT,
+                          json.dumps(rep.to_dict(), indent=1,
+                                     sort_keys=True))
+        return rep
+
+
+def run_fleet_inline(fleet_dir: os.PathLike, store: RecordStore,
+                     jobs: Iterable, *, n_workers: int = 2,
+                     tuners: Optional[Mapping[str, object]] = None,
+                     tuner_factory=None, source: str = "fleet",
+                     lease_timeout_s: float = 30.0,
+                     timeout_s: Optional[float] = None,
+                     remeasure: bool = True) -> FleetReport:
+    """Convenience harness: coordinator + N thread workers in one process.
+
+    The protocol is identical to the multi-process fleet (same directory,
+    same leases, same shards) — this just saves tests and benchmarks the
+    process management.  Workers share ``tuners`` (train-once).
+    """
+    import threading
+
+    from .worker import Worker
+
+    t0 = time.time()
+    coord = Coordinator(fleet_dir, store, lease_timeout_s=lease_timeout_s)
+    coord.publish(jobs, source=source)
+    coord.fleet.request_drain()          # one plan, then everybody goes home
+    workers = [Worker(fleet_dir, worker_id=f"w{i}", tuners=tuners,
+                      tuner_factory=tuner_factory, poll_s=0.02,
+                      remeasure=remeasure)
+               for i in range(n_workers)]
+    threads = [threading.Thread(target=w.run) for w in workers]
+    for t in threads:
+        t.start()
+    coord.wait(timeout_s=timeout_s, poll_s=0.1)
+    for t in threads:
+        t.join()
+    coord.poll()                         # final merge after the last worker
+    return coord.report(wall_s=time.time() - t0)

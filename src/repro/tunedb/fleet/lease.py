@@ -1,0 +1,366 @@
+"""Filesystem lease protocol: the coordination bus of the tuning fleet.
+
+No network dependency, no database, no daemon: a shared directory IS the
+queue, exactly like the record store is a shared JSONL file.  The MITuna
+production shape (a coordinator leasing jobs to a worker fleet writing
+independent shards) reduced to portable filesystem primitives:
+
+  * **publish** — the coordinator writes one ``queue/<job_id>.json`` per
+    :class:`FleetJob` (atomic tmp+rename, so a reader never sees a torn
+    job file).  ``job_id`` is derived from the (space, inputs) key, so
+    re-publishing the same plan is idempotent.
+  * **claim-by-atomic-rename** — a worker claims a job by renaming
+    ``queue/<id>.json`` to ``leases/<id>.json``.  ``os.rename`` of one
+    source path succeeds for exactly one racer (POSIX); every loser gets
+    ``FileNotFoundError`` and moves on to the next queue entry.
+  * **heartbeat** — the claiming worker refreshes the lease file's mtime
+    (``os.utime``) while it tunes.  A heartbeat on a vanished lease tells
+    the worker it lost the job (expired and reclaimed).
+  * **expiry** — the coordinator requeues any lease whose mtime is older
+    than ``lease_timeout_s``: a crashed (or wedged) worker's job goes back
+    to the queue with ``attempts`` bumped, and lands in ``failed/`` once
+    ``max_attempts`` is exhausted.
+  * **completion** — the worker appends its records to its own shard store
+    (``<store>.shards/<worker_id>.jsonl`` — no write contention by
+    construction), writes a ``done/<id>.json`` marker, then drops the
+    lease.  The done marker is authoritative: a lease or queue entry whose
+    job is already done is swept, never re-run.
+  * **drain** — a ``DRAIN`` marker tells workers to exit once the queue is
+    empty instead of idling for more work.
+
+Durability contract: every transition is ATOMIC (rename / tmp+replace) but
+not fsynced — the bus recovers worker/coordinator *process* crashes (the
+appends and markers are already in the kernel when the next transition
+depends on them), while a host power loss may drop in-flight jobs' markers
+or results.  That is the right trade for a tuning fleet: lost work is
+re-queued by lease expiry or republished by the next ``fleet start``; the
+authoritative parent store re-establishes its own fsync durability at
+merge time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import time
+from typing import Dict, List, Mapping, Optional, Tuple
+
+from ..store import input_key, normalize_inputs
+
+FLEET_SCHEMA_VERSION = 1
+
+QUEUE, LEASES, DONE, FAILED = "queue", "leases", "done", "failed"
+MANIFEST, DRAIN_MARKER, REPORT = "manifest.json", "DRAIN", "report.json"
+
+
+def job_id_for(space: str, inputs: Mapping[str, int]) -> str:
+    """Stable job id: one job per (space, inputs) — republish is idempotent."""
+    return f"{space}-{input_key(space, inputs)}"
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetJob:
+    """One leased unit of fleet work: tune one input shape."""
+
+    space: str
+    inputs: Dict[str, int]
+    count: int = 0                      # telemetry frequency (priority hint)
+    source: str = "fleet"               # what the committed record's tag says
+    attempts: int = 0                   # times this job was leased so far
+    created_at: float = 0.0
+
+    @property
+    def job_id(self) -> str:
+        return job_id_for(self.space, self.inputs)
+
+    def to_json(self) -> str:
+        d = dataclasses.asdict(self)
+        d["schema_version"] = FLEET_SCHEMA_VERSION
+        return json.dumps(d, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, line: str) -> "FleetJob":
+        d = json.loads(line)
+        if not isinstance(d, dict) or "space" not in d or "inputs" not in d:
+            raise ValueError(f"not a FleetJob: {line[:80]!r}")
+        if int(d.get("schema_version", 1)) > FLEET_SCHEMA_VERSION:
+            raise ValueError(
+                f"job schema v{d['schema_version']} > v{FLEET_SCHEMA_VERSION}")
+        known = {f.name for f in dataclasses.fields(cls)}
+        d = {k: v for k, v in d.items() if k in known}
+        d["inputs"] = normalize_inputs(d["inputs"])
+        return cls(**d)
+
+
+def _atomic_write(path: pathlib.Path, text: str) -> None:
+    tmp = path.with_name(path.name + ".tmp")
+    tmp.write_text(text, encoding="utf-8")
+    os.replace(tmp, path)
+
+
+class FleetDir:
+    """One fleet's coordination directory: queue/leases/done/failed + manifest.
+
+    Every mutation is a single atomic filesystem operation (rename or
+    tmp+replace), so any number of worker processes and one coordinator can
+    share the directory with no locks.  All methods tolerate concurrent
+    mutation: a file that vanishes mid-operation means another process got
+    there first, never an error.
+    """
+
+    def __init__(self, root: os.PathLike):
+        self.root = pathlib.Path(root)
+        self.queue = self.root / QUEUE
+        self.leases = self.root / LEASES
+        self.done = self.root / DONE
+        self.failed = self.root / FAILED
+
+    # -- lifecycle -----------------------------------------------------------
+    def init(self, store_path: os.PathLike, *, lease_timeout_s: float = 30.0,
+             max_attempts: int = 3) -> Dict[str, object]:
+        """Create the directory layout and the manifest (idempotent)."""
+        for d in (self.root, self.queue, self.leases, self.done, self.failed):
+            d.mkdir(parents=True, exist_ok=True)
+        manifest = {
+            "schema_version": FLEET_SCHEMA_VERSION,
+            "store": str(pathlib.Path(store_path).resolve()),
+            "lease_timeout_s": float(lease_timeout_s),
+            "max_attempts": int(max_attempts),
+            "created_at": time.time(),
+        }
+        path = self.root / MANIFEST
+        if path.exists():               # resume: the existing bus wins
+            return self.manifest()
+        _atomic_write(path, json.dumps(manifest, sort_keys=True))
+        return manifest
+
+    def manifest(self) -> Dict[str, object]:
+        path = self.root / MANIFEST
+        if not path.exists():
+            raise FileNotFoundError(
+                f"{path}: not a fleet directory (run `fleet start` first)")
+        return json.loads(path.read_text())
+
+    def store_path(self) -> pathlib.Path:
+        return pathlib.Path(str(self.manifest()["store"]))
+
+    def shard_dir(self) -> pathlib.Path:
+        """Per-worker shard stores live NEXT TO the parent store."""
+        store = self.store_path()
+        return store.with_name(store.name + ".shards")
+
+    def shard_path(self, worker_id: str) -> pathlib.Path:
+        return self.shard_dir() / f"{worker_id}.jsonl"
+
+    # -- publish -------------------------------------------------------------
+    def publish(self, job: FleetJob, *, force: bool = False) -> bool:
+        """Queue one job unless it is already anywhere in the lifecycle.
+
+        ``force`` re-queues a job whose previous run already completed or
+        failed (the ``fleet start --retune`` semantics): the stale terminal
+        marker is dropped first.  A job currently queued or leased is never
+        duplicated, force or not.
+        """
+        jid = job.job_id
+        for d in (self.queue, self.leases):
+            if (d / f"{jid}.json").exists():
+                return False
+        for d in (self.done, self.failed):
+            marker = d / f"{jid}.json"
+            if marker.exists():
+                if not force:
+                    return False
+                marker.unlink(missing_ok=True)
+        if job.created_at <= 0:
+            job = dataclasses.replace(job, created_at=time.time())
+        _atomic_write(self.queue / f"{jid}.json", job.to_json())
+        return True
+
+    # -- claim / heartbeat (worker side) --------------------------------------
+    def claim(self) -> Optional[Tuple[FleetJob, pathlib.Path]]:
+        """Claim the first available queue entry by atomic rename.
+
+        Returns (job, lease_path), or None when the queue is empty (or every
+        entry was snatched by a faster racer — indistinguishable, by design).
+        """
+        try:
+            names = sorted(p.name for p in self.queue.iterdir()
+                           if p.suffix == ".json")
+        except FileNotFoundError:
+            return None
+        for name in names:
+            src, dst = self.queue / name, self.leases / name
+            try:
+                # freshen BEFORE the rename: rename preserves mtime, and a
+                # job that sat queued longer than the lease timeout must
+                # not be born expired (reclaimed out of the claimant's
+                # hands before it can heartbeat)
+                os.utime(src)
+                os.rename(src, dst)
+            except FileNotFoundError:
+                continue                # lost the race for this entry
+            try:
+                job = FleetJob.from_json(dst.read_text())
+            except (ValueError, OSError):
+                dst.unlink(missing_ok=True)      # foreign garbage: drop it
+                continue
+            os.utime(dst)               # the claim is the first heartbeat
+            return job, dst
+        return None
+
+    def heartbeat(self, lease_path: pathlib.Path) -> bool:
+        """Refresh the lease mtime; False means the lease was reclaimed."""
+        try:
+            os.utime(lease_path)
+            return True
+        except FileNotFoundError:
+            return False
+
+    # -- completion / failure (worker side) ------------------------------------
+    def complete(self, job: FleetJob, lease_path: pathlib.Path,
+                 meta: Mapping[str, object]) -> bool:
+        """Mark a job done (marker first, then drop the lease).
+
+        The done marker is written BEFORE the lease is released: a crash
+        between the two leaves a lease that the sweeper removes on sight of
+        the marker, never a completed job that gets re-run.  Returns False
+        when the lease was already reclaimed — the work still counts (the
+        shard has the records; merge is newest-wins) but the marker credit
+        goes to whichever execution finished first.
+        """
+        marker = self.done / f"{job.job_id}.json"
+        already = marker.exists()
+        if not already:
+            payload = dict(meta)
+            payload.update(job_id=job.job_id, space=job.space,
+                           inputs=job.inputs, finished_at=time.time())
+            _atomic_write(marker, json.dumps(payload, sort_keys=True))
+        lease_path.unlink(missing_ok=True)
+        return not already
+
+    def fail(self, job: FleetJob, lease_path: pathlib.Path, error: str, *,
+             max_attempts: int) -> str:
+        """Requeue a failed job (attempts bumped) or bury it in ``failed/``.
+
+        Returns ``"requeued"`` or ``"failed"``.
+        """
+        attempts = job.attempts + 1
+        if attempts >= max_attempts:
+            _atomic_write(self.failed / f"{job.job_id}.json", json.dumps({
+                "job": json.loads(job.to_json()), "attempts": attempts,
+                "error": error, "failed_at": time.time()}, sort_keys=True))
+            outcome = "failed"
+        else:
+            requeued = dataclasses.replace(job, attempts=attempts)
+            _atomic_write(self.queue / f"{job.job_id}.json",
+                          requeued.to_json())
+            outcome = "requeued"
+        lease_path.unlink(missing_ok=True)
+        return outcome
+
+    # -- expiry / sweep (coordinator side) -------------------------------------
+    def reclaim_expired(self, *, lease_timeout_s: float,
+                        max_attempts: int) -> List[str]:
+        """Return crashed workers' jobs to the queue; bury the hopeless.
+
+        A lease whose job already has a done marker is simply swept (the
+        worker died between marker and release).  Returns the job ids
+        requeued or failed this pass.
+        """
+        now = time.time()
+        touched: List[str] = []
+        for lease in sorted(self.leases.glob("*.json")):
+            jid = lease.stem
+            if (self.done / lease.name).exists():
+                lease.unlink(missing_ok=True)      # finished, stale lease
+                continue
+            try:
+                age = now - lease.stat().st_mtime
+            except FileNotFoundError:
+                continue                           # released under us
+            if age <= lease_timeout_s:
+                continue
+            try:
+                job = FleetJob.from_json(lease.read_text())
+            except (ValueError, OSError):
+                lease.unlink(missing_ok=True)
+                continue
+            self.fail(job, lease, f"lease expired after {age:.1f}s",
+                      max_attempts=max_attempts)
+            touched.append(jid)
+        return touched
+
+    def sweep_done(self) -> int:
+        """Drop queue entries whose job completed anyway (an expiry requeue
+        racing a slow-but-successful worker).  Returns entries removed."""
+        n = 0
+        for entry in self.queue.glob("*.json"):
+            if (self.done / entry.name).exists():
+                entry.unlink(missing_ok=True)
+                n += 1
+        return n
+
+    # -- drain ----------------------------------------------------------------
+    def request_drain(self) -> None:
+        (self.root / DRAIN_MARKER).touch()
+
+    def clear_drain(self) -> None:
+        """Publishing new work revives a drained fleet: without this, a
+        directory that was ever drained would turn every later worker away
+        at startup forever."""
+        (self.root / DRAIN_MARKER).unlink(missing_ok=True)
+
+    def draining(self) -> bool:
+        return (self.root / DRAIN_MARKER).exists()
+
+    # -- inspection ------------------------------------------------------------
+    def _count(self, d: pathlib.Path) -> int:
+        try:
+            return sum(1 for p in d.iterdir() if p.suffix == ".json")
+        except FileNotFoundError:
+            return 0
+
+    def counts(self) -> Dict[str, int]:
+        return {state: self._count(d) for state, d in
+                ((QUEUE, self.queue), (LEASES, self.leases),
+                 (DONE, self.done), (FAILED, self.failed))}
+
+    def outstanding(self) -> int:
+        """Jobs not yet terminally done/failed."""
+        c = self.counts()
+        return c[QUEUE] + c[LEASES]
+
+    def done_meta(self) -> List[Dict[str, object]]:
+        out = []
+        for p in sorted(self.done.glob("*.json")):
+            try:
+                out.append(json.loads(p.read_text()))
+            except (ValueError, OSError):
+                continue
+            out[-1].setdefault("job_id", p.stem)
+        return out
+
+    def status(self) -> Dict[str, object]:
+        now = time.time()
+        lease_ages = {}
+        for p in sorted(self.leases.glob("*.json")):
+            try:
+                lease_ages[p.stem] = round(now - p.stat().st_mtime, 3)
+            except FileNotFoundError:
+                continue
+        shards = {}
+        shard_dir = self.shard_dir()
+        if shard_dir.is_dir():
+            for p in sorted(shard_dir.glob("*.jsonl")):
+                shards[p.stem] = sum(1 for line in
+                                     p.read_text().splitlines() if line)
+        return {
+            "root": str(self.root),
+            "store": str(self.store_path()),
+            "counts": self.counts(),
+            "draining": self.draining(),
+            "lease_age_s": lease_ages,
+            "shard_records": shards,
+        }

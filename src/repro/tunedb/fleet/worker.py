@@ -1,0 +1,200 @@
+"""Fleet worker: claim leased jobs, tune, append to a private shard store.
+
+A :class:`Worker` is the unit the fleet scales by: each one claims jobs from
+the shared :class:`~repro.tunedb.fleet.lease.FleetDir` (claim-by-atomic-
+rename, so two workers can never run the same lease), tunes the shape with
+its per-space tuner, and appends the resulting records to its OWN shard
+store — ``<store>.shards/<worker_id>.jsonl`` — so the fleet's write paths
+never contend on one file.  The coordinator merges shards into the parent
+store; a worker never touches the parent.
+
+While a job runs, a daemon heartbeat thread refreshes the lease mtime every
+``heartbeat_s``; a worker that dies mid-job simply stops heartbeating, and
+the coordinator's expiry pass returns the job to the queue.  Workers may be
+threads in one process (tests, the controller's in-process fallback) or
+independent OS processes (``python -m repro.tunedb fleet worker``) — the
+protocol is the filesystem either way.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import socket
+import threading
+import time
+import uuid
+from typing import Callable, Dict, List, Mapping, Optional
+
+from ..session import record_from_search
+from ..store import RecordStore, SAMPLE_SOURCE, TuneRecord
+from .lease import FleetDir, FleetJob
+
+
+def default_worker_id() -> str:
+    """Host-unique, restart-unique id: shard files never collide."""
+    return (f"{socket.gethostname()}-{os.getpid()}-{uuid.uuid4().hex[:6]}"
+            .replace("/", "-"))
+
+
+def _default_tuner_factory(space_name: str):
+    """Self-sufficient worker: train a modest sim-backed tuner on demand."""
+    from repro.core.backend import SimulatedTPUBackend
+    from repro.core.space import SPACES
+    from repro.core.tuner import InputAwareTuner
+    return InputAwareTuner.train(
+        SPACES[space_name], n_samples=4000, hidden=(32, 64, 32), epochs=12,
+        backend=SimulatedTPUBackend(noise=0.02), seed=0)
+
+
+@dataclasses.dataclass
+class WorkerReport:
+    worker_id: str
+    claimed: int = 0
+    tuned: int = 0
+    failed: int = 0
+    lost: int = 0                       # leases reclaimed out from under us
+    wall_s: float = 0.0
+    errors: List[str] = dataclasses.field(default_factory=list)
+
+
+class Worker:
+    """One fleet worker: claim -> tune -> shard-append -> done marker."""
+
+    def __init__(self, fleet_dir: os.PathLike, *,
+                 worker_id: Optional[str] = None,
+                 tuners: Optional[Mapping[str, object]] = None,
+                 tuner_factory: Optional[Callable[[str], object]] = None,
+                 heartbeat_s: float = 2.0, poll_s: float = 0.2,
+                 remeasure: bool = True, collect_samples: bool = True,
+                 verbose: bool = False):
+        self.fleet = FleetDir(fleet_dir)
+        self.worker_id = worker_id or default_worker_id()
+        self.heartbeat_s = heartbeat_s
+        self.poll_s = poll_s
+        self.remeasure = remeasure
+        self.collect_samples = collect_samples
+        self.verbose = verbose
+        self._tuners: Dict[str, object] = dict(tuners or {})
+        self._tuner_factory = tuner_factory or _default_tuner_factory
+        # attachment is lazy: a worker may come up BEFORE any coordinator
+        # has initialized the bus (the "start workers any time" story) —
+        # it idles until the manifest appears instead of crashing
+        self._manifest: Optional[Dict] = None
+        self.shard: Optional[RecordStore] = None
+        self.report = WorkerReport(worker_id=self.worker_id)
+
+    def _ensure_attached(self) -> bool:
+        """Bind to the bus once its manifest exists; False while it's not
+        a fleet directory yet."""
+        if self.shard is not None:
+            return True
+        try:
+            self._manifest = self.fleet.manifest()
+        except FileNotFoundError:
+            return False
+        # no per-record fsync: the append reaches the kernel before the done
+        # marker is written, so a crashed WORKER loses nothing, and a
+        # crashed HOST is the lease-expiry/requeue case the protocol
+        # recovers (the lease bus itself is atomic, not power-loss-durable;
+        # the authoritative parent store re-fsyncs at merge time).
+        self.shard = RecordStore(self.fleet.shard_path(self.worker_id),
+                                 fsync=False)
+        return True
+
+    def _tuner_for(self, space: str):
+        tuner = self._tuners.get(space)
+        if tuner is None:
+            tuner = self._tuners[space] = self._tuner_factory(space)
+        return tuner
+
+    # -- one job ---------------------------------------------------------------
+    def _tune_job(self, job: FleetJob, lease_path) -> TuneRecord:
+        """Run the tuner under a live heartbeat; commit to the shard."""
+        stop = threading.Event()
+
+        def beat():
+            while not stop.wait(self.heartbeat_s):
+                if not self.fleet.heartbeat(lease_path):
+                    return               # lease reclaimed: stop beating
+        t = threading.Thread(target=beat, daemon=True)
+        t.start()
+        try:
+            tuner = self._tuner_for(job.space)
+            result = tuner.search(job.inputs, remeasure=self.remeasure)
+        finally:
+            stop.set()
+            t.join()
+        rec = record_from_search(job.space, job.inputs, result,
+                                 tuner.backend, source=job.source)
+        self.shard.add(rec)
+        if self.collect_samples and result.measured:
+            for cfg, tflops in result.measured:
+                if cfg == result.best:
+                    continue
+                self.shard.add(TuneRecord(
+                    space=job.space, inputs=dict(job.inputs),
+                    config=dict(cfg), tflops=float(tflops),
+                    backend=rec.backend, source=SAMPLE_SOURCE))
+        return rec
+
+    def run_one(self) -> Optional[bool]:
+        """Claim and run one job.  None: nothing to claim.  True: tuned and
+        marked done.  False: the job errored (requeued/buried) or the lease
+        was lost to an expiry reclaim (the shard records still count)."""
+        if not self._ensure_attached():
+            return None                  # no bus yet: idle like empty queue
+        claimed = self.fleet.claim()
+        if claimed is None:
+            return None
+        job, lease_path = claimed
+        self.report.claimed += 1
+        t0 = time.time()
+        try:
+            rec = self._tune_job(job, lease_path)
+        except Exception as e:   # noqa: BLE001 — job isolation is the point
+            err = f"{type(e).__name__}: {e}"
+            outcome = self.fleet.fail(
+                job, lease_path, err,
+                max_attempts=int(self._manifest.get("max_attempts", 3)))
+            self.report.failed += 1
+            self.report.errors.append(f"{job.job_id}: {err} ({outcome})")
+            return False
+        ok = self.fleet.complete(job, lease_path, {
+            "worker_id": self.worker_id, "tflops": rec.tflops,
+            "backend": rec.backend, "wall_s": round(time.time() - t0, 4)})
+        if ok:
+            self.report.tuned += 1
+            if self.verbose:
+                print(f"[fleet:{self.worker_id}] {job.space} {job.inputs} "
+                      f"-> {rec.tflops:.1f} TFLOPS")
+        else:
+            self.report.lost += 1
+        return ok
+
+    # -- the loop --------------------------------------------------------------
+    def run(self, *, max_jobs: Optional[int] = None,
+            idle_timeout_s: Optional[float] = None) -> WorkerReport:
+        """Work until drained (DRAIN marker + empty queue), ``max_jobs``
+        jobs are done, or the queue stays empty for ``idle_timeout_s``."""
+        t0 = time.time()
+        idle_since: Optional[float] = None
+        while True:
+            if max_jobs is not None and self.report.claimed >= max_jobs:
+                break
+            out = self.run_one()
+            if out is not None:
+                idle_since = None
+                continue
+            # empty queue: drained fleets exit, others idle-poll
+            if self.fleet.draining():
+                break
+            now = time.time()
+            if idle_since is None:
+                idle_since = now
+            if (idle_timeout_s is not None
+                    and now - idle_since >= idle_timeout_s):
+                break
+            time.sleep(self.poll_s)
+        self.report.wall_s = time.time() - t0
+        return self.report

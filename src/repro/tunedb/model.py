@@ -308,14 +308,31 @@ class ModelSet:
     winner — the paper's recipe for washing model noise out of the argmax.
     The cost is a handful of measurements ONCE per novel shape (memoized);
     without a measurer the pure model argmax is served.
+
+    Confidence gating (both off unless enabled — serving policy, carried
+    across retrain hot-swaps like the measurer): a resolution is *declined*
+    — dispatch falls through to the nearest-record tier — when
+
+      * ``margin_threshold`` > 0 and the predicted top-1 beats top-2 by
+        less than that relative margin: an argmax the model cannot separate
+        from its runner-up is noise, not a decision; or
+      * ``max_feature_z`` > 0 and any *input* feature lies further than
+        that many training standard deviations from the featurizer's
+        stats: the shape is off the training manifold, where a regressor
+        is confidently wrong — a good nearby record must win instead.
     """
 
-    def __init__(self, *, measurer=None, remeasure_top_k: int = 12) -> None:
+    def __init__(self, *, measurer=None, remeasure_top_k: int = 12,
+                 margin_threshold: float = 0.0,
+                 max_feature_z: float = 0.0) -> None:
         self.models: Dict[Tuple[str, str], PerfModel] = {}
         self.measurer = measurer
         self.remeasure_top_k = remeasure_top_k
+        self.margin_threshold = margin_threshold
+        self.max_feature_z = max_feature_z
         self.hits = 0                    # resolutions served (memo or fresh)
         self.misses = 0                  # no model / no legal config
+        self.gated = 0                   # resolutions declined by confidence
         self.skipped: List[str] = []     # artifacts refused at load time
         self._memo: Dict[tuple, Optional[Tuple[Dict[str, int], float]]] = {}
 
@@ -331,10 +348,13 @@ class ModelSet:
         """A fresh ModelSet carrying this set's models overridden by
         ``newer``'s — the retrain hot-swap: untouched (space, backend)
         regressors keep serving, retrained ones replace their ancestors.
-        The SERVING configuration (measurer, re-measure width) stays this
-        set's — a freshly trained set carries defaults, not policy."""
+        The SERVING configuration (measurer, re-measure width, confidence
+        gates) stays this set's — a freshly trained set carries defaults,
+        not policy."""
         out = ModelSet(measurer=self.measurer or newer.measurer,
-                       remeasure_top_k=self.remeasure_top_k)
+                       remeasure_top_k=self.remeasure_top_k,
+                       margin_threshold=self.margin_threshold,
+                       max_feature_z=self.max_feature_z)
         out.models.update(self.models)
         out.models.update(newer.models)
         return out
@@ -356,6 +376,23 @@ class ModelSet:
                 best = pm
         return best
 
+    def _off_manifold(self, pm: PerfModel, inputs: Mapping[str, int]) -> bool:
+        """Is this shape outside the regressor's training input range?
+
+        Z-scores the INPUT slice of the feature vector against the
+        persisted featurizer stats (tuning-parameter dims do not apply: the
+        §6 scan sweeps them, only the inputs are fixed by traffic).
+        """
+        f = pm.featurizer
+        if self.max_feature_z <= 0 or f.mean is None:
+            return False
+        names = list(f.space.input_params)
+        vals = np.asarray([float(inputs[k]) for k in names], np.float64)
+        raw = np.log2(vals + 1.0) if f.log else vals
+        n = len(names)                   # input dims lead the feature vector
+        z = np.abs((raw - f.mean[:n]) / f.std[:n])
+        return bool(z.max() > self.max_feature_z)
+
     def predict(self, space: str, inputs: Mapping[str, int], *,
                 backend: Optional[str] = None
                 ) -> Optional[Tuple[Dict[str, int], float]]:
@@ -363,7 +400,10 @@ class ModelSet:
 
         The first resolution of a shape pays the §6 exhaustive scan (legal
         enumeration + one batched forward pass); every later call is a memo
-        hit, which is what keeps the serving dispatch path flat.
+        hit, which is what keeps the serving dispatch path flat.  Returns
+        ``None`` — dispatch falls to the nearest-record tier — when no
+        model covers the (space, backend), the shape has no legal config,
+        or a confidence gate (margin / off-manifold) declines to answer.
         """
         inputs = normalize_inputs(inputs)
         memo_key = (space, backend, tuple(sorted(inputs.items())))
@@ -376,18 +416,32 @@ class ModelSet:
             return out
         pm = self.resolve_model(space, backend)
         out: Optional[Tuple[Dict[str, int], float]] = None
+        gated = False
         if pm is not None:
             try:
-                k = self.remeasure_top_k if self.measurer is not None else 1
-                res = pm.predict_config(inputs, top_k=k)
-                if self.measurer is not None and len(res.top_k) > 1:
-                    measured = [(cfg, float(self.measurer(space, cfg, inputs)))
-                                for cfg, _ in res.top_k]
-                    cfg, tflops = max(measured, key=lambda t: t[1])
-                    out = (normalize_config(cfg), tflops)
+                if self._off_manifold(pm, inputs):
+                    gated = True
                 else:
-                    out = (normalize_config(res.best),
-                           float(res.predicted_tflops))
+                    k = (self.remeasure_top_k if self.measurer is not None
+                         else 1)
+                    if self.margin_threshold > 0:
+                        k = max(k, 2)    # the gate needs the runner-up
+                    res = pm.predict_config(inputs, top_k=k)
+                    if self.margin_threshold > 0 and len(res.top_k) > 1:
+                        p1, p2 = res.top_k[0][1], res.top_k[1][1]
+                        if p1 <= 0 or (p1 - p2) / p1 < self.margin_threshold:
+                            gated = True
+                    if gated:
+                        pass
+                    elif self.measurer is not None and len(res.top_k) > 1:
+                        measured = [(cfg,
+                                     float(self.measurer(space, cfg, inputs)))
+                                    for cfg, _ in res.top_k]
+                        cfg, tflops = max(measured, key=lambda t: t[1])
+                        out = (normalize_config(cfg), tflops)
+                    else:
+                        out = (normalize_config(res.best),
+                               float(res.predicted_tflops))
             except ValueError:           # no legal configuration for inputs
                 out = None
             except Exception as e:   # noqa: BLE001 — a loaded artifact whose
@@ -401,6 +455,8 @@ class ModelSet:
         if len(self._memo) > 4096:
             self._memo.clear()
         self._memo[memo_key] = out
+        if gated:
+            self.gated += 1
         if out is None:
             self.misses += 1
         else:
@@ -441,7 +497,10 @@ class ModelSet:
             "models": {
                 f"{sp}/{fp}": {k: v for k, v in pm.meta.items()}
                 for (sp, fp), pm in sorted(self.models.items())},
-            "lookups": {"hits": self.hits, "misses": self.misses},
+            "lookups": {"hits": self.hits, "misses": self.misses,
+                        "gated": self.gated},
+            "gating": {"margin_threshold": self.margin_threshold,
+                       "max_feature_z": self.max_feature_z},
             "skipped_artifacts": list(self.skipped),
         }
 

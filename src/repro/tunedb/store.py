@@ -80,8 +80,12 @@ class TuneRecord:
     tflops: float                       # measured (or model-predicted) perf
     latency_us: Optional[float] = None
     backend: str = "unknown"            # backend fingerprint, e.g. sim-tpu-v5e
-    source: str = "tuner"               # tuner | session | merge | import
+    source: str = "tuner"               # tuner | session | retune | fleet | import
     created_at: float = 0.0             # unix seconds; 0 -> stamped on add
+    # merge lineage: where a merged-in record came from (the source store's
+    # path, or a fleet worker's shard id).  Orthogonal to ``source``, which
+    # keeps saying WHY the record was measured — harvest/audits key on it.
+    merged_from: Optional[str] = None
     schema_version: int = SCHEMA_VERSION
 
     @property
@@ -89,7 +93,10 @@ class TuneRecord:
         return input_key(self.space, self.inputs)
 
     def to_json(self) -> str:
-        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+        d = dataclasses.asdict(self)
+        if d["merged_from"] is None:        # keep un-merged lines lean
+            del d["merged_from"]
+        return json.dumps(d, sort_keys=True)
 
     @classmethod
     def from_json(cls, line: str) -> "TuneRecord":
@@ -130,10 +137,16 @@ class RecordStore:
     """Append-only JSONL store of :class:`TuneRecord`, indexed in memory.
 
     ``path=None`` gives a purely in-memory store (tests, ephemeral tuning).
+    ``fsync=False`` trades the per-append durability barrier for throughput;
+    callers owning a recovery story (fleet shards, whose jobs are re-queued
+    on lease expiry) batch with an explicit :meth:`sync` at their commit
+    point instead.
     """
 
-    def __init__(self, path: Optional[os.PathLike] = None):
+    def __init__(self, path: Optional[os.PathLike] = None, *,
+                 fsync: bool = True):
         self.path = pathlib.Path(path) if path is not None else None
+        self.fsync = fsync
         self._lock = threading.Lock()
         # (backend, key) -> latest record: the fingerprint-keyed serving index
         self._index: Dict[Tuple[str, str], TuneRecord] = {}
@@ -215,10 +228,22 @@ class RecordStore:
                         self._needs_newline = False
                     fh.write(rec.to_json() + "\n")
                     fh.flush()
-                    os.fsync(fh.fileno())
+                    if self.fsync:
+                        os.fsync(fh.fileno())
                 self.n_lines += 1
             self._admit(rec)
         return rec
+
+    def sync(self) -> None:
+        """Durability barrier for ``fsync=False`` stores: flush appended
+        records to disk now.  The fleet coordinator calls this once per
+        merge pass (one barrier per batch of merged records, not one fsync
+        per record); fleet worker shards skip it entirely — their recovery
+        story is lease expiry + requeue, not power-loss durability."""
+        if self.path is None or not self.path.exists():
+            return
+        with self.path.open("rb") as fh:
+            os.fsync(fh.fileno())
 
     # -- lookup --------------------------------------------------------------
     def _exact(self, space: str, inputs: Mapping[str, int],
@@ -251,7 +276,8 @@ class RecordStore:
 
     def nearest(self, space: str, inputs: Mapping[str, int], *,
                 backend: Optional[str] = None,
-                max_distance: float = 2.0
+                max_distance: float = 2.0,
+                count: bool = True
                 ) -> Optional[TuneRecord]:
         """Exact record if present, else the closest tuned shape.
 
@@ -265,11 +291,14 @@ class RecordStore:
         ``nearest_hits``; a full miss is NOT counted here — the exact-tier
         ``get()`` that precedes this call in dispatch already attributed it,
         and double-counting made the miss column overstate store gaps.
+        ``count=False`` skips the statistics entirely: planning-time probes
+        (the controller's projected-gain gate) are not serving events.
         """
         inputs = normalize_inputs(inputs)
         exact = self._exact(space, inputs, backend)
         if exact is not None:
-            self.hits += 1
+            if count:
+                self.hits += 1
             return exact
         memo_key = (space, backend, tuple(sorted(inputs.items())),
                     max_distance)
@@ -291,7 +320,7 @@ class RecordStore:
             if len(self._nearest_memo) > 4096:
                 self._nearest_memo.clear()
             self._nearest_memo[memo_key] = best
-        if best is not None:
+        if best is not None and count:
             self.nearest_hits += 1
         return best
 
@@ -350,17 +379,25 @@ class RecordStore:
         return key in self._latest
 
     # -- merge / export ------------------------------------------------------
-    def merge(self, other: "RecordStore") -> int:
+    def merge(self, other: "RecordStore", *,
+              lineage: Optional[str] = None) -> int:
         """Append every latest record of `other` not already newer here.
 
         Merging moves the serving index (latest per (backend, shape)) only;
         training-sample records stay with the store that measured them.
+        Provenance is preserved: the original ``source`` tag survives (it
+        says why the record was measured — ``retune``/``session`` audits and
+        the model harvest key on it); the merge itself is recorded separately
+        in ``merged_from`` (``lineage``, defaulting to the other store's
+        path — a fleet shard merge passes the worker id instead).
         """
+        if lineage is None:
+            lineage = str(other.path) if other.path is not None else "memory"
         n = 0
         for rec in other.records():
             cur = self._index.get((rec.backend, rec.key))
             if cur is None or rec.created_at > cur.created_at:
-                self.add(dataclasses.replace(rec, source="merge"))
+                self.add(dataclasses.replace(rec, merged_from=lineage))
                 n += 1
         return n
 
