@@ -1,0 +1,257 @@
+"""E14 — frozen dispatch plans: zero-overhead serving resolution.
+
+The PR-5 tentpole claim, gated three ways:
+
+  1. RESOLUTION — with the frozen DispatchPlan installed, steady-state
+     ``_tuned_cfg`` over a realistic hot set (a mix of exact-record hits
+     and nearest-served novel shapes) must cost <= 20% of the PR-4 path
+     (the same serving state installed with ``build_plan=False``: sha1
+     input keys, per-tier probes, memoized neighbor scans).
+
+  2. NEAREST — the log2-bucketed ``nearest()`` index on a 10k-record
+     store must answer un-memoized queries >= 5x faster than the linear
+     reference scan (``_nearest_linear``), and answer them identically
+     (same distance, or both None).
+
+  3. ADMISSION — store-aware admission (pad a work shape up to a tuned
+     record when the recorded-TFLOPS arithmetic says the overhead beats
+     the untuned config) must lift geomean dispatched TFLOPS on a
+     mixed-shape synthetic batch vs shape-agnostic batching, with no
+     single shape served worse.  Realized throughput is scored by the
+     noise-free simulator: padded items deliver the tuned config's
+     throughput at the padded shape scaled by the useful-work fraction.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.backend import SimulatedTPUBackend
+from repro.core.search import enumerate_legal
+from repro.core.space import GEMM_SPACE, gemm_input
+from repro.core.tuner import clear_tuners
+from repro.kernels import dispatch
+from repro.serve.engine import StoreAwareAdmission
+from repro.tunedb import (RecordStore, TuneRecord, clear_store,
+                          clear_telemetry, get_telemetry, install_serving,
+                          serving_state)
+from repro.tunedb.model import clear_models
+
+from .common import save, table
+
+RESOLUTION_THRESHOLD = 0.20     # plan path as a fraction of the PR-4 path
+NEAREST_THRESHOLD = 5.0         # indexed speedup over the linear scan
+ADMISSION_THRESHOLD = 1.0       # geomean TFLOPS lift must exceed this
+
+CFG = {"bm": 64, "bn": 128, "bk": 128, "k_unroll": 1, "k_split": 1,
+       "order": 0, "acc32": 1, "prefetch": 2}
+
+# the admission study's tuned "bucket grid" and its mixed-shape traffic:
+# some shapes sit just above a bucket (badly quantized by their neighbor's
+# block, cheap to pad), others are large/memory-bound (padding must be
+# declined — the floor arithmetic has to keep them exact)
+ADMISSION_BUCKETS = [256, 512, 1024, 2048, 4096]
+ADMISSION_BATCH = [270, 330, 530, 550, 700, 1050, 1100, 1500,
+                   2100, 2200, 3000, 4200]
+
+
+def _geomean(xs) -> float:
+    return float(np.exp(np.mean(np.log(np.maximum(xs, 1e-9)))))
+
+
+def _time_per_call(fn, iters: int) -> float:
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+# ---------------------------------------------------------------------------
+# 1. steady-state resolution: frozen plan vs the PR-4 slow path
+# ---------------------------------------------------------------------------
+
+def _bench_resolution(fast: bool) -> dict:
+    store = RecordStore()
+    tuned = [gemm_input(256 * (i + 1), 64, 1024) for i in range(8)]
+    for inputs in tuned:
+        store.add(TuneRecord(space="gemm", inputs=inputs, config=CFG,
+                             tflops=100.0, backend="sim"))
+    # the serving reality: half the hot set is tuned, half rides neighbors
+    novel = [gemm_input(256 * (i + 1) + 48, 64, 1024) for i in range(8)]
+    hot = tuned + novel
+    tel = get_telemetry()
+    for inputs in hot:
+        tel.record("gemm", inputs, n=10)
+
+    iters = 4000 if fast else 20000
+
+    def resolve_hot_set():
+        for inputs in hot:
+            dispatch._tuned_cfg("gemm", inputs)
+
+    install_serving(store=store)                 # plan compiled at install
+    plan = serving_state().plan
+    t_plan = _time_per_call(resolve_hot_set, iters) / len(hot)
+    install_serving(store=store, build_plan=False)   # the PR-4 path
+    t_legacy = _time_per_call(resolve_hot_set, iters) / len(hot)
+    ratio = t_plan / t_legacy
+
+    rows = [
+        {"path": "frozen plan (tier-0 probe)", "us/call": f"{t_plan*1e6:.2f}"},
+        {"path": "PR-4 tiers (sha1 key + memos)",
+         "us/call": f"{t_legacy*1e6:.2f}"},
+    ]
+    print(table(rows, ["path", "us/call"],
+                "E14 — steady-state hot-set resolution"))
+    print(f"\nplan resolution is {ratio:.1%} of the PR-4 path "
+          f"(gate <= {RESOLUTION_THRESHOLD:.0%}); plan covered "
+          f"{len(plan)} shapes at install")
+    return {"plan_us": t_plan * 1e6, "legacy_us": t_legacy * 1e6,
+            "ratio": ratio, "hot_shapes": len(hot),
+            "plan_entries": len(plan), "threshold": RESOLUTION_THRESHOLD,
+            "pass": ratio <= RESOLUTION_THRESHOLD}
+
+
+# ---------------------------------------------------------------------------
+# 2. nearest(): log2-bucketed index vs the linear reference scan
+# ---------------------------------------------------------------------------
+
+def _bench_nearest(fast: bool) -> dict:
+    from repro.tunedb.store import _shape_distance
+
+    rng = np.random.default_rng(0)
+    n_records = 10_000
+    store = RecordStore()
+    for _ in range(n_records):
+        m, n, k = (int(2 ** rng.uniform(4, 14)) for _ in range(3))
+        store.add(TuneRecord(space="gemm", inputs=gemm_input(m, n, k),
+                             config=CFG, tflops=50.0, backend="sim"))
+    queries = [gemm_input(*(int(2 ** rng.uniform(4, 14)) for _ in range(3)))
+               for _ in range(40 if fast else 200)]
+
+    # equivalence first: the index must answer what the scan answers
+    mismatches = 0
+    for q in queries:
+        got = store._nearest_indexed("gemm", q, None, 2.0)
+        want = store._nearest_linear("gemm", q, None, 2.0)
+        if (got is None) != (want is None):
+            mismatches += 1
+        elif got is not None:
+            d_got = _shape_distance(q, got.inputs)
+            d_want = _shape_distance(q, want.inputs)
+            if abs(d_got - d_want) > 1e-9:
+                mismatches += 1
+
+    t0 = time.perf_counter()
+    for q in queries:
+        store._nearest_indexed("gemm", q, None, 2.0)
+    t_indexed = (time.perf_counter() - t0) / len(queries)
+    t0 = time.perf_counter()
+    for q in queries:
+        store._nearest_linear("gemm", q, None, 2.0)
+    t_linear = (time.perf_counter() - t0) / len(queries)
+    speedup = t_linear / t_indexed
+
+    rows = [
+        {"lookup": "log2-bucketed index", "us/query": f"{t_indexed*1e6:.0f}"},
+        {"lookup": "linear scan (pre-PR-5)", "us/query": f"{t_linear*1e6:.0f}"},
+    ]
+    print()
+    print(table(rows, ["lookup", "us/query"],
+                f"E14 — nearest() on a {n_records}-record store"))
+    print(f"\nindexed nearest is {speedup:.1f}x the linear scan "
+          f"(gate >= {NEAREST_THRESHOLD:.0f}x), {mismatches} mismatches "
+          f"over {len(queries)} queries")
+    return {"records": n_records, "queries": len(queries),
+            "indexed_us": t_indexed * 1e6, "linear_us": t_linear * 1e6,
+            "speedup": speedup, "mismatches": mismatches,
+            "threshold": NEAREST_THRESHOLD,
+            "pass": speedup >= NEAREST_THRESHOLD and mismatches == 0}
+
+
+# ---------------------------------------------------------------------------
+# 3. store-aware admission: geomean dispatched TFLOPS on a mixed batch
+# ---------------------------------------------------------------------------
+
+def _bench_admission(fast: bool) -> dict:
+    oracle = SimulatedTPUBackend(noise=0.0)
+    store = RecordStore()
+    for m in ADMISSION_BUCKETS:
+        inputs = gemm_input(m, 64, 1024)
+        cfg, tflops = max(
+            ((c, oracle.measure("gemm", c, inputs))
+             for c in enumerate_legal(GEMM_SPACE, inputs)),
+            key=lambda t: t[1])
+        store.add(TuneRecord(space="gemm", inputs=inputs, config=dict(cfg),
+                             tflops=tflops, backend="sim"))
+    install_serving(store=store)
+    admission = StoreAwareAdmission()
+
+    rows, agnostic, aware = [], [], []
+    for m in ADMISSION_BATCH:
+        inputs = gemm_input(m, 64, 1024)
+        cfg = dispatch._tuned_cfg("gemm", inputs)
+        baseline = oracle.measure("gemm", cfg, inputs)
+        shape, how = admission.bucket("gemm", inputs)
+        if how == "padded":
+            padded_cfg = dispatch._tuned_cfg("gemm", shape)
+            realized = (oracle.measure("gemm", padded_cfg, shape)
+                        * (m / shape["M"]))
+        else:
+            realized = baseline
+        agnostic.append(baseline)
+        aware.append(realized)
+        rows.append({"M": m, "decision": how,
+                     "agnostic": f"{baseline:.1f}",
+                     "store-aware": f"{realized:.1f}"})
+
+    g_agn, g_aware = _geomean(agnostic), _geomean(aware)
+    lift = g_aware / g_agn
+    regressions = sum(1 for a, s in zip(agnostic, aware) if s < a - 1e-9)
+    print()
+    print(table(rows, ["M", "decision", "agnostic", "store-aware"],
+                "E14 — dispatched TFLOPS, mixed-shape batch (N=64, K=1024)"))
+    print(f"\ngeomean {g_agn:.1f} -> {g_aware:.1f} TFLOPS "
+          f"(lift {lift:.3f}, gate > {ADMISSION_THRESHOLD:.1f}); "
+          f"{admission.padded} padded / {admission.exact} exact, "
+          f"{regressions} regressed shape(s)")
+    return {"geomean_agnostic": g_agn, "geomean_aware": g_aware,
+            "lift": lift, "padded": admission.padded,
+            "exact": admission.exact, "regressions": regressions,
+            "threshold": ADMISSION_THRESHOLD,
+            "pass": lift > ADMISSION_THRESHOLD and regressions == 0}
+
+
+def run(fast: bool = True) -> dict:
+    clear_tuners()
+    clear_store()
+    clear_models()
+    clear_telemetry()
+
+    resolution = _bench_resolution(fast)
+    clear_store()
+    clear_telemetry()
+    nearest = _bench_nearest(fast)
+    admission = _bench_admission(fast)
+
+    ok = resolution["pass"] and nearest["pass"] and admission["pass"]
+    print(f"\nacceptance: resolution "
+          f"{'PASS' if resolution['pass'] else 'FAIL'} "
+          f"({resolution['ratio']:.1%} <= {RESOLUTION_THRESHOLD:.0%}), "
+          f"nearest {'PASS' if nearest['pass'] else 'FAIL'} "
+          f"({nearest['speedup']:.1f}x >= {NEAREST_THRESHOLD:.0f}x), "
+          f"admission {'PASS' if admission['pass'] else 'FAIL'} "
+          f"(lift {admission['lift']:.3f} > {ADMISSION_THRESHOLD:.1f})")
+    payload = {"resolution": resolution, "nearest": nearest,
+               "admission": admission, "pass": ok}
+    save("dispatch", payload)
+    clear_store()
+    clear_telemetry()
+    return payload
+
+
+if __name__ == "__main__":
+    run()

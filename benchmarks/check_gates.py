@@ -101,6 +101,38 @@ GATES: List[Gate] = [
             f"{_get(r, 'speedup', 'threshold', default=3.0):.0f}x)"),
     ),
     Gate(
+        file="dispatch",
+        name="frozen-plan resolution <= 20% of the PR-4 _tuned_cfg path",
+        check=lambda r: _get(r, "resolution", "pass") is True,
+        detail=lambda r: (
+            f"{_get(r, 'resolution', 'ratio', default=1):.1%} of the PR-4 "
+            f"path ({_get(r, 'resolution', 'plan_us', default=0):.2f} vs "
+            f"{_get(r, 'resolution', 'legacy_us', default=0):.2f} us/call, "
+            f"threshold {_get(r, 'resolution', 'threshold', default=0.2):.0%})"
+        ),
+    ),
+    Gate(
+        file="dispatch",
+        name="indexed nearest() >= 5x the linear scan on a 10k-record store",
+        check=lambda r: _get(r, "nearest", "pass") is True,
+        detail=lambda r: (
+            f"{_get(r, 'nearest', 'speedup', default=0):.1f}x "
+            f"({_get(r, 'nearest', 'indexed_us', default=0):.0f} vs "
+            f"{_get(r, 'nearest', 'linear_us', default=0):.0f} us/query, "
+            f"{_get(r, 'nearest', 'mismatches', default='?')} mismatches)"),
+    ),
+    Gate(
+        file="dispatch",
+        name="store-aware admission lifts geomean dispatched TFLOPS",
+        check=lambda r: _get(r, "admission", "pass") is True,
+        detail=lambda r: (
+            f"lift {_get(r, 'admission', 'lift', default=0):.3f} "
+            f"({_get(r, 'admission', 'geomean_agnostic', default=0):.1f} -> "
+            f"{_get(r, 'admission', 'geomean_aware', default=0):.1f} TFLOPS, "
+            f"{_get(r, 'admission', 'padded', default=0)} padded, "
+            f"{_get(r, 'admission', 'regressions', default='?')} regressed)"),
+    ),
+    Gate(
         file="fleet",
         name="fleet-merged store record-equivalent to a serial session",
         check=lambda r: _get(r, "equivalence", "pass") is True,

@@ -10,6 +10,8 @@ One benchmark per paper table/figure (DESIGN.md §8 experiment index):
   E11 model    — model-guided dispatch: quality vs oracle + overhead
   E12 retune   — continuous retuning: traffic shift -> session -> hot-swap
   E13 fleet    — distributed tuning: 4-worker throughput + merge equivalence
+  E14 dispatch — frozen dispatch plans: plan vs PR-4 resolution, indexed
+                 nearest lookup, store-aware admission TFLOPS lift
 
 Gate validation: ``python -m benchmarks.check_gates`` after a run.
 """
@@ -29,9 +31,10 @@ def main() -> None:
     args = p.parse_args()
     fast = not args.full
 
-    from . import (bench_conv, bench_fleet, bench_gemm, bench_kernels,
-                   bench_mlp, bench_model, bench_retune, bench_roofline,
-                   bench_sampler, bench_selection, bench_tunedb)
+    from . import (bench_conv, bench_dispatch, bench_fleet, bench_gemm,
+                   bench_kernels, bench_mlp, bench_model, bench_retune,
+                   bench_roofline, bench_sampler, bench_selection,
+                   bench_tunedb)
     suites = {
         "sampler": lambda: bench_sampler.run(fast),
         "mlp": lambda: bench_mlp.run(fast),
@@ -45,6 +48,7 @@ def main() -> None:
         "model": lambda: bench_model.run(fast),
         "retune": lambda: bench_retune.run(fast),
         "fleet": lambda: bench_fleet.run(fast),
+        "dispatch": lambda: bench_dispatch.run(fast),
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     t_all = time.time()

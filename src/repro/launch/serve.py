@@ -25,6 +25,10 @@ def main() -> None:
                    help="warm-start kernel dispatch from this record store")
     p.add_argument("--tunedb-backend", default=None,
                    help="pin dispatch to one backend fingerprint")
+    p.add_argument("--admission", choices=["fifo", "store"], default="fifo",
+                   help="batch admission policy: 'store' prefers pending "
+                        "requests whose prefill shapes hit the frozen "
+                        "dispatch plan and groups equal prompt lengths")
     p.add_argument("--retune", action="store_true",
                    help="enable in-process continuous retuning "
                         "(drift-triggered sessions + model hot-swap)")
@@ -61,7 +65,8 @@ def main() -> None:
     eng = Engine(cfg, params, ServeConfig(
         max_len=args.max_len, slots=args.slots,
         temperature=args.temperature, tunedb=args.tunedb,
-        tunedb_backend=args.tunedb_backend, retune=args.retune,
+        tunedb_backend=args.tunedb_backend, admission=args.admission,
+        retune=args.retune,
         retune_interval=args.retune_interval,
         retune_async=args.retune_async,
         retune_fleet=args.retune_fleet,

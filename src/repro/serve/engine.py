@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -72,6 +72,165 @@ class ServeConfig:
     # append per-decode-tick wall seconds to Engine.tick_times (benchmarks
     # and the fleet acceptance test; off in production serving)
     record_tick_times: bool = False
+    # -- admission policy -----------------------------------------------------
+    # "fifo": admit pending requests in arrival order (the PR 1-4 behavior).
+    # "store": store-aware admission — prefer requests whose prompt-length
+    # prefill kernel shapes hit the frozen dispatch plan / tuned records,
+    # and group equal lengths so compiled programs and plan entries are
+    # reused back-to-back (every queued request is still served; only the
+    # admission ORDER changes, never correctness)
+    admission: str = "fifo"
+
+
+def _align(x: int, tile: int) -> float:
+    """Useful-work fraction of a block-quantized dim (ceil-padding waste)."""
+    if tile <= 0:
+        return 1.0
+    padded = -(-x // tile) * tile
+    return x / padded
+
+
+# which input dim a config key block-tiles, per space: the analytic
+# alignment penalty a neighbor's config pays at a misaligned shape
+_BLOCK_KEYS: Dict[str, Dict[str, str]] = {
+    "gemm": {"M": "bm", "N": "bn", "K": "bk"},
+    "attention": {"Lq": "b_q", "Lkv": "b_kv"},
+}
+
+
+class StoreAwareAdmission:
+    """Store-aware batch admission: prefer shapes the dispatch plan serves.
+
+    Two decisions, both made from RECORDED numbers only (no measurement on
+    the admission path):
+
+    * :meth:`bucket` — for one dispatchable work shape, whether to pad its
+      ``pad_dims`` up to a tuned record's shape.  Padding a GEMM's M (zero
+      rows in, garbage rows sliced off) is mathematically exact, so the
+      only question is throughput: the padded run delivers the record's
+      measured TFLOPS scaled by the useful-work fraction, while the exact
+      shape would be served by its nearest neighbor's config paying an
+      analytic block-quantization penalty (``ceil(dim/block)`` waste — the
+      same ``_align_eff`` structure the simulator charges).  Pad exactly
+      when the recorded-TFLOPS arithmetic says the overhead beats the
+      untuned config, never past ``max_pad`` relative extra work.
+
+    * :meth:`pick` — which pending request the engine admits into a free
+      slot next: prompt lengths whose captured prefill kernel shapes hit
+      the frozen plan score highest, equal lengths group back-to-back
+      (compiled-program and plan-entry reuse), unknown lengths sit in the
+      middle (they must compile either way).  FIFO order breaks ties, and
+      every request is still served — only the order changes.
+    """
+
+    def __init__(self, *, pad_dims=("M",), max_pad: float = 1.0):
+        self.pad_dims = tuple(pad_dims)
+        self.max_pad = max_pad
+        self.padded = 0                   # bucket() decisions that padded
+        self.exact = 0
+        self._score_memo: Dict[tuple, float] = {}
+
+    # -- shape bucketing ------------------------------------------------------
+    def bucket(self, space: str, inputs: Mapping[str, int]
+               ) -> Tuple[Dict[str, int], str]:
+        """(dispatch shape, "hit"|"exact"|"padded") for one work item."""
+        from repro.tunedb.store import serving_state
+        state = serving_state()
+        store = state.store
+        if store is None:
+            return dict(inputs), "exact"
+        fp = state.fingerprint
+        if store.contains(space, inputs, backend=fp):
+            return dict(inputs), "hit"    # already tuned: nothing to decide
+        # the untuned floor: what the nearest-neighbor tier would deliver —
+        # its recorded TFLOPS discounted by the EXTRA block-quantization its
+        # config pays at THIS shape relative to its own (the recorded number
+        # already includes the waste at the record's shape, so only the
+        # ratio is new).  The penalty bites fully only when the kernel is
+        # compute-bound; absent boundedness data the exponent 0.5 splits
+        # the compute-bound (1.0) and memory/latency-bound (0.0) regimes —
+        # conservative enough not to pad away well-served shapes,
+        # aggressive enough to rescue badly quantized ones.
+        floor = 0.0
+        near = store.nearest(space, inputs, backend=fp, count=False)
+        if near is not None:
+            floor = near.tflops
+            for dim, block_key in _BLOCK_KEYS.get(space, {}).items():
+                tile = near.config.get(block_key)
+                if tile and dim in inputs:
+                    rel = (_align(int(inputs[dim]), int(tile))
+                           / _align(int(near.inputs[dim]), int(tile)))
+                    floor *= rel ** 0.5
+        best_rec, best_eff = None, floor
+        # candidates come from the store's comparable-shape group (same
+        # dim names + exact-match values), not a full-store scan — the
+        # cost per decision tracks the group size, not the index size
+        for rec in store.neighbors(space, inputs):
+            if fp is not None and rec.backend != fp:
+                continue
+            work, ok = 1.0, True
+            for k, v in inputs.items():
+                rv = rec.inputs[k]
+                if k in self.pad_dims:
+                    if rv < v:
+                        ok = False
+                        break
+                    work *= v / rv
+                elif rv != v:
+                    ok = False
+                    break
+            # work is the useful fraction; 1/work - 1 is the pad overhead
+            if not ok or work * (1.0 + self.max_pad) < 1.0:
+                continue
+            eff = rec.tflops * work       # recorded TFLOPS, usefully spent
+            if eff > best_eff:
+                best_rec, best_eff = rec, eff
+        if best_rec is None:
+            self.exact += 1
+            return dict(inputs), "exact"
+        self.padded += 1
+        return dict(best_rec.inputs), "padded"
+
+    # -- engine admission order -----------------------------------------------
+    def _length_score(self, n: int, prefill_shapes: Mapping[int, list],
+                      state) -> float:
+        shapes = prefill_shapes.get(n)
+        if not shapes:
+            return 0.5                    # unknown length: must compile anyway
+        memo_key = (state.generation, n)
+        score = self._score_memo.get(memo_key)
+        if score is not None:
+            return score
+        from repro.tunedb.store import shape_key
+        hits = 0
+        for space, inputs in shapes:
+            entry = (state.plan.lookup(space, shape_key(inputs))
+                     if state.plan is not None else None)
+            if entry is not None or (
+                    state.store is not None
+                    and state.store.contains(space, inputs,
+                                             backend=state.fingerprint)):
+                hits += 1
+        score = hits / len(shapes)
+        if len(self._score_memo) > 1024:
+            self._score_memo.clear()
+        self._score_memo[memo_key] = score
+        return score
+
+    def pick(self, pending: list, prefill_shapes: Mapping[int, list],
+             last_len: Optional[int] = None) -> int:
+        """Index into ``pending`` of the request to admit next."""
+        from repro.tunedb.store import serving_state
+        state = serving_state()
+        best_i, best_score = 0, -1.0
+        for i, req in enumerate(pending):
+            n = len(req.prompt)
+            score = self._length_score(n, prefill_shapes, state)
+            if last_len is not None and n == last_len:
+                score += 0.25             # program + plan-entry reuse
+            if score > best_score + 1e-9:  # stable: FIFO breaks ties
+                best_i, best_score = i, score
+        return best_i
 
 
 @dataclasses.dataclass
@@ -164,6 +323,11 @@ class Engine:
         # the work" clock: an inline retune session lands in it, scheduler
         # preemption and other threads' work do not.
         self.tick_times: List[tuple] = []
+        # store-aware admission: reorder/group pending requests toward
+        # plan-hit prefill shapes ("fifo" keeps arrival order)
+        self.admission = (StoreAwareAdmission()
+                          if serve_cfg.admission == "store" else None)
+        self._last_admit_len: Optional[int] = None
         self.controller = None
         self._next_retune_tick = 0
         if serve_cfg.retune or serve_cfg.retune_fleet:
@@ -271,7 +435,13 @@ class Engine:
                              if r is None), None)
                 if slot is None:
                     break
-                self._prefill_one(slot, pending.pop(0))
+                nxt = 0
+                if self.admission is not None and len(pending) > 1:
+                    nxt = self.admission.pick(pending, self._prefill_shapes,
+                                              last_len=self._last_admit_len)
+                req = pending.pop(nxt)
+                self._last_admit_len = len(req.prompt)
+                self._prefill_one(slot, req)
                 active += 1
             if active == 0:
                 break
@@ -298,6 +468,9 @@ class Engine:
                     get_telemetry().record_ticks(self._decode_shapes)
             toks = self._sample(np.asarray(logits)[:, : cfg.vocab])
             self.ticks += 1
+            # fold this tick's lock-free telemetry rings into the counters:
+            # one batched drain per tick instead of one lock per kernel call
+            get_telemetry().drain_pending()
             self.maybe_retune()
 
             for s, req in enumerate(self.slot_req):

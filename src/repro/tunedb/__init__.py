@@ -3,12 +3,15 @@
 The persistence backbone of the input-aware runtime:
 
   store.py      versioned append-only JSONL record store (fingerprint-keyed),
-                nearest-shape lookup, and the ATOMIC process-global serving
-                state (store + ModelSet + fingerprint pin swap as one
-                generation: ``install_serving`` / ``serving_state``)
+                log2-bucketed nearest-shape lookup, the ATOMIC process-global
+                serving state (store + ModelSet + fingerprint pin swap as one
+                generation: ``install_serving`` / ``serving_state``), and the
+                frozen ``DispatchPlan`` each install compiles so steady-state
+                dispatch is one lock-free probe
   telemetry.py  (space, input-shape) frequency counters fed by kernel
-                dispatch, engine tick counters for true frequencies under
-                jit, and epoch snapshots (``snapshot``/``diff``) for drift
+                dispatch through per-thread lock-free rings (drained once
+                per decode tick), engine tick counters for true frequencies
+                under jit, and epoch snapshots (``snapshot``/``diff``)
   model.py      performance regressors trained FROM the store, served per
                 (space, backend fingerprint) at dispatch (paper §5-§6)
   session.py    tune the top-K hot shapes on a worker pool, commit to a store
@@ -30,18 +33,20 @@ generation, and dispatch keeps resolving three-tier (exact hit ->
 model-guided search -> nearest-shape) without a restart.
 """
 
-from .store import (SCHEMA_VERSION, RecordStore, ServingState, TuneRecord,
-                    active_fingerprint, clear_store, get_store,
-                    input_key, install_generation, install_serving,
-                    install_store, normalize_config, serving_state)
+from .store import (PLAN_HOT_K, SCHEMA_VERSION, DispatchPlan, RecordStore,
+                    ServingState, TuneRecord, active_fingerprint,
+                    clear_store, compile_plan, get_store, input_key,
+                    install_generation, install_serving, install_store,
+                    normalize_config, serving_state, shape_key)
 from .telemetry import (ShapeTelemetry, SpaceDrift, TelemetrySnapshot,
                         clear_telemetry, get_telemetry, record_shape)
 
 __all__ = [
-    "SCHEMA_VERSION", "RecordStore", "ServingState", "TuneRecord",
-    "active_fingerprint", "clear_store", "get_store", "input_key",
-    "install_generation", "install_serving", "install_store",
-    "normalize_config", "serving_state",
+    "PLAN_HOT_K", "SCHEMA_VERSION", "DispatchPlan", "RecordStore",
+    "ServingState", "TuneRecord",
+    "active_fingerprint", "clear_store", "compile_plan", "get_store",
+    "input_key", "install_generation", "install_serving", "install_store",
+    "normalize_config", "serving_state", "shape_key",
     "ShapeTelemetry", "SpaceDrift", "TelemetrySnapshot", "clear_telemetry",
     "get_telemetry", "record_shape",
     "TuningSession", "TuneJob", "SessionReport", "backend_fingerprint",

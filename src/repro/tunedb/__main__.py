@@ -18,11 +18,15 @@ Subcommands:
   fleet   distributed tuning over a shared directory:
             fleet start   publish a plan as lease files (mined from
                           telemetry and/or explicit --shape jobs); --wait
-                          merges shards, retrains, writes the FleetReport
-            fleet worker  claim jobs, tune, append to a private shard store
+                          merges shards, retrains, writes the FleetReport;
+                          --workers N spawns N local worker subprocesses
+                          (the one-command laptop fleet)
+            fleet worker  claim jobs (hottest telemetry count first), tune,
+                          append to a private shard store
             fleet status  queue/lease/done/failed counts + shard sizes
             fleet drain   tell workers to exit once the queue empties;
-                          --wait finalizes like ``start --wait``
+                          --wait finalizes like ``start --wait``; --compact
+                          archives cursor-complete merged shards off the bus
   stats   print store (and optional telemetry) statistics as JSON
   export  compact a store to latest-record-per-shape
   merge   fold several stores into one (newest record per shape wins)
@@ -338,6 +342,14 @@ def _fleet_finalize(coord, args: argparse.Namespace, t0: float) -> int:
     if not ok:
         print(f"[fleet] timed out with {coord.outstanding()} job(s) "
               "outstanding", file=sys.stderr)
+    if getattr(args, "compact", False):
+        if ok and coord.outstanding() == 0:
+            archived = coord.compact_shards()
+            print(f"[fleet] compacted {len(archived)} merged shard(s) "
+                  f"-> {coord.fleet.shard_dir() / 'archive'}")
+        else:
+            print("[fleet] skipping --compact: jobs still outstanding",
+                  file=sys.stderr)
     return 0 if ok and rep.failed <= failed_before else 1
 
 
@@ -352,6 +364,58 @@ def _add_fleet_finalize_args(sp) -> None:
     sp.add_argument("--min-samples", type=int, default=24)
     sp.add_argument("--epochs", type=int, default=20)
     sp.add_argument("--seed", type=int, default=0)
+    sp.add_argument("--compact", action="store_true",
+                    help="after every job lands and merges, archive the "
+                         "cursor-complete shards out of <store>.shards/ "
+                         "instead of leaving them on the bus forever")
+
+
+def _spawn_workers(args: argparse.Namespace) -> List:
+    """Fork N local ``fleet worker`` subprocesses against the bus.
+
+    The one-command laptop fleet: ``fleet start --workers 4`` replaces one
+    coordinator terminal plus four worker terminals.  Each worker gets its
+    own default (host-pid-random) id, so shard files never collide — and a
+    restarted run never appends to a shard whose merge cursor already
+    advanced.  PYTHONPATH is pinned to this process's ``repro`` checkout so
+    the children resolve the same code regardless of the caller's env.
+    """
+    import pathlib
+    import subprocess
+
+    import repro
+
+    env = dict(os.environ)
+    # __path__, not __file__: repro is a namespace package (no __init__.py)
+    src_root = str(pathlib.Path(list(repro.__path__)[0]).resolve().parent)
+    env["PYTHONPATH"] = src_root + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    cmd = [sys.executable, "-m", "repro.tunedb", "fleet", "worker",
+           "--fleet", str(args.fleet),
+           "--train-samples", str(args.worker_train_samples),
+           "--epochs", str(args.worker_epochs)]
+    if args.load_tuner:
+        cmd += ["--load-tuner", args.load_tuner]
+    procs = [subprocess.Popen(cmd, env=env) for _ in range(args.workers)]
+    print(f"[fleet] spawned {len(procs)} local worker process(es): "
+          f"{' '.join(str(p.pid) for p in procs)}")
+    return procs
+
+
+def _reap_workers(procs: List) -> None:
+    import subprocess
+
+    for proc in procs:
+        try:
+            proc.wait(timeout=60)
+        except subprocess.TimeoutExpired:
+            print(f"[fleet] worker pid {proc.pid} did not exit; terminating",
+                  file=sys.stderr)
+            proc.terminate()
+            try:
+                proc.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                proc.kill()
 
 
 def _cmd_fleet_start(args: argparse.Namespace) -> int:
@@ -389,14 +453,25 @@ def _cmd_fleet_start(args: argparse.Namespace) -> int:
     n = coord.publish(jobs, force=args.retune)
     print(f"[fleet] published {n} job(s) ({len(jobs) - n} already known) "
           f"-> {args.fleet}")
+    if args.workers > 0 and not args.drain:
+        # spawned workers have nobody to hand the bus to: the plan is
+        # final by construction, so they must exit when it empties
+        args.drain = True
     if args.drain:
         coord.fleet.request_drain()
     else:
         # restarting a plan revives a previously drained directory even
         # when every job was already queued (publish had nothing to add)
         coord.fleet.clear_drain()
-    if args.wait:
-        return _fleet_finalize(coord, args, t0)
+    procs = _spawn_workers(args) if args.workers > 0 else []
+    if args.wait or procs:
+        # --workers implies --wait: the one-command fleet merges, reports,
+        # and reaps its children before returning — even when finalize
+        # blows up (a corrupt shard, Ctrl-C), no orphans are left behind
+        try:
+            return _fleet_finalize(coord, args, t0)
+        finally:
+            _reap_workers(procs)
     return 0
 
 
@@ -456,6 +531,18 @@ def _cmd_fleet_drain(args: argparse.Namespace) -> int:
           "has an empty queue")
     if args.wait:
         return _fleet_finalize(Coordinator(args.fleet), args, t0)
+    if args.compact:
+        # no --wait: compact what is already merged, right now — the flag
+        # must never be a silent no-op
+        coord = Coordinator(args.fleet)
+        coord.poll()                     # sweep + merge whatever landed
+        if coord.outstanding() == 0:
+            archived = coord.compact_shards()
+            print(f"[fleet] compacted {len(archived)} merged shard(s) "
+                  f"-> {coord.fleet.shard_dir() / 'archive'}")
+        else:
+            print(f"[fleet] skipping --compact: {coord.outstanding()} "
+                  "job(s) still outstanding (use --wait)", file=sys.stderr)
     return 0
 
 
@@ -638,6 +725,16 @@ def build_parser() -> argparse.ArgumentParser:
     fs.add_argument("--wait", action="store_true",
                     help="poll until every job lands, merging shards as "
                          "they fill; then report")
+    fs.add_argument("--workers", type=int, default=0,
+                    help="spawn N local fleet-worker subprocesses so one "
+                         "command runs the whole laptop fleet (implies "
+                         "--wait, and --drain so the workers exit when the "
+                         "plan empties)")
+    fs.add_argument("--load-tuner", default=None,
+                    help="trained tuner dir forwarded to spawned workers")
+    fs.add_argument("--worker-train-samples", type=int, default=4000,
+                    help="tuner training size for spawned workers")
+    fs.add_argument("--worker-epochs", type=int, default=12)
     _add_fleet_finalize_args(fs)
     fs.set_defaults(fn=_cmd_fleet_start)
 

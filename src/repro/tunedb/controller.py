@@ -525,7 +525,10 @@ class RetuneController:
         jobs: List[FleetJob] = []
         for space, dec in triggered.items():
             for inputs in dec.novel_shapes:
+                # the telemetry count rides in the job file so workers can
+                # claim the hottest shapes first (priority-aware claiming)
                 jobs.append(FleetJob(space=space, inputs=dict(inputs),
+                                     count=self.telemetry.count(space, inputs),
                                      source="retune"))
                 self._attempted.add((space, input_key(space, inputs)))
         published = coord.publish(jobs)

@@ -244,6 +244,51 @@ class Coordinator:
             self._shard_sizes[worker_id] = size
         return n_recs, n_samples
 
+    # -- shard GC --------------------------------------------------------------
+    def compact_shards(self) -> List[str]:
+        """Archive cursor-complete merged shards out of ``<store>.shards/``.
+
+        A shard whose merge cursor has consumed every byte contributes
+        nothing further to the bus — it only makes every later merge pass
+        stat it and every ``status()`` re-count it, forever.  ``fleet drain
+        --compact`` moves such shards into ``<store>.shards/archive/`` and
+        drops their cursor files (a returning worker with the same id
+        starts a FRESH shard at offset 0, which the reset cursor then
+        merges from the top — keeping a stale cursor would silently skip
+        its first records).
+
+        Only safe once no worker can still be appending — the drain path
+        runs it after the queue and leases are empty.  Shards with
+        unmerged bytes (including a torn tail) or legacy pre-offset
+        cursors are left alone.  Returns the worker ids archived.
+        """
+        shard_dir = self.fleet.shard_dir()
+        archived: List[str] = []
+        if not shard_dir.is_dir():
+            return archived
+        archive = shard_dir / "archive"
+        for shard_path in sorted(shard_dir.glob("*.jsonl")):
+            worker_id = shard_path.stem
+            try:
+                size = shard_path.stat().st_size
+            except FileNotFoundError:
+                continue
+            _count, offset = self._cursor(worker_id)
+            if offset < 0 or offset < size:
+                continue                 # legacy cursor / unmerged bytes
+            archive.mkdir(parents=True, exist_ok=True)
+            dest = archive / shard_path.name
+            if dest.exists():            # same id archived before: version it
+                n = 1
+                while (archive / f"{worker_id}.{n}.jsonl").exists():
+                    n += 1
+                dest = archive / f"{worker_id}.{n}.jsonl"
+            os.replace(shard_path, dest)
+            (self._merged_dir / f"{worker_id}.json").unlink(missing_ok=True)
+            self._shard_sizes.pop(worker_id, None)
+            archived.append(worker_id)
+        return archived
+
     # -- the poll loop ---------------------------------------------------------
     def poll(self) -> Dict[str, object]:
         """One maintenance pass: sweep, reclaim expired leases, merge.

@@ -116,6 +116,12 @@ class FleetDir:
         self.leases = self.root / LEASES
         self.done = self.root / DONE
         self.failed = self.root / FAILED
+        # job-name -> (mtime_ns, telemetry count): a worker's claim loop
+        # must not re-parse every queue file on every attempt.  Keyed by
+        # mtime so a REPUBLISHED job (fleet start --retune, a later drift
+        # epoch) with a new count invalidates its stale entry — a stat per
+        # entry instead of a read+parse
+        self._priority_cache: Dict[str, Tuple[int, int]] = {}
 
     # -- lifecycle -----------------------------------------------------------
     def init(self, store_path: os.PathLike, *, lease_timeout_s: float = 30.0,
@@ -180,17 +186,44 @@ class FleetDir:
 
     # -- claim / heartbeat (worker side) --------------------------------------
     def claim(self) -> Optional[Tuple[FleetJob, pathlib.Path]]:
-        """Claim the first available queue entry by atomic rename.
+        """Claim the hottest available queue entry by atomic rename.
+
+        Candidates are ordered by the telemetry ``count`` the coordinator
+        wrote into each job file, hottest first (job-id order breaks ties,
+        so count-less plans keep the old deterministic behavior): the
+        shapes serving traffic hits most get tuned — and merged back into
+        the store — before the long tail.  The priority read is advisory
+        only; the CLAIM is still the atomic rename, so racing workers
+        contending for the same hot entry resolve exactly as before (one
+        winner, losers move down their list).
 
         Returns (job, lease_path), or None when the queue is empty (or every
         entry was snatched by a faster racer — indistinguishable, by design).
         """
+        entries: List[Tuple[int, str]] = []
         try:
-            names = sorted(p.name for p in self.queue.iterdir()
-                           if p.suffix == ".json")
+            for p in self.queue.iterdir():
+                if p.suffix != ".json":
+                    continue
+                try:
+                    mtime = p.stat().st_mtime_ns
+                except FileNotFoundError:
+                    continue            # claimed under us: move on
+                cached = self._priority_cache.get(p.name)
+                if cached is None or cached[0] != mtime:
+                    count = 0           # fresh or rewritten: one parse
+                    try:
+                        d = json.loads(p.read_text())
+                        count = int(d.get("count", 0))
+                    except (ValueError, TypeError, OSError):
+                        pass            # vanished or garbage: lowest priority
+                    if len(self._priority_cache) > 65536:
+                        self._priority_cache.clear()
+                    cached = self._priority_cache[p.name] = (mtime, count)
+                entries.append((-cached[1], p.name))
         except FileNotFoundError:
             return None
-        for name in names:
+        for _, name in sorted(entries):
             src, dst = self.queue / name, self.leases / name
             try:
                 # freshen BEFORE the rename: rename preserves mtime, and a

@@ -36,6 +36,8 @@ import threading
 import time
 from typing import Dict, List, Mapping, Optional, Tuple
 
+import numpy as np
+
 SCHEMA_VERSION = 1
 
 # records whose source is this string are training data for the performance
@@ -68,6 +70,16 @@ def input_key(space: str, inputs: Mapping[str, object]) -> str:
         {"s": space, "i": dict(sorted(normalize_inputs(inputs).items()))},
         sort_keys=True)
     return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+
+def shape_key(inputs: Mapping[str, int]) -> Tuple[Tuple[str, int], ...]:
+    """Cheap hashable key for an input dict: no JSON, no digest.
+
+    This is the key the serving hot path uses (DispatchPlan lookups and
+    telemetry buckets): a sorted item tuple costs ~10x less than the
+    ``input_key`` sha1 digest, which stays the *persistent* key format
+    (progress files, job ids)."""
+    return tuple(sorted(inputs.items()))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -148,6 +160,11 @@ class RecordStore:
         self.path = pathlib.Path(path) if path is not None else None
         self.fsync = fsync
         self._lock = threading.Lock()
+        # bumped on every append: an installed DispatchPlan compares this
+        # against the version it was compiled from and stands aside (full
+        # slow-path resolution) the moment the store has newer records —
+        # a frozen plan must never shadow a fresher tuning outcome.
+        self.version = 0
         # (backend, key) -> latest record: the fingerprint-keyed serving index
         self._index: Dict[Tuple[str, str], TuneRecord] = {}
         self._latest: Dict[str, TuneRecord] = {}     # key -> latest, any backend
@@ -165,6 +182,9 @@ class RecordStore:
         # Invalidated on every add so new session results become visible
         # immediately.
         self._nearest_memo: Dict[tuple, Optional[TuneRecord]] = {}
+        # lazily-built log2-bucketed neighbor index (see _nearest_index_for);
+        # dropped on every add, rebuilt on the next un-memoized nearest()
+        self._nearest_index: Optional[Dict[tuple, dict]] = None
         if self.path is not None and self.path.exists():
             self._load()
 
@@ -220,6 +240,8 @@ class RecordStore:
             config=normalize_config(rec.config))
         with self._lock:
             self._nearest_memo.clear()
+            self._nearest_index = None
+            self.version += 1
             if self.path is not None:
                 self.path.parent.mkdir(parents=True, exist_ok=True)
                 with self.path.open("a", encoding="utf-8") as fh:
@@ -300,28 +322,119 @@ class RecordStore:
             if count:
                 self.hits += 1
             return exact
-        memo_key = (space, backend, tuple(sorted(inputs.items())),
-                    max_distance)
+        memo_key = (space, backend, shape_key(inputs), max_distance)
         # single atomic read: add() clears the memo concurrently, so a
         # check-then-index pair could KeyError between the two operations
         best = self._nearest_memo.get(memo_key, _MEMO_MISS)
         if best is _MEMO_MISS:
-            best, best_d = None, max_distance
-            with self._lock:
-                candidates = list(self._index.values())
-            for rec in candidates:
-                if rec.space != space:
-                    continue
-                if backend is not None and rec.backend != backend:
-                    continue
-                d = _shape_distance(inputs, rec.inputs)
-                if d is not None and d <= best_d:
-                    best, best_d = rec, d
+            best = self._nearest_indexed(space, inputs, backend, max_distance)
             if len(self._nearest_memo) > 4096:
                 self._nearest_memo.clear()
             self._nearest_memo[memo_key] = best
         if best is not None and count:
             self.nearest_hits += 1
+        return best
+
+    # -- the log2-bucketed neighbor index ------------------------------------
+    #
+    # The pre-PR-5 nearest() walked EVERY serving record per un-memoized
+    # query — O(index) python-loop work on the dispatch hot path, painful at
+    # the fleet-scale stores PR 4 produces.  The index groups records by
+    # (space, input-dim names, exact-match values) — the only records
+    # _shape_distance can even compare — precomputes each record's log2
+    # feature vector, and buckets rows by round(sum(log2 dims)).  Because
+    # |sum(a) - sum(b)| <= sqrt(d) * ||a - b||_2  (Cauchy-Schwarz), every
+    # neighbor within ``max_distance`` lives in a bucket within
+    # ceil(max_distance * sqrt(d)) + 1 of the query's, so a lookup scans a
+    # handful of buckets and resolves them with one vectorized distance
+    # computation instead of a per-record python loop.
+
+    def _build_nearest_index(self) -> Dict[tuple, dict]:
+        """Group the serving index for neighbor queries (caller holds lock)."""
+        groups: Dict[tuple, dict] = {}
+        for rec in self._index.values():
+            keys = tuple(sorted(rec.inputs))
+            exact = tuple((k, rec.inputs[k]) for k in keys
+                          if k in EXACT_MATCH_PARAMS)
+            g = groups.setdefault((rec.space, keys, exact),
+                                  {"vecs": [], "recs": [], "buckets": {}})
+            vec = [math.log2(1 + abs(rec.inputs[k])) for k in keys
+                   if k not in EXACT_MATCH_PARAMS]
+            g["buckets"].setdefault(int(round(sum(vec))),
+                                    []).append(len(g["recs"]))
+            g["vecs"].append(vec)
+            g["recs"].append(rec)
+        for g in groups.values():
+            g["vecs"] = np.asarray(g["vecs"], np.float64).reshape(
+                len(g["recs"]), -1)
+        return groups
+
+    def _nearest_indexed(self, space: str, inputs: Mapping[str, int],
+                         backend: Optional[str], max_distance: float
+                         ) -> Optional[TuneRecord]:
+        keys = tuple(sorted(inputs))
+        exact = tuple((k, inputs[k]) for k in keys if k in EXACT_MATCH_PARAMS)
+        with self._lock:
+            index = self._nearest_index
+            if index is None:
+                index = self._nearest_index = self._build_nearest_index()
+        group = index.get((space, keys, exact))
+        if group is None:
+            return None
+        qvec = np.asarray([math.log2(1 + abs(inputs[k])) for k in keys
+                           if k not in EXACT_MATCH_PARAMS], np.float64)
+        d = qvec.shape[0]
+        radius = int(math.ceil(max_distance * math.sqrt(d))) + 1 if d else 0
+        qb = int(round(float(qvec.sum())))
+        rows: List[int] = []
+        for b in range(qb - radius, qb + radius + 1):
+            rows.extend(group["buckets"].get(b, ()))
+        if not rows:
+            return None
+        dist = np.sqrt(((group["vecs"][rows] - qvec) ** 2).sum(axis=1))
+        recs = group["recs"]
+        for j in np.argsort(dist, kind="stable"):
+            if dist[j] > max_distance:
+                break                   # sorted: nothing closer remains
+            rec = recs[rows[j]]
+            if backend is None or rec.backend == backend:
+                return rec
+        return None
+
+    def neighbors(self, space: str, inputs: Mapping[str, int]
+                  ) -> List[TuneRecord]:
+        """Every serving record COMPARABLE to ``inputs``: same space, same
+        input-dim names, same exact-match values (dtype/layout/...).  This
+        is the candidate set nearest() searches and admission bucketing
+        scans — served from the log2 index's groups, so the cost is the
+        group size, not the store size."""
+        inputs = normalize_inputs(inputs)
+        keys = tuple(sorted(inputs))
+        exact = tuple((k, inputs[k]) for k in keys if k in EXACT_MATCH_PARAMS)
+        with self._lock:
+            index = self._nearest_index
+            if index is None:
+                index = self._nearest_index = self._build_nearest_index()
+        group = index.get((space, keys, exact))
+        return list(group["recs"]) if group is not None else []
+
+    def _nearest_linear(self, space: str, inputs: Mapping[str, int],
+                        backend: Optional[str] = None,
+                        max_distance: float = 2.0) -> Optional[TuneRecord]:
+        """The pre-index O(records) reference scan — kept for the E14 bench
+        comparison and the index-equivalence tests."""
+        inputs = normalize_inputs(inputs)
+        best, best_d = None, max_distance
+        with self._lock:
+            candidates = list(self._index.values())
+        for rec in candidates:
+            if rec.space != space:
+                continue
+            if backend is not None and rec.backend != backend:
+                continue
+            d = _shape_distance(inputs, rec.inputs)
+            if d is not None and d <= best_d:
+                best, best_d = rec, d
         return best
 
     def records(self, *, backend: Optional[str] = None) -> List[TuneRecord]:
@@ -438,6 +551,143 @@ class RecordStore:
 
 
 # ---------------------------------------------------------------------------
+# Frozen dispatch plans: the install-time compilation of a serving generation.
+#
+# The paper splits tuning into an offline install stage and an O(1) online
+# lookup; the PR 1-4 serving path re-paid resolution cost on every call
+# (sha1 input_key per exact probe, memoized model scans, neighbor search).
+# A DispatchPlan moves all of that to ``install_serving`` time: the current
+# (store, ModelSet, telemetry hot set) compiles into ONE flat
+# (space, shape_key) -> (config, tier) table, so steady-state ``_tuned_cfg``
+# is a single lock-free dict probe with zero store or model traffic.
+# ---------------------------------------------------------------------------
+
+PLAN_HOT_K = 32         # telemetry hot shapes pre-resolved per space
+
+
+class DispatchPlan:
+    """One generation's frozen shape->config table.
+
+    The base ``_table`` is built once at install time and never mutated; an
+    ``_overlay`` accepts slow-path promotions (shapes the plan missed whose
+    model/nearest resolution is worth freezing) — entries are only ever
+    added within a generation, never changed or removed, so a lock-free
+    reader sees either a miss or a complete entry, never a torn one.
+
+    ``store_version`` pins the plan to the record-store state it was
+    compiled from: the moment the store gains a record (a retune session
+    committing mid-generation), every lookup stands aside and dispatch
+    falls back to full slow-path resolution until the next
+    ``install_serving`` recompiles — a frozen plan must never shadow a
+    fresher tuning outcome.  Each entry carries the tier that produced it
+    ("exact" | "model" | "nearest") so plan hits keep feeding the same
+    per-tier serving statistics the slow path maintains.
+    """
+
+    __slots__ = ("generation", "fingerprint", "store_version", "hits",
+                 "misses", "_table", "_overlay", "_lock")
+
+    OVERLAY_CAP = 4096          # runaway-shape backstop, like the memos
+
+    def __init__(self, *, generation: int, fingerprint: Optional[str],
+                 store_version: int,
+                 table: Dict[tuple, Tuple[Dict[str, int], str]]):
+        self.generation = generation
+        self.fingerprint = fingerprint
+        self.store_version = store_version
+        self.hits = 0
+        self.misses = 0
+        self._table = table
+        self._overlay: Dict[tuple, Tuple[Dict[str, int], str]] = {}
+        self._lock = threading.Lock()
+
+    def lookup(self, space: str, key: tuple
+               ) -> Optional[Tuple[Dict[str, int], str]]:
+        """(config, tier) for a planned shape, else None.  Lock-free."""
+        entry = self._table.get((space, key))
+        if entry is None:
+            entry = self._overlay.get((space, key))
+        return entry
+
+    def promote(self, space: str, key: tuple, cfg: Mapping[str, int],
+                tier: str) -> None:
+        """Freeze a slow-path resolution so later calls are plan hits."""
+        with self._lock:
+            if len(self._overlay) < self.OVERLAY_CAP:
+                self._overlay[(space, key)] = (dict(cfg), tier)
+
+    def __len__(self) -> int:
+        return len(self._table) + len(self._overlay)
+
+    def stats(self) -> Dict[str, object]:
+        tiers: Dict[str, int] = {}
+        for _, tier in list(self._table.values()):
+            tiers[tier] = tiers.get(tier, 0) + 1
+        return {"generation": self.generation, "entries": len(self),
+                "built": len(self._table), "promoted": len(self._overlay),
+                "hits": self.hits, "misses": self.misses, "tiers": tiers}
+
+
+def compile_plan(store: Optional[RecordStore], models, fingerprint:
+                 Optional[str], *, telemetry=None, hot_k: int = PLAN_HOT_K,
+                 generation: int = 0) -> Optional["DispatchPlan"]:
+    """Compile a serving generation into a frozen DispatchPlan.
+
+    Coverage: every serving record visible under ``fingerprint`` becomes an
+    "exact" entry, then the telemetry hot set (top ``hot_k`` shapes per
+    space) is pre-resolved through the model and nearest tiers — the §6
+    model scan and the neighbor search run HERE, at install time, instead
+    of on the first serving call of each hot shape.  Shapes no tier can
+    resolve stay out of the plan so the slow path keeps owning the
+    warn-once degradation story.
+
+    Known accounting wart: the install-time ``predict`` calls count in the
+    ModelSet's hit/miss/gated statistics (predict has no ``count=`` knob),
+    so each install moves them by at most hot_k x spaces — bounded, and
+    dwarfed by serving traffic.
+    """
+    if store is None and models is None:
+        return None
+    table: Dict[tuple, Tuple[Dict[str, int], str]] = {}
+    store_version = -1
+    if store is not None:
+        store_version = store.version
+        with store._lock:
+            if fingerprint is None:
+                recs = list(store._latest.values())
+            else:
+                recs = [r for (b, _), r in store._index.items()
+                        if b == fingerprint]
+        for rec in recs:
+            table[(rec.space, shape_key(rec.inputs))] = (dict(rec.config),
+                                                         "exact")
+    if telemetry is not None and hot_k > 0:
+        # tests hand install_serving duck-typed model stubs; only a real
+        # predict() can pre-resolve (dispatch guards the same way)
+        predict = getattr(models, "predict", None) if models is not None \
+            else None
+        for space in telemetry.spaces():
+            for inputs, _count in telemetry.hot_shapes(space, hot_k):
+                key = (space, shape_key(inputs))
+                if key in table:
+                    continue
+                cfg, tier = None, ""
+                if callable(predict):
+                    got = predict(space, inputs, backend=fingerprint)
+                    if got is not None:
+                        cfg, tier = got[0], "model"
+                if cfg is None and store is not None:
+                    rec = store.nearest(space, inputs, backend=fingerprint,
+                                        count=False)
+                    if rec is not None:
+                        cfg, tier = rec.config, "nearest"
+                if cfg is not None:
+                    table[key] = (dict(cfg), tier)
+    return DispatchPlan(generation=generation, fingerprint=fingerprint,
+                        store_version=store_version, table=table)
+
+
+# ---------------------------------------------------------------------------
 # Process-global serving state: the dispatcher's (store, models, fingerprint)
 # view, swapped ATOMICALLY as one generation so a hot-swap mid-resolution can
 # never hand dispatch a torn store/model pair (old store + new models).
@@ -451,6 +701,7 @@ class ServingState:
     models: Optional[object] = None          # tunedb.model.ModelSet
     fingerprint: Optional[str] = None        # backend pin (None = any)
     generation: int = 0                      # bumps on every install
+    plan: Optional[DispatchPlan] = None      # frozen shape->config table
 
 
 _STATE = ServingState()
@@ -468,7 +719,9 @@ def install_generation() -> int:
 
 
 def install_serving(*, store: object = _KEEP, models: object = _KEEP,
-                    fingerprint: object = _KEEP) -> ServingState:
+                    fingerprint: object = _KEEP,
+                    build_plan: bool = True,
+                    plan_hot_k: int = PLAN_HOT_K) -> ServingState:
     """Atomically swap any subset of the dispatcher's serving state.
 
     Every install starts a new generation: the reference flips in one
@@ -479,21 +732,47 @@ def install_serving(*, store: object = _KEEP, models: object = _KEEP,
     store/ModelSet memos are invalidated so no pre-swap resolution leaks
     into the new generation.  Fields left at the default keep their
     installed value (e.g. a models-only hot-swap).
+
+    Unless ``build_plan=False``, the install also COMPILES the incoming
+    (store, ModelSet, telemetry hot set) into the generation's frozen
+    :class:`DispatchPlan` — the paper's offline install stage: exact
+    records, the §6 model scans for the hot set, and neighbor lookups all
+    resolve here, once, so the online ``_tuned_cfg`` path is one lock-free
+    table probe.  The build runs OUTSIDE the install lock (it can take
+    real time when a measurer re-measures the hot set's top-k), then the
+    flip itself is a compare-and-swap: if another install landed while we
+    compiled, the build reruns against the fresh state — installs are rare
+    enough that the retry is theoretical, and a half-published plan is
+    never observable either way.
     """
     global _STATE
-    with _STATE_LOCK:
+    while True:
         cur = _STATE
-        new = ServingState(
-            store=cur.store if store is _KEEP else store,
-            models=cur.models if models is _KEEP else models,
-            fingerprint=(cur.fingerprint if fingerprint is _KEEP
-                         else fingerprint),
-            generation=cur.generation + 1)
-        _STATE = new
-    for obj in (new.store, new.models):
-        invalidate = getattr(obj, "invalidate_memos", None)
-        if callable(invalidate):
-            invalidate()
+        new_store = cur.store if store is _KEEP else store
+        new_models = cur.models if models is _KEEP else models
+        new_fp = cur.fingerprint if fingerprint is _KEEP else fingerprint
+        # invalidate BEFORE the plan compiles: resolutions memoized under
+        # the old generation must not leak into the new plan's entries
+        for obj in (new_store, new_models):
+            invalidate = getattr(obj, "invalidate_memos", None)
+            if callable(invalidate):
+                invalidate()
+        plan = None
+        if build_plan:
+            from .telemetry import get_telemetry
+            plan = compile_plan(new_store, new_models, new_fp,
+                                telemetry=get_telemetry(), hot_k=plan_hot_k)
+        with _STATE_LOCK:
+            if _STATE is not cur:
+                continue            # lost the race: rebuild against fresh
+            generation = cur.generation + 1
+            if plan is not None:    # stamp before publication, never after
+                plan.generation = generation
+            new = ServingState(store=new_store, models=new_models,
+                               fingerprint=new_fp, generation=generation,
+                               plan=plan)
+            _STATE = new
+        break
     from repro.kernels.dispatch import reset_fallback_warnings
     reset_fallback_warnings()
     return new

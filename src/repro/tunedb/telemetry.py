@@ -9,10 +9,16 @@ hit count.  ``hot_shapes`` mines the top-K per space for the tuning session;
 ``save``/``load``/``merge`` move telemetry between serving processes and the
 offline tuner fleet.
 
-The record path is deliberately cheap — a tuple-key dict upsert under a lock
-(no hashing or serialization) — because it also runs on the eager non-kernel
-dispatch path where the op itself costs microseconds.  bench_tunedb.py holds
-the full resolution stack to <5% of interpret-mode dispatch cost.
+The record path is deliberately cheap — one lock-free append to the calling
+thread's :class:`_Ring` (no lock, no hashing beyond the key tuple) — because
+it also runs on the eager non-kernel dispatch path where the op itself costs
+microseconds.  Pending entries fold into the counters in batches: the
+serving engine drains once per decode tick, and every mining/snapshot entry
+point drains on entry, so no reader ever sees a stale count and no count is
+ever lost (a full ring falls back to the locked direct path rather than
+dropping).  bench_tunedb.py holds the full resolution stack to <5% of
+interpret-mode dispatch cost; bench_dispatch.py (E14) gates the frozen-plan
+resolution path this feeds.
 
 Counting semantics under jit — census vs ticks: dispatch runs inside traced
 functions (the serving engine jits decode/prefill), where ``record`` executes
@@ -91,34 +97,141 @@ class _Capture:
         self.shapes: List[Tuple[str, Dict[str, int]]] = []
 
 
+RING_SIZE = 4096        # pending shapes per writer thread before fallback
+
+
+class _Ring:
+    """One thread's lock-free pending-shape buffer (SPSC ring).
+
+    The OWNING thread is the only writer of ``head`` and the slots; the
+    drainer (serialized by the telemetry's drain lock) is the only writer
+    of ``tail``.  CPython attribute reads/writes of ints and list slots are
+    atomic under the GIL, so neither side ever sees a torn value: the
+    drainer snapshots ``head`` and consumes exactly the slots published
+    before the snapshot; later appends wait for the next drain.  A full
+    ring (a drain-starved process) falls back to the locked direct path —
+    counts are NEVER dropped, the lock-free property is what degrades.
+    """
+
+    __slots__ = ("buf", "head", "tail")
+
+    def __init__(self, size: int = RING_SIZE) -> None:
+        self.buf: List = [None] * size
+        self.head = 0           # owner-thread writes only
+        self.tail = 0           # drainer writes only (under drain lock)
+
+
 class ShapeTelemetry:
-    """Thread-safe (space, input-shape) frequency counter with epochs."""
+    """Thread-safe (space, input-shape) frequency counter with epochs.
+
+    Two recording paths feed the counters:
+
+      * :meth:`record` — the locked direct upsert (miners, tick replay,
+        capture attribution).
+      * :meth:`record_buffered` — the serving hot path: one append to the
+        calling thread's :class:`_Ring`, no lock, no hashing beyond the
+        key tuple.  Pending entries fold into the counters at the next
+        :meth:`drain_pending` — the engine drains once per decode tick,
+        and every mining/snapshot entry point drains first, so readers
+        never see a stale view.
+    """
 
     def __init__(self) -> None:
         self._lock = threading.Lock()
+        # serializes drainers (drain folds batches under self._lock, so the
+        # two locks nest drain -> lock, never the reverse)
+        self._drain_lock = threading.Lock()
         # space -> shape-key tuple -> (inputs, count)
         self._counts: Dict[str, Dict[tuple, Tuple[Dict[str, int], int]]] = {}
         self._ticks: Dict[str, int] = {}     # space -> engine tick bumps
         self._seq = 0                        # snapshot epoch counter
         self._captures: List[_Capture] = []
+        self._tls = threading.local()
+        # every writer thread's ring, tagged with a weakref to its owner so
+        # drains can prune rings whose thread died (a long-lived server's
+        # session worker threads must not leak 4096-slot buffers forever)
+        self._rings: List[Tuple[object, _Ring]] = []
 
     # -- hot path -------------------------------------------------------------
-    def record(self, space: str, inputs: Mapping[str, int], n: int = 1) -> None:
+    def _record_locked(self, space: str, inputs: Mapping[str, int],
+                       n: int, feed_captures: bool = True) -> None:
         # raw-key fast path: numeric values hash like their int forms, so an
         # existing bucket is a plain dict hit with NO normalization copy —
         # the per-tick replay cost bench_retune gates.  Only a first-seen
         # (or string-valued) shape pays normalize_inputs.
         key = _shape_key(inputs)
-        with self._lock:
-            per_space = self._counts.setdefault(space, {})
-            cur = per_space.get(key)
-            if cur is None:                 # first sight (or string values)
-                ninputs = normalize_inputs(inputs)
-                key = _shape_key(ninputs)
-                cur = per_space.get(key, (ninputs, 0))
-            per_space[key] = (cur[0], cur[1] + n)
+        per_space = self._counts.setdefault(space, {})
+        cur = per_space.get(key)
+        if cur is None:                 # first sight (or string values)
+            ninputs = normalize_inputs(inputs)
+            key = _shape_key(ninputs)
+            cur = per_space.get(key, (ninputs, 0))
+        per_space[key] = (cur[0], cur[1] + n)
+        if feed_captures:
             for cap in self._captures:
                 cap.shapes.append((space, dict(cur[0])))
+
+    def record(self, space: str, inputs: Mapping[str, int], n: int = 1) -> None:
+        with self._lock:
+            self._record_locked(space, inputs, n)
+
+    def record_buffered(self, space: str, inputs: Mapping[str, int]) -> None:
+        """Lock-free single-call record: append to this thread's ring.
+
+        An active capture() forces the locked direct path — trace-time
+        attribution must happen inside the capture block, on its thread.
+        """
+        if self._captures:
+            self.record(space, inputs)
+            return
+        ring = getattr(self._tls, "ring", None)
+        if ring is None:
+            import weakref
+            ring = self._tls.ring = _Ring()
+            with self._lock:
+                self._rings.append(
+                    (weakref.ref(threading.current_thread()), ring))
+        if ring.head - ring.tail >= len(ring.buf):
+            self.record(space, inputs)      # drain-starved: locked fallback
+            return
+        ring.buf[ring.head % len(ring.buf)] = (space, inputs)
+        ring.head += 1
+
+    def drain_pending(self) -> int:
+        """Fold every thread's pending ring entries into the counters.
+
+        The engine calls this once per decode tick (one lock acquire for
+        the whole batch instead of one per kernel call); mining and
+        snapshot entry points call it on entry.  Ring entries were
+        recorded outside any capture on their own thread, so the fold
+        deliberately does NOT feed captures.  Returns entries folded.
+        """
+        drained = 0
+        with self._drain_lock:
+            with self._lock:
+                rings = list(self._rings)
+            dead = []
+            for entry in rings:
+                owner_ref, ring = entry
+                head = ring.head            # snapshot: consume up to here
+                if head != ring.tail:
+                    size = len(ring.buf)
+                    items = [ring.buf[i % size]
+                             for i in range(ring.tail, head)]
+                    ring.tail = head
+                    with self._lock:
+                        for space, inputs in items:
+                            self._record_locked(space, inputs, 1,
+                                                feed_captures=False)
+                    drained += len(items)
+                # a drained ring whose owner thread died contributes
+                # nothing further: prune it from the registry
+                if owner_ref() is None and ring.head == ring.tail:
+                    dead.append(entry)
+            if dead:
+                with self._lock:
+                    self._rings = [e for e in self._rings if e not in dead]
+        return drained
 
     # -- jit tick hooks -------------------------------------------------------
     @contextlib.contextmanager
@@ -130,6 +243,7 @@ class ShapeTelemetry:
         every later execution — recovering true frequencies under jit.
         """
         cap = _Capture()
+        self.drain_pending()            # pre-capture backlog is not ours
         with self._lock:
             self._captures.append(cap)
         try:
@@ -140,23 +254,30 @@ class ShapeTelemetry:
 
     def record_ticks(self, shapes: Iterable[Tuple[str, Mapping[str, int]]],
                      n: int = 1) -> None:
-        """Bump each captured (space, inputs) by ``n`` executed ticks."""
+        """Bump each captured (space, inputs) by ``n`` executed ticks.
+
+        One lock acquire for the whole replay batch — the engine calls
+        this every decode tick, so the per-shape lock round-trips the
+        original implementation paid were pure hot-path overhead.
+        """
         per_space: Dict[str, int] = {}
-        for space, inputs in shapes:
-            self.record(space, inputs, n=n)
-            per_space[space] = per_space.get(space, 0) + n
         with self._lock:
+            for space, inputs in shapes:
+                self._record_locked(space, inputs, n)
+                per_space[space] = per_space.get(space, 0) + n
             for space, k in per_space.items():
                 self._ticks[space] = self._ticks.get(space, 0) + k
 
     # -- mining ---------------------------------------------------------------
     def count(self, space: str, inputs: Mapping[str, int]) -> int:
+        self.drain_pending()
         key = _shape_key(normalize_inputs(inputs))
         with self._lock:
             cur = self._counts.get(space, {}).get(key)
             return 0 if cur is None else cur[1]
 
     def total(self, space: Optional[str] = None) -> int:
+        self.drain_pending()
         with self._lock:
             spaces = [space] if space is not None else list(self._counts)
             return sum(c for s in spaces
@@ -165,24 +286,31 @@ class ShapeTelemetry:
     def hot_shapes(self, space: str, top_k: int = 8
                    ) -> List[Tuple[Dict[str, int], int]]:
         """Top-K (inputs, count) for one space, most frequent first."""
+        self.drain_pending()
         with self._lock:
             items = list(self._counts.get(space, {}).values())
         items.sort(key=lambda t: (-t[1], sorted(t[0].items())))
         return [(dict(i), c) for i, c in items[:top_k]]
 
     def spaces(self) -> List[str]:
+        self.drain_pending()
         with self._lock:
             return sorted(self._counts)
 
     def clear(self) -> None:
-        with self._lock:
-            self._counts.clear()
-            self._ticks.clear()
-            self._seq = 0
+        with self._drain_lock:          # pending entries are discarded too
+            with self._lock:
+                rings = list(self._rings)
+                self._counts.clear()
+                self._ticks.clear()
+                self._seq = 0
+            for _owner, ring in rings:
+                ring.tail = ring.head
 
     # -- epochs ---------------------------------------------------------------
     def snapshot(self) -> TelemetrySnapshot:
         """Freeze the current counters into an immutable epoch snapshot."""
+        self.drain_pending()
         with self._lock:
             self._seq += 1
             return TelemetrySnapshot(
@@ -231,6 +359,7 @@ class ShapeTelemetry:
     def save(self, path: os.PathLike) -> None:
         path = pathlib.Path(path)
         path.parent.mkdir(parents=True, exist_ok=True)
+        self.drain_pending()
         with self._lock:
             payload = {
                 "version": TELEMETRY_VERSION,
@@ -260,6 +389,7 @@ class ShapeTelemetry:
         return t
 
     def merge(self, other: "ShapeTelemetry") -> None:
+        other.drain_pending()
         # snapshot under OTHER's lock: a concurrent record()/clear() on it
         # must not mutate the dicts mid-iteration
         with other._lock:
@@ -274,6 +404,7 @@ class ShapeTelemetry:
                 self._ticks[space] = self._ticks.get(space, 0) + n
 
     def stats(self) -> Dict[str, object]:
+        self.drain_pending()
         with self._lock:
             return {
                 "spaces": {s: {"shapes": len(m),
@@ -297,8 +428,13 @@ def get_telemetry() -> ShapeTelemetry:
 
 
 def record_shape(space: str, inputs: Mapping[str, int]) -> None:
-    """Dispatcher entry point — one counter bump per kernel call."""
-    _TELEMETRY.record(space, inputs)
+    """Dispatcher entry point — one lock-free ring append per kernel call.
+
+    The entry folds into the counters at the next ``drain_pending`` (the
+    engine drains every decode tick; mining/snapshot calls drain first),
+    so readers still see every call — only the per-call lock is gone.
+    """
+    _TELEMETRY.record_buffered(space, inputs)
 
 
 def clear_telemetry() -> None:

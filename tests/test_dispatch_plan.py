@@ -1,0 +1,400 @@
+"""Frozen dispatch plans (PR 5): install-time resolution, indexed nearest
+lookup, lock-free telemetry rings, store-aware admission.
+
+Pins the tentpole contracts: ``install_serving`` compiles the generation's
+(store, ModelSet, telemetry hot set) into one flat DispatchPlan so the
+steady-state hot path is a single lock-free probe; the plan stands aside the
+moment the store gains a record (a frozen entry never shadows fresher
+tuning); concurrent hot-swaps never serve a torn or stale-generation entry;
+the log2-bucketed ``nearest()`` index answers exactly what the linear scan
+answered; the per-thread telemetry rings lose no counts under threaded
+writers racing a drainer; and store-aware admission pads a shape to a tuned
+neighbor only when the recorded-TFLOPS arithmetic says the overhead wins.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.space import gemm_input
+from repro.core.tuner import clear_tuners
+from repro.kernels import dispatch
+from repro.serve.engine import StoreAwareAdmission
+from repro.tunedb import (RecordStore, TuneRecord, clear_store,
+                          clear_telemetry, compile_plan, get_telemetry,
+                          install_serving, install_store, serving_state,
+                          shape_key)
+from repro.tunedb.telemetry import RING_SIZE, record_shape
+
+CFG = {"bm": 64, "bn": 128, "bk": 128, "k_unroll": 1, "k_split": 1,
+       "order": 0, "acc32": 1, "prefetch": 2}
+
+
+@pytest.fixture(autouse=True)
+def _clean_globals():
+    def reset():
+        from repro.tunedb.model import clear_models
+        clear_tuners()
+        clear_store()
+        clear_models()
+        clear_telemetry()
+        dispatch.reset_fallback_warnings()
+    reset()
+    yield
+    reset()
+
+
+def _rec(m, n, k, *, backend="test", tflops=100.0, **cfg_over):
+    return TuneRecord(space="gemm", inputs=gemm_input(m, n, k),
+                      config=dict(CFG, **cfg_over), tflops=tflops,
+                      backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# plan compilation + the tier-0 hot path
+# ---------------------------------------------------------------------------
+
+def test_install_compiles_exact_records_into_the_plan():
+    store = RecordStore()
+    store.add(_rec(512, 16, 2048))
+    install_store(store)
+    state = serving_state()
+    assert state.plan is not None
+    assert state.plan.generation == state.generation
+    entry = state.plan.lookup("gemm", shape_key(gemm_input(512, 16, 2048)))
+    assert entry is not None and entry[1] == "exact"
+    assert entry[0] == CFG
+
+
+def test_plan_hit_serves_without_store_traffic_and_keeps_stats():
+    store = RecordStore()
+    store.add(_rec(512, 16, 2048))
+    install_store(store)
+    plan = serving_state().plan
+    cfg = dispatch._tuned_cfg("gemm", gemm_input(512, 16, 2048))
+    assert cfg == CFG
+    # the hit was served by the plan, credited to the exact tier
+    assert plan.hits == 1 and store.hits == 1 and store.misses == 0
+    # nothing touched the nearest machinery
+    assert not store._nearest_memo
+
+
+def test_hot_telemetry_shapes_are_preresolved_at_install():
+    store = RecordStore()
+    store.add(_rec(512, 16, 2048))
+    # traffic on a shape only the neighbor tier can serve
+    get_telemetry().record("gemm", gemm_input(600, 16, 2048), n=8)
+    install_store(store)
+    plan = serving_state().plan
+    entry = plan.lookup("gemm", shape_key(gemm_input(600, 16, 2048)))
+    assert entry is not None and entry[1] == "nearest"
+    # serving it is a plan hit that still counts as a nearest-tier serve
+    dispatch._tuned_cfg("gemm", gemm_input(600, 16, 2048))
+    assert store.nearest_hits == 1 and plan.hits == 1
+
+
+def test_slow_path_resolution_is_promoted_into_the_plan():
+    store = RecordStore()
+    store.add(_rec(512, 16, 2048))
+    install_store(store)
+    plan = serving_state().plan
+    novel = gemm_input(700, 16, 2048)
+    assert plan.lookup("gemm", shape_key(novel)) is None
+    assert dispatch._tuned_cfg("gemm", novel) == CFG     # nearest, slow path
+    entry = plan.lookup("gemm", shape_key(novel))
+    assert entry is not None and entry[1] == "nearest"
+    before = store.nearest_hits
+    assert dispatch._tuned_cfg("gemm", novel) == CFG     # now a plan hit
+    assert plan.hits == 1 and store.nearest_hits == before + 1
+
+
+def test_store_append_stands_the_plan_aside_until_reinstall():
+    store = RecordStore()
+    store.add(_rec(512, 16, 2048))
+    install_store(store)
+    plan = serving_state().plan
+    assert store.version == plan.store_version
+    # a retune session commits a fresh record mid-generation
+    store.add(_rec(512, 16, 2048, bm=32, tflops=140.0))
+    assert store.version != plan.store_version
+    # dispatch must serve the FRESH record, not the frozen entry
+    cfg = dispatch._tuned_cfg("gemm", gemm_input(512, 16, 2048))
+    assert cfg["bm"] == 32
+    assert plan.hits == 0                # the plan stood aside entirely
+    # the next install recompiles and the plan serves again
+    install_store(store)
+    plan2 = serving_state().plan
+    assert plan2.store_version == store.version
+    assert dispatch._tuned_cfg("gemm", gemm_input(512, 16, 2048))["bm"] == 32
+    assert plan2.hits == 1
+
+
+def test_models_only_serving_still_builds_a_plan():
+    class _Models:
+        def predict(self, space, inputs, backend=None):
+            return dict(CFG, bm=16), 50.0
+    get_telemetry().record("gemm", gemm_input(256, 16, 256), n=4)
+    install_serving(store=None, models=_Models())
+    plan = serving_state().plan
+    entry = plan.lookup("gemm", shape_key(gemm_input(256, 16, 256)))
+    assert entry is not None and entry[1] == "model"
+    assert dispatch._tuned_cfg("gemm", gemm_input(256, 16, 256))["bm"] == 16
+
+
+def test_build_plan_false_keeps_the_slow_path():
+    store = RecordStore()
+    store.add(_rec(512, 16, 2048))
+    install_serving(store=store, build_plan=False)
+    assert serving_state().plan is None
+    assert dispatch._tuned_cfg("gemm", gemm_input(512, 16, 2048)) == CFG
+    assert store.hits == 1
+
+
+def test_compile_plan_respects_fingerprint_pin():
+    store = RecordStore()
+    store.add(_rec(512, 16, 2048, backend="a"))
+    store.add(_rec(1024, 16, 2048, backend="b", bm=32))
+    plan = compile_plan(store, None, "b")
+    assert plan.lookup("gemm", shape_key(gemm_input(512, 16, 2048))) is None
+    entry = plan.lookup("gemm", shape_key(gemm_input(1024, 16, 2048)))
+    assert entry is not None and entry[0]["bm"] == 32
+
+
+# ---------------------------------------------------------------------------
+# plan/swap concurrency: no torn or stale-generation entries
+# ---------------------------------------------------------------------------
+
+def test_concurrent_swaps_never_serve_torn_or_stale_plan():
+    """Readers racing install_serving flips must only ever see a config
+    belonging to SOME complete generation, and a plan stamped with the
+    generation of the state it was read from."""
+    shape = gemm_input(512, 16, 2048)
+    store_a, store_b = RecordStore(), RecordStore()
+    store_a.add(_rec(512, 16, 2048, bm=32))
+    store_b.add(_rec(512, 16, 2048, bm=64))
+    install_serving(store=store_a)
+
+    stop = threading.Event()
+    errors = []
+
+    def reader():
+        while not stop.is_set():
+            state = serving_state()
+            if state.plan is not None \
+                    and state.plan.generation != state.generation:
+                errors.append(("stale plan", state.plan.generation,
+                               state.generation))
+            cfg = dispatch._tuned_cfg("gemm", shape)
+            if cfg is None or cfg["bm"] not in (32, 64):
+                errors.append(("torn config", cfg))
+
+    threads = [threading.Thread(target=reader) for _ in range(4)]
+    for t in threads:
+        t.start()
+    try:
+        for i in range(60):
+            install_serving(store=store_b if i % 2 else store_a)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+    assert not errors, errors[:5]
+
+
+# ---------------------------------------------------------------------------
+# telemetry rings: lock-free recording, lossless draining
+# ---------------------------------------------------------------------------
+
+def test_ring_drain_loses_no_counts_under_threaded_writers():
+    clear_telemetry()
+    tel = get_telemetry()
+    n_threads, per_thread = 6, 4000
+    start = threading.Barrier(n_threads + 1)
+    done = threading.Event()
+
+    def writer(tid):
+        shape = gemm_input(128 * (tid + 1), 16, 128)
+        start.wait()
+        for _ in range(per_thread):
+            record_shape("gemm", shape)
+
+    def drainer():
+        start.wait()
+        while not done.is_set():
+            tel.drain_pending()
+
+    threads = [threading.Thread(target=writer, args=(i,))
+               for i in range(n_threads)]
+    dr = threading.Thread(target=drainer)
+    for t in threads + [dr]:
+        t.start()
+    for t in threads:
+        t.join()
+    done.set()
+    dr.join()
+    assert tel.total("gemm") == n_threads * per_thread
+    for i in range(n_threads):
+        assert tel.count("gemm", gemm_input(128 * (i + 1), 16, 128)) \
+            == per_thread
+
+
+def test_full_ring_falls_back_to_locked_path_without_loss():
+    clear_telemetry()
+    tel = get_telemetry()
+    n = RING_SIZE * 2 + 17               # overflow the ring with no drain
+    for _ in range(n):
+        record_shape("gemm", gemm_input(64, 16, 64))
+    assert tel.total("gemm") == n        # total() drains, then counts
+
+
+def test_captures_still_attribute_with_buffered_recording():
+    clear_telemetry()
+    tel = get_telemetry()
+    record_shape("gemm", gemm_input(64, 16, 64))     # pre-capture backlog
+    with tel.capture() as cap:
+        record_shape("gemm", gemm_input(128, 16, 128))
+    assert cap.shapes == [("gemm", gemm_input(128, 16, 128))]
+    assert tel.count("gemm", gemm_input(64, 16, 64)) == 1
+
+
+# ---------------------------------------------------------------------------
+# the log2-bucketed nearest index
+# ---------------------------------------------------------------------------
+
+def _random_store(rng, n=400):
+    store = RecordStore()
+    backends = ["a", "b"]
+    for i in range(n):
+        m, nn, k = (int(2 ** rng.uniform(4, 13)) for _ in range(3))
+        store.add(TuneRecord(
+            space="gemm", inputs=gemm_input(m, nn, k),
+            config=dict(CFG, bm=16 + 16 * (i % 4)),
+            tflops=float(rng.uniform(10, 150)),
+            backend=backends[i % 2]))
+    return store
+
+
+def test_indexed_nearest_matches_linear_scan(rng):
+    from repro.tunedb.store import _shape_distance
+    store = _random_store(rng)
+    for _ in range(120):
+        m, n, k = (int(2 ** rng.uniform(4, 13)) for _ in range(3))
+        q = gemm_input(m, n, k)
+        for backend in (None, "a", "b"):
+            got = store._nearest_indexed("gemm", q, backend, 2.0)
+            want = store._nearest_linear("gemm", q, backend, 2.0)
+            assert (got is None) == (want is None)
+            if got is not None:
+                # equal-distance ties may pick different records; the
+                # DISTANCE (the serving contract) must match exactly
+                assert _shape_distance(q, got.inputs) == pytest.approx(
+                    _shape_distance(q, want.inputs))
+                if backend is not None:
+                    assert got.backend == backend
+
+
+def test_indexed_nearest_rejects_exact_param_mismatch():
+    store = RecordStore()
+    store.add(_rec(512, 16, 2048))
+    # fp32 is not a neighbor of bf16, however close the dims
+    assert store.nearest("gemm", gemm_input(512, 16, 2048, 32)) is None
+    assert store.nearest("gemm", gemm_input(520, 16, 2048)) is not None
+
+
+def test_nearest_index_invalidated_by_append():
+    store = RecordStore()
+    store.add(_rec(512, 16, 2048))
+    assert store.nearest("gemm", gemm_input(4000, 16, 2048),
+                         count=False) is None      # too far: > max_distance
+    store.add(_rec(4096, 16, 2048, bm=32))
+    got = store.nearest("gemm", gemm_input(4000, 16, 2048), count=False)
+    assert got is not None and got.config["bm"] == 32
+
+
+# ---------------------------------------------------------------------------
+# store-aware admission
+# ---------------------------------------------------------------------------
+
+def test_bucket_pads_only_when_recorded_tflops_say_it_wins():
+    store = RecordStore()
+    # a mediocre tuned shape at 512 and a fast one at 1024
+    store.add(_rec(512, 64, 1024, bm=512, bn=64, tflops=60.0))
+    store.add(_rec(1024, 64, 1024, bm=512, bn=64, tflops=100.0))
+    install_store(store)
+    adm = StoreAwareAdmission()
+    # tuned shape: nothing to decide
+    shape, how = adm.bucket("gemm", gemm_input(1024, 64, 1024))
+    assert how == "hit" and shape["M"] == 1024
+    # M=530: the nearest record (512) pays ~0.52 block quantization, the
+    # 1024 record padded delivers 100 * 530/1024 ~ 51.8 > 60 * 0.52 ~ 31
+    shape, how = adm.bucket("gemm", gemm_input(530, 64, 1024))
+    assert how == "padded" and shape["M"] == 1024
+    # M=500 aligns almost perfectly with the 512 record: stay exact
+    shape, how = adm.bucket("gemm", gemm_input(500, 64, 1024))
+    assert how == "exact" and shape["M"] == 500
+    assert adm.padded == 1 and adm.exact == 1
+
+
+def test_bucket_respects_max_pad_budget():
+    store = RecordStore()
+    store.add(_rec(4096, 64, 1024, bm=512, bn=64, tflops=100.0))
+    install_store(store)
+    adm = StoreAwareAdmission(max_pad=0.25)
+    # padding 530 -> 4096 is ~7.7x extra work: over any sane budget
+    shape, how = adm.bucket("gemm", gemm_input(530, 64, 1024))
+    assert how == "exact" and shape["M"] == 530
+
+
+def test_admission_pick_prefers_plan_hit_lengths_and_groups():
+    store = RecordStore()
+    store.add(_rec(8, 16, 64))
+    install_store(store)
+    state = serving_state()
+
+    class _Req:
+        def __init__(self, n):
+            self.prompt = np.zeros(n, np.int32)
+
+    # length 8 prefill runs a tuned gemm; length 5 runs an untuned one
+    prefill_shapes = {8: [("gemm", gemm_input(8, 16, 64))],
+                      5: [("gemm", gemm_input(5, 16, 64))]}
+    adm = StoreAwareAdmission()
+    pending = [_Req(5), _Req(8), _Req(8)]
+    assert adm.pick(pending, prefill_shapes) == 1        # tuned length first
+    assert adm.pick(pending, prefill_shapes, last_len=8) == 1
+    # unknown lengths (must compile) rank above known-untuned ones
+    pending2 = [_Req(5), _Req(7)]
+    assert adm.pick(pending2, prefill_shapes) == 1
+    # grouping: equal-length reuse breaks what would otherwise tie
+    pending3 = [_Req(5), _Req(5)]
+    assert adm.pick(pending3, prefill_shapes, last_len=5) == 0
+    del state
+
+
+def test_engine_store_admission_serves_identical_outputs(tmp_path):
+    """Admission reorders WHICH request fills a slot first, never what any
+    request computes: greedy outputs must match FIFO exactly."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import ModelConfig, init_params
+    from repro.serve import Engine, ServeConfig
+
+    cfg = ModelConfig(name="t", n_layers=1, d_model=32, n_heads=2, n_kv=1,
+                      d_ff=64, vocab=64, dtype=jnp.float32, attn_chunk=16,
+                      logit_chunk=16, remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 64, n) for n in (6, 9, 6, 9, 6)]
+
+    outs = {}
+    for mode in ("fifo", "store"):
+        clear_store()
+        clear_telemetry()
+        eng = Engine(cfg, params, ServeConfig(max_len=64, slots=2,
+                                              admission=mode))
+        outs[mode] = eng.generate([p.copy() for p in prompts], max_new=4)
+        if mode == "store":
+            assert eng.admission is not None
+    assert outs["fifo"] == outs["store"]

@@ -797,3 +797,177 @@ def test_cli_fleet_round_trip(tmp_path, capsys):
 def test_cli_fleet_status_rejects_non_fleet_dir(tmp_path):
     with pytest.raises(FileNotFoundError):
         tunedb_main(["fleet", "status", "--fleet", str(tmp_path / "nope")])
+
+
+# ---------------------------------------------------------------------------
+# PR 5 satellites: priority claiming, shard GC, --workers spawner
+# ---------------------------------------------------------------------------
+
+def test_workers_claim_hottest_jobs_first(tmp_path):
+    _, coord = _fleet(tmp_path)
+    coord.publish([FleetJob(space="gemm", inputs=_shape(0), count=1),
+                   FleetJob(space="gemm", inputs=_shape(1), count=50),
+                   FleetJob(space="gemm", inputs=_shape(2), count=5)])
+    order = []
+    for _ in range(3):
+        job, lease = coord.fleet.claim()
+        order.append(job.count)
+        lease.unlink()
+    assert order == [50, 5, 1]           # hottest telemetry count first
+    assert coord.fleet.claim() is None
+
+
+def test_requeued_job_keeps_its_priority(tmp_path):
+    _, coord = _fleet(tmp_path)
+    coord.publish([FleetJob(space="gemm", inputs=_shape(0), count=7)])
+    job, lease = coord.fleet.claim()
+    coord.fleet.fail(job, lease, "synthetic", max_attempts=3)
+    job2, lease2 = coord.fleet.claim()
+    assert job2.count == 7 and job2.attempts == 1
+    lease2.unlink()
+
+
+def test_claim_priority_updates_on_republication(tmp_path):
+    """A republished job (retune of a completed shape) with a hotter count
+    must not be ordered by its stale cached priority."""
+    _, coord = _fleet(tmp_path)
+    coord.publish([FleetJob(space="gemm", inputs=_shape(0), count=5),
+                   FleetJob(space="gemm", inputs=_shape(1), count=10)])
+    job, lease = coord.fleet.claim()     # caches shape(1) at count=10
+    assert job.count == 10
+    coord.fleet.complete(job, lease, {})
+    assert coord.publish([FleetJob(space="gemm", inputs=_shape(1),
+                                   count=500)], force=True) == 1
+    job2, lease2 = coord.fleet.claim()
+    assert job2.count == 500             # fresh file invalidated the cache
+    lease2.unlink()
+
+
+def test_retune_fleet_jobs_carry_telemetry_counts(tmp_path):
+    store = RecordStore.open(tmp_path / "db.jsonl")
+    controller = RetuneController(
+        store, tuners={"gemm": StubTuner(fixed_cfg=True)},
+        fleet_dir=tmp_path / "fleet", fleet_timeout_s=0.2, fleet_poll_s=0.02,
+        cfg=RetuneConfig(min_calls=8, top_k_shapes=2))
+    _drive_traffic(get_telemetry(), _shape(0), n=40)
+    controller.maybe_retune()            # submits; no workers: will time out
+    assert controller.wait_async(timeout=30.0) is not None
+    jobs = sorted((tmp_path / "fleet" / "queue").glob("*.json"))
+    assert jobs, "the drift-triggered plan published nothing"
+    published = [json.loads(p.read_text()) for p in jobs]
+    assert any(j["count"] == 40 for j in published)
+
+
+def test_drain_compact_archives_cursor_complete_shards(tmp_path):
+    store, coord = _fleet(tmp_path)
+    coord.publish([FleetJob(space="gemm", inputs=_shape(0)),
+                   FleetJob(space="gemm", inputs=_shape(1))])
+    worker = Worker(tmp_path / "fleet", worker_id="w0",
+                    tuners={"gemm": StubTuner(n_measured=2)})
+    assert worker.run_one() and worker.run_one()
+    coord.poll()                         # merge both records
+    assert len(store) == 2
+    shard_dir = coord.fleet.shard_dir()
+    assert list(shard_dir.glob("*.jsonl"))
+
+    archived = coord.compact_shards()
+    assert archived == ["w0"]
+    assert not list(shard_dir.glob("*.jsonl"))
+    assert (shard_dir / "archive" / "w0.jsonl").exists()
+    assert not (tmp_path / "fleet" / "merged" / "w0.json").exists()
+
+    # a returning worker with the SAME id starts a fresh shard; the reset
+    # cursor merges it from byte 0 — nothing skipped, nothing duplicated
+    coord.publish([FleetJob(space="gemm", inputs=_shape(2))])
+    worker2 = Worker(tmp_path / "fleet", worker_id="w0",
+                     tuners={"gemm": StubTuner()})
+    assert worker2.run_one()
+    coord.poll()
+    assert store.contains("gemm", _shape(2)) and len(store) == 3
+
+
+def test_compact_skips_shards_with_unmerged_bytes(tmp_path):
+    store, coord = _fleet(tmp_path)
+    coord.publish([FleetJob(space="gemm", inputs=_shape(0))])
+    worker = Worker(tmp_path / "fleet", worker_id="w0",
+                    tuners={"gemm": StubTuner()})
+    assert worker.run_one()
+    assert coord.compact_shards() == []  # nothing merged yet: must stay
+    coord.poll()
+    assert coord.compact_shards() == ["w0"]
+    assert len(store) == 1
+
+
+def test_cli_drain_compact(tmp_path, capsys):
+    db, fleet = tmp_path / "db.jsonl", tmp_path / "fleet"
+    store = RecordStore.open(db)
+    coord = Coordinator(fleet, store)
+    coord.publish([FleetJob(space="gemm", inputs=_shape(0))])
+    worker = Worker(fleet, worker_id="w0", tuners={"gemm": StubTuner()})
+    assert worker.run_one()
+    rc = tunedb_main(["fleet", "drain", "--fleet", str(fleet), "--wait",
+                      "--timeout", "30", "--compact"])
+    assert rc == 0
+    assert "compacted 1 merged shard(s)" in capsys.readouterr().out
+    shard_dir = coord.fleet.shard_dir()
+    assert not list(shard_dir.glob("*.jsonl"))
+    assert (shard_dir / "archive" / "w0.jsonl").exists()
+    assert RecordStore.open(db).contains("gemm", _shape(0))
+
+
+def test_cli_drain_compact_without_wait(tmp_path, capsys):
+    """--compact must act (merge what landed, then archive) even without
+    --wait — never a silent no-op."""
+    db, fleet = tmp_path / "db.jsonl", tmp_path / "fleet"
+    coord = Coordinator(fleet, RecordStore.open(db))
+    coord.publish([FleetJob(space="gemm", inputs=_shape(0))])
+    worker = Worker(fleet, worker_id="w0", tuners={"gemm": StubTuner()})
+    assert worker.run_one()
+    rc = tunedb_main(["fleet", "drain", "--fleet", str(fleet), "--compact"])
+    assert rc == 0
+    assert "compacted 1 merged shard(s)" in capsys.readouterr().out
+    assert not list(coord.fleet.shard_dir().glob("*.jsonl"))
+    assert RecordStore.open(db).contains("gemm", _shape(0))
+
+
+def test_fleet_start_spawns_local_workers(tmp_path, monkeypatch, capsys):
+    """--workers N forks N `fleet worker` subprocesses against the bus,
+    implies drain+wait, and reaps the children before returning."""
+    import subprocess
+
+    spawned = []
+
+    class _FakeProc:
+        def __init__(self, cmd):
+            self.cmd = cmd
+            self.pid = 4000 + len(spawned)
+
+        def wait(self, timeout=None):
+            return 0
+
+        def terminate(self):
+            raise AssertionError("healthy fake workers are never terminated")
+
+    def fake_popen(cmd, **kw):
+        proc = _FakeProc(cmd)
+        spawned.append(proc)
+        return proc
+
+    monkeypatch.setattr(subprocess, "Popen", fake_popen)
+    db, fleet = tmp_path / "db.jsonl", tmp_path / "fleet"
+    rc = tunedb_main(["fleet", "start", "--fleet", str(fleet),
+                      "--store", str(db), "--workers", "2",
+                      "--worker-train-samples", "300", "--worker-epochs", "2",
+                      "--timeout", "5"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "spawned 2 local worker process(es)" in out
+    assert len(spawned) == 2
+    for proc in spawned:
+        assert proc.cmd[1:4] == ["-m", "repro.tunedb", "fleet"]
+        assert "worker" in proc.cmd
+        assert str(fleet) in proc.cmd
+        assert "300" in proc.cmd and "2" in proc.cmd
+    # one-command mode marks the plan final so the workers exit on empty
+    from repro.tunedb.fleet import FleetDir
+    assert FleetDir(fleet).draining()
