@@ -1,0 +1,307 @@
+"""E15 — serving observability: metrics overhead, sentry, status endpoint.
+
+The PR-6 tentpole claim, gated three ways:
+
+  1. OVERHEAD — steady-state plan-probe resolution (the E14 hot set:
+     exact hits + nearest-promoted novel shapes) with the metrics
+     registry live AND an adversarial background scraper hammering
+     ``render_prometheus`` must cost <= 2% over the same loop with no
+     scraper.  The registry is pull-model — tier counts are derived at
+     scrape time from counters dispatch already maintains — so the hot
+     path executes the same bytecode either way; the gate catches any
+     future "just one counter on the hot path" regression.
+
+  2. SENTRY — an injected regressed record (same key, newer, -50%
+     TFLOPS) must be flagged by ``check_supersessions``, must make
+     ``install_serving(sentry=...)`` refuse the swap (generation
+     unchanged), and must drive ``tunedb diff <old> <new>`` to a
+     non-zero exit.
+
+  3. ENDPOINT — a live StatusServer must answer /metrics (Prometheus
+     text with the serving-generation gauge) and /status (JSON carrying
+     per-tier counts, telemetry and plan metadata); the /status document
+     is saved under results/bench/ so CI uploads it as an artifact.
+"""
+
+from __future__ import annotations
+
+import json
+import tempfile
+import threading
+import time
+import urllib.request
+import warnings
+
+from repro.core.space import gemm_input
+from repro.core.tuner import clear_tuners
+from repro.kernels import dispatch
+from repro.tunedb import (RecordStore, TuneRecord, clear_store,
+                          clear_telemetry, get_telemetry, install_serving)
+from repro.tunedb.model import clear_models
+from repro.tunedb.obs import (RegressionSentry, StatusServer, get_registry,
+                              reset_metrics)
+
+from .common import RESULTS, save, table
+
+OVERHEAD_THRESHOLD = 0.02       # scraped-vs-quiet plan-probe cost ratio - 1
+# a real Prometheus pull lands every 15s; 250ms is 60x that.  The gate
+# compares best-block times — per-call instrumentation sneaking onto the
+# hot path slows EVERY block and trips it, while the discrete GIL slice a
+# concurrent scrape steals from an unlucky block does not (that cost is
+# reported separately as us/scrape against the real pull cadence)
+SCRAPE_INTERVAL_S = 0.25
+
+CFG = {"bm": 64, "bn": 128, "bk": 128, "k_unroll": 1, "k_split": 1,
+       "order": 0, "acc32": 1, "prefetch": 2}
+
+
+def _hot_serving_state():
+    """The E14 serving reality: 8 tuned shapes + 8 nearest-served ones."""
+    store = RecordStore()
+    tuned = [gemm_input(256 * (i + 1), 64, 1024) for i in range(8)]
+    for inputs in tuned:
+        store.add(TuneRecord(space="gemm", inputs=inputs, config=CFG,
+                             tflops=100.0, backend="sim"))
+    novel = [gemm_input(256 * (i + 1) + 48, 64, 1024) for i in range(8)]
+    hot = tuned + novel
+    tel = get_telemetry()
+    for inputs in hot:
+        tel.record("gemm", inputs, n=10)
+    install_serving(store=store)
+    return hot
+
+
+def _block_time(fn, iters: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+# ---------------------------------------------------------------------------
+# 1. metrics-on overhead over the E14 plan-probe path
+# ---------------------------------------------------------------------------
+
+def _bench_overhead(fast: bool) -> dict:
+    hot = _hot_serving_state()
+    # many short triplet blocks: the median ratio then has enough
+    # samples to hold steady under ambient machine noise
+    iters = 600 if fast else 3000
+    repeats = 15
+
+    def resolve_hot_set():
+        for inputs in hot:
+            dispatch._tuned_cfg("gemm", inputs)
+
+    # one scraper thread for the whole study, gated by an Event so quiet
+    # and scraped blocks can INTERLEAVE — clock-speed / machine-load drift
+    # then lands on both sides of the ratio instead of biasing one
+    active, stop = threading.Event(), threading.Event()
+    scrapes = 0
+
+    def scraper():
+        nonlocal scrapes
+        reg = get_registry()
+        while not stop.is_set():
+            if not active.wait(timeout=0.2):
+                continue
+            reg.render_prometheus()
+            scrapes += 1
+            time.sleep(SCRAPE_INTERVAL_S)
+
+    def timed(scraping: bool) -> float:
+        (active.set if scraping else active.clear)()
+        return _block_time(resolve_hot_set, iters)
+
+    th = threading.Thread(target=scraper, daemon=True)
+    th.start()
+    resolve_hot_set()                    # warm: promotes novel into the plan
+    ratios, aa = [], []
+    quiet_best = scraped_best = float("inf")
+    try:
+        # quiet / scraped / quiet triplets: the centered ratio cancels
+        # linear machine-load drift, and the two quiet blocks of each
+        # triplet give an A/A measurement of the box's OWN noise floor —
+        # the gate budget widens by it, so a loaded CI machine doesn't
+        # flake the gate while a genuine per-call regression (which
+        # inflates every triplet's ratio alike) still trips it
+        for _ in range(repeats):
+            q1, s, q2 = timed(False), timed(True), timed(False)
+            ratios.append(2.0 * s / (q1 + q2))
+            aa.append(abs(q2 / q1 - 1.0))
+            quiet_best = min(quiet_best, q1, q2)
+            scraped_best = min(scraped_best, s)
+    finally:
+        stop.set()
+        active.set()
+        th.join(5)
+    t_quiet = quiet_best / len(hot)
+    t_scraped = scraped_best / len(hot)
+    overhead = sorted(ratios)[len(ratios) // 2] - 1.0
+    noise = sorted(aa)[len(aa) // 2]
+    budget = OVERHEAD_THRESHOLD + 2.0 * noise
+
+    # the deterministic half of the gate: the pull-model claim itself.
+    # NO registry instrument may fire while the hot set resolves — any
+    # per-call inc()/set()/observe() is a regression regardless of what
+    # the clock says.
+    from repro.tunedb.obs import metrics as _metrics
+    calls = 0
+
+    def _counting(orig):
+        def wrapped(self, *a, **kw):
+            nonlocal calls
+            calls += 1
+            return orig(self, *a, **kw)
+        return wrapped
+
+    patched = [(_metrics.Counter, "inc"), (_metrics.Gauge, "set"),
+               (_metrics.Histogram, "observe")]
+    originals = [(c, n, getattr(c, n)) for c, n in patched]
+    try:
+        for cls, name, orig in originals:
+            setattr(cls, name, _counting(orig))
+        resolve_hot_set()
+    finally:
+        for cls, name, orig in originals:
+            setattr(cls, name, orig)
+    instrument_calls = calls
+
+    # the out-of-band cost a real puller pays, for the record
+    reg = get_registry()
+    scrape_s = _block_time(reg.render_prometheus, 50)
+
+    rows = [
+        {"path": "plan probe, no scraper", "us/call": f"{t_quiet*1e6:.2f}"},
+        {"path": f"plan probe + {SCRAPE_INTERVAL_S*1e3:.0f}ms scrape loop",
+         "us/call": f"{t_scraped*1e6:.2f}"},
+    ]
+    print(table(rows, ["path", "us/call"],
+                "E15 — dispatch cost under live metrics scraping"))
+    print(f"\nmetrics-on overhead {overhead:+.2%} over {scrapes} scrapes "
+          f"(gate <= {OVERHEAD_THRESHOLD:.0%} + 2x the {noise:.2%} A/A "
+          f"noise floor = {budget:.2%}); {instrument_calls} instrument "
+          f"calls on the hot path (gate: 0).  One exposition render costs "
+          f"{scrape_s*1e6:.0f}us ({scrape_s/15.0:.5%} of a 15s pull "
+          f"cadence)")
+    return {"quiet_us": t_quiet * 1e6, "scraped_us": t_scraped * 1e6,
+            "overhead": overhead, "noise": noise, "budget": budget,
+            "scrapes": scrapes, "scrape_us": scrape_s * 1e6,
+            "instrument_calls": instrument_calls,
+            "threshold": OVERHEAD_THRESHOLD,
+            "pass": overhead <= budget and instrument_calls == 0}
+
+
+# ---------------------------------------------------------------------------
+# 2. the regression sentry catches an injected regression
+# ---------------------------------------------------------------------------
+
+def _bench_sentry(tmp) -> dict:
+    from repro.tunedb.__main__ import main as tunedb_main
+
+    live = RecordStore(tmp / "live.jsonl")
+    live.add(TuneRecord(space="gemm", inputs=gemm_input(512, 16, 2048),
+                        config=CFG, tflops=80.0, backend="sim"))
+    st1 = install_serving(store=live)
+
+    # the injection: a newer record for the same key, half the throughput
+    live.add(TuneRecord(space="gemm", inputs=gemm_input(512, 16, 2048),
+                        config=dict(CFG, bm=128), tflops=40.0, backend="sim"))
+    sentry = RegressionSentry(noise_margin=0.10)
+    report = sentry.check_supersessions(
+        live, since_version=st1.plan.store_version)
+    flagged = (not report.ok) and len(report.regressions) == 1
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        st2 = install_serving(store=live, sentry=sentry)
+    refused = st2.generation == st1.generation
+
+    # the CLI path diffs two pristine generations of the same key
+    old = RecordStore(tmp / "old.jsonl")
+    old.add(TuneRecord(space="gemm", inputs=gemm_input(512, 16, 2048),
+                       config=CFG, tflops=80.0, backend="sim"))
+    new = RecordStore(tmp / "new.jsonl")
+    new.add(TuneRecord(space="gemm", inputs=gemm_input(512, 16, 2048),
+                       config=dict(CFG, bm=128), tflops=40.0, backend="sim"))
+    cli_exit = tunedb_main(["diff", str(tmp / "old.jsonl"),
+                            str(tmp / "new.jsonl")])
+
+    drop = report.regressions[0].drop if report.regressions else 0.0
+    print(f"\nsentry: injected -{drop:.0%} regression "
+          f"{'flagged' if flagged else 'MISSED'}, serving swap "
+          f"{'refused' if refused else 'PROMOTED (FAIL)'}, "
+          f"`tunedb diff` exit {cli_exit} (want 1)")
+    return {"flagged": flagged, "refused": refused, "drop": drop,
+            "diff_exit": cli_exit,
+            "pass": flagged and refused and cli_exit == 1}
+
+
+# ---------------------------------------------------------------------------
+# 3. status endpoint round-trip + CI snapshot artifact
+# ---------------------------------------------------------------------------
+
+def _bench_endpoint() -> dict:
+    server = StatusServer(port=0).start()
+    try:
+        with urllib.request.urlopen(server.url + "/metrics",
+                                    timeout=10) as resp:
+            metrics = resp.read().decode()
+        with urllib.request.urlopen(server.url + "/status",
+                                    timeout=10) as resp:
+            status = json.loads(resp.read().decode())
+    finally:
+        server.stop()
+    ok = ("tunedb_serving_generation" in metrics
+          and status.get("schema") == 1
+          and "tiers" in status and "telemetry" in status
+          and status["serving"]["plan"] is not None)
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    snap_path = RESULTS / "obs_status_snapshot.json"
+    snap_path.write_text(json.dumps(status, indent=1, sort_keys=True,
+                                    default=str))
+    gen = status["serving"]["generation"]
+    print(f"\nendpoint: /metrics {len(metrics.splitlines())} lines, "
+          f"/status generation {gen} "
+          f"({'PASS' if ok else 'FAIL'}); snapshot -> {snap_path}")
+    return {"metrics_lines": len(metrics.splitlines()),
+            "generation": gen, "snapshot": str(snap_path), "pass": ok}
+
+
+def run(fast: bool = True) -> dict:
+    clear_tuners()
+    clear_store()
+    clear_models()
+    clear_telemetry()
+    dispatch.reset_fallback_warnings()
+    reset_metrics()
+
+    overhead = _bench_overhead(fast)
+    # endpoint scrapes the hot serving state the overhead section installed
+    endpoint = _bench_endpoint()
+    clear_store()
+    clear_telemetry()
+    with tempfile.TemporaryDirectory() as td:
+        import pathlib
+        sentry = _bench_sentry(pathlib.Path(td))
+
+    ok = overhead["pass"] and sentry["pass"] and endpoint["pass"]
+    print(f"\nacceptance: overhead "
+          f"{'PASS' if overhead['pass'] else 'FAIL'} "
+          f"({overhead['overhead']:+.2%} <= {overhead['budget']:.2%}, "
+          f"{overhead['instrument_calls']} hot-path instrument calls), "
+          f"sentry {'PASS' if sentry['pass'] else 'FAIL'} "
+          f"(diff exit {sentry['diff_exit']}), "
+          f"endpoint {'PASS' if endpoint['pass'] else 'FAIL'}")
+    payload = {"overhead": overhead, "sentry": sentry,
+               "endpoint": endpoint, "pass": ok}
+    save("obs", payload)
+    clear_store()
+    clear_telemetry()
+    reset_metrics()
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -133,6 +133,41 @@ GATES: List[Gate] = [
             f"{_get(r, 'admission', 'regressions', default='?')} regressed)"),
     ),
     Gate(
+        file="obs",
+        name="metrics-on dispatch overhead <= 2% + A/A noise, 0 hot-path "
+             "instrument calls",
+        check=lambda r: _get(r, "overhead", "pass") is True,
+        detail=lambda r: (
+            f"{_get(r, 'overhead', 'overhead', default=1):+.2%} vs budget "
+            f"{_get(r, 'overhead', 'budget', default=0.02):.2%} "
+            f"(A/A noise {_get(r, 'overhead', 'noise', default=0):.2%}), "
+            f"{_get(r, 'overhead', 'instrument_calls', default='?')} "
+            f"instrument calls, one scrape "
+            f"{_get(r, 'overhead', 'scrape_us', default=0):.0f} us"),
+    ),
+    Gate(
+        file="obs",
+        name="regression sentry flags the injected regression and blocks "
+             "the swap",
+        check=lambda r: _get(r, "sentry", "pass") is True,
+        detail=lambda r: (
+            f"flagged={_get(r, 'sentry', 'flagged')}, "
+            f"refused={_get(r, 'sentry', 'refused')}, drop "
+            f"{_get(r, 'sentry', 'drop', default=0):.0%}, `tunedb diff` "
+            f"exit {_get(r, 'sentry', 'diff_exit', default='?')} (want 1)"),
+    ),
+    Gate(
+        file="obs",
+        name="status endpoint serves /metrics + /status and saves the "
+             "CI snapshot",
+        check=lambda r: _get(r, "endpoint", "pass") is True,
+        detail=lambda r: (
+            f"{_get(r, 'endpoint', 'metrics_lines', default=0)} metric "
+            f"lines, generation "
+            f"{_get(r, 'endpoint', 'generation', default='?')}, snapshot "
+            f"{_get(r, 'endpoint', 'snapshot', default='missing')}"),
+    ),
+    Gate(
         file="fleet",
         name="fleet-merged store record-equivalent to a serial session",
         check=lambda r: _get(r, "equivalence", "pass") is True,

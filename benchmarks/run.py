@@ -12,6 +12,8 @@ One benchmark per paper table/figure (DESIGN.md §8 experiment index):
   E13 fleet    — distributed tuning: 4-worker throughput + merge equivalence
   E14 dispatch — frozen dispatch plans: plan vs PR-4 resolution, indexed
                  nearest lookup, store-aware admission TFLOPS lift
+  E15 obs      — serving observability: metrics-on dispatch overhead,
+                 regression sentry, /metrics + /status endpoint snapshot
 
 Gate validation: ``python -m benchmarks.check_gates`` after a run.
 """
@@ -32,9 +34,9 @@ def main() -> None:
     fast = not args.full
 
     from . import (bench_conv, bench_dispatch, bench_fleet, bench_gemm,
-                   bench_kernels, bench_mlp, bench_model, bench_retune,
-                   bench_roofline, bench_sampler, bench_selection,
-                   bench_tunedb)
+                   bench_kernels, bench_mlp, bench_model, bench_obs,
+                   bench_retune, bench_roofline, bench_sampler,
+                   bench_selection, bench_tunedb)
     suites = {
         "sampler": lambda: bench_sampler.run(fast),
         "mlp": lambda: bench_mlp.run(fast),
@@ -49,6 +51,7 @@ def main() -> None:
         "retune": lambda: bench_retune.run(fast),
         "fleet": lambda: bench_fleet.run(fast),
         "dispatch": lambda: bench_dispatch.run(fast),
+        "obs": lambda: bench_obs.run(fast),
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     t_all = time.time()

@@ -29,10 +29,34 @@ def on_tpu() -> bool:
 
 # one warning per (reason, space): a degraded serving process says so once,
 # then keeps serving on the heuristic tier instead of spamming or crashing.
+# The latch only throttles the *log line* — every occurrence still counts
+# in the ``tunedb_dispatch_degraded_calls_total{reason,space}`` counter, so
+# a process quietly living on vendor heuristics is visible in /metrics
+# even though it warned exactly once.
 _WARNED: set = set()
+_DEGRADED_COUNTER = None        # bound lazily: obs must not import at startup
+
+
+def _count_degraded(reason: str, space: str) -> None:
+    global _DEGRADED_COUNTER
+    counter = _DEGRADED_COUNTER
+    if counter is None:
+        try:
+            from repro.tunedb.obs.metrics import get_registry
+        except Exception:       # obs unavailable: degrade silently
+            return
+        counter = _DEGRADED_COUNTER = lambda r, s: get_registry().counter(
+            "tunedb_dispatch_degraded_calls_total",
+            "dispatches served by the heuristic fallback tier",
+        ).inc(reason=r, space=s)
+    try:
+        counter(reason, space)
+    except Exception:           # observability must never block dispatch
+        pass
 
 
 def _warn_once(key: tuple, msg: str) -> None:
+    _count_degraded(str(key[0]), str(key[1]) if len(key) > 1 else "")
     if key not in _WARNED:
         _WARNED.add(key)
         warnings.warn(msg, RuntimeWarning, stacklevel=3)

@@ -51,6 +51,12 @@ def main() -> None:
     p.add_argument("--retune-min-gain", type=float, default=0.0,
                    help="skip epochs whose projected gain over the "
                         "nearest-record tier is below this fraction")
+    p.add_argument("--retune-sentry", type=float, default=None,
+                   help="regression-sentry noise margin gating each "
+                        "retune's serving swap (omit to disable)")
+    p.add_argument("--status-port", type=int, default=None,
+                   help="serve /metrics, /status and /plan from inside the "
+                        "engine on this port (0 = ephemeral)")
     args = p.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -73,7 +79,12 @@ def main() -> None:
         retune_cooldown_ticks=args.retune_cooldown_ticks,
         retune_max_sessions=args.retune_max_sessions,
         retune_window_s=args.retune_window,
-        retune_min_gain=args.retune_min_gain))
+        retune_min_gain=args.retune_min_gain,
+        retune_sentry=args.retune_sentry,
+        status_port=args.status_port))
+    if eng.status_server is not None:
+        print(f"status endpoint: {eng.status_server.url} "
+              f"(/metrics /status /plan)")
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab, args.prompt_len)
                for _ in range(args.requests)]

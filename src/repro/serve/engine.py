@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.backend import HBM_GBPS, PEAK_BF16_TFLOPS, PEAK_FP32_TFLOPS
 from repro.models import ModelConfig, decode_step, init_cache, prefill
 
 
@@ -69,6 +70,9 @@ class ServeConfig:
     retune_window_s: float = 600.0
     # skip epochs whose projected gain over the nearest-record tier is small
     retune_min_gain: float = 0.0
+    # regression-sentry noise margin gating each retune's serving swap
+    # (None disables the gate; see tunedb.obs.RegressionSentry)
+    retune_sentry: Optional[float] = None
     # append per-decode-tick wall seconds to Engine.tick_times (benchmarks
     # and the fleet acceptance test; off in production serving)
     record_tick_times: bool = False
@@ -80,22 +84,107 @@ class ServeConfig:
     # reused back-to-back (every queued request is still served; only the
     # admission ORDER changes, never correctness)
     admission: str = "fifo"
+    # -- observability (tunedb.obs) -------------------------------------------
+    # run a StatusServer (/metrics, /status, /plan) inside this engine on
+    # the given port; 0 binds an ephemeral port (Engine.status_server.port
+    # says which), None disables the endpoint
+    status_port: Optional[int] = None
 
 
-def _align(x: int, tile: int) -> float:
-    """Useful-work fraction of a block-quantized dim (ceil-padding waste)."""
-    if tile <= 0:
-        return 1.0
-    padded = -(-x // tile) * tile
-    return x / padded
+def _ceil_div(x: int, t: int) -> int:
+    return -(-x // t)
 
 
-# which input dim a config key block-tiles, per space: the analytic
-# alignment penalty a neighbor's config pays at a misaligned shape
-_BLOCK_KEYS: Dict[str, Dict[str, str]] = {
-    "gemm": {"M": "bm", "N": "bn", "K": "bk"},
-    "attention": {"Lq": "b_q", "Lkv": "b_kv"},
-}
+def _roofline_time_s(space: str, cfg: Mapping[str, int],
+                     inputs: Mapping[str, int]) -> Optional[float]:
+    """``max(compute, HBM)`` time estimate for ``cfg`` at ``inputs``.
+
+    A two-term roofline from the ``core.backend`` chip constants — peak
+    MXU TFLOPS for the dtype against HBM bandwidth — with the *block
+    schedule* charged the way the simulator charges it: compute covers the
+    ceil-padded grid (``gm*bm x gn*bn x gk*bk``), and A/B traffic counts
+    full blocks per grid step, so quantization waste inflates BOTH axes
+    while the exact-size output write pads neither.  Secondary effects
+    (MXU occupancy, DMA latency, launch overhead) cancel in the ratios the
+    admission floor takes, so they are deliberately left out.  Returns
+    ``None`` for spaces without a roofline model.
+    """
+    bits = int(inputs.get("dtype_bits", 16))
+    bpe = max(bits // 8, 1)
+    peak = (PEAK_BF16_TFLOPS if bits <= 16 else PEAK_FP32_TFLOPS) * 1e12
+    hbm = HBM_GBPS * 1e9
+    if space == "gemm":
+        m, n, k = int(inputs["M"]), int(inputs["N"]), int(inputs["K"])
+        bm = int(cfg.get("bm") or m)
+        bn = int(cfg.get("bn") or n)
+        bk = int(cfg.get("bk") or k)
+        mp = _ceil_div(m, bm) * bm
+        np_ = _ceil_div(n, bn) * bn
+        kp = _ceil_div(k, bk) * bk
+        t_c = 2.0 * mp * np_ * kp / peak
+        a_bytes = _ceil_div(n, bn) * mp * kp * bpe      # A slab per N step
+        b_bytes = _ceil_div(m, bm) * kp * np_ * bpe     # B slab per M step
+        out_bytes = m * n * bpe
+        t_m = (a_bytes + b_bytes + out_bytes) / hbm
+        return max(t_c, t_m)
+    if space == "attention":
+        b = int(inputs.get("B", 1))
+        hq = int(inputs.get("Hq", 1))
+        hkv = int(inputs.get("Hkv", hq))
+        lq, lkv = int(inputs["Lq"]), int(inputs["Lkv"])
+        d = int(inputs.get("D", 64))
+        frac = 0.5 if inputs.get("causal") else 1.0
+        bq = int(cfg.get("b_q") or lq)
+        bkv = int(cfg.get("b_kv") or lkv)
+        lqp = _ceil_div(lq, bq) * bq
+        lkvp = _ceil_div(lkv, bkv) * bkv
+        t_c = 4.0 * b * hq * lqp * lkvp * d * frac / peak
+        qo_bytes = 2 * b * hq * lq * d * bpe            # Q read + O write
+        kv_bytes = 2 * b * hkv * lkv * d * bpe
+        t_m = (qo_bytes + kv_bytes) / hbm
+        return max(t_c, t_m)
+    return None
+
+
+def _useful_flops(space: str, inputs: Mapping[str, int]) -> Optional[float]:
+    if space == "gemm":
+        return 2.0 * inputs["M"] * inputs["N"] * inputs["K"]
+    if space == "attention":
+        frac = 0.5 if inputs.get("causal") else 1.0
+        return (4.0 * inputs.get("B", 1) * inputs.get("Hq", 1)
+                * inputs["Lq"] * inputs["Lkv"] * inputs.get("D", 64) * frac)
+    return None
+
+
+def _roofline_floor(space: str, near, inputs: Mapping[str, int]) -> float:
+    """Projected TFLOPS of the nearest record's config at THIS shape.
+
+    Anchored on the record's measured number: the analytic roofline only
+    supplies the *ratio* between the config's throughput at the query
+    shape and at the record's own shape, so chip-constant errors and every
+    shape-independent effect divide out.  Falls back to the raw recorded
+    TFLOPS (no penalty, the conservative choice) when the space has no
+    roofline model.
+    """
+    t_q = _roofline_time_s(space, near.config, inputs)
+    t_r = _roofline_time_s(space, near.config, near.inputs)
+    u_q = _useful_flops(space, inputs)
+    u_r = _useful_flops(space, near.inputs)
+    if not t_q or not t_r or not u_q or not u_r:
+        return near.tflops
+    return near.tflops * (u_q / t_q) / (u_r / t_r)
+
+
+def _count_admission(space: str, decision: str) -> None:
+    """Padded-vs-native bucket decisions into the metrics registry."""
+    try:
+        from repro.tunedb.obs.metrics import get_registry
+        get_registry().counter(
+            "tunedb_admission_decisions_total",
+            "store-aware admission bucket outcomes").inc(
+                space=space, decision=decision)
+    except Exception:
+        pass    # observability never blocks admission
 
 
 class StoreAwareAdmission:
@@ -141,26 +230,21 @@ class StoreAwareAdmission:
             return dict(inputs), "exact"
         fp = state.fingerprint
         if store.contains(space, inputs, backend=fp):
+            _count_admission(space, "hit")
             return dict(inputs), "hit"    # already tuned: nothing to decide
         # the untuned floor: what the nearest-neighbor tier would deliver —
-        # its recorded TFLOPS discounted by the EXTRA block-quantization its
-        # config pays at THIS shape relative to its own (the recorded number
-        # already includes the waste at the record's shape, so only the
-        # ratio is new).  The penalty bites fully only when the kernel is
-        # compute-bound; absent boundedness data the exponent 0.5 splits
-        # the compute-bound (1.0) and memory/latency-bound (0.0) regimes —
-        # conservative enough not to pad away well-served shapes,
-        # aggressive enough to rescue badly quantized ones.
+        # its recorded TFLOPS rescaled by the compute/bandwidth roofline
+        # ratio between this shape and the record's own (see
+        # ``_roofline_floor``).  The record's measured number anchors the
+        # estimate; the roofline only says how much MORE (or less) block
+        # quantization its config pays here, on whichever axis — MXU peak
+        # or HBM bandwidth — actually bounds the kernel.  This replaces the
+        # blanket ``rel ** 0.5`` damping of PR 5, which split the regimes
+        # by fiat instead of deriving the boundedness from chip constants.
         floor = 0.0
         near = store.nearest(space, inputs, backend=fp, count=False)
         if near is not None:
-            floor = near.tflops
-            for dim, block_key in _BLOCK_KEYS.get(space, {}).items():
-                tile = near.config.get(block_key)
-                if tile and dim in inputs:
-                    rel = (_align(int(inputs[dim]), int(tile))
-                           / _align(int(near.inputs[dim]), int(tile)))
-                    floor *= rel ** 0.5
+            floor = _roofline_floor(space, near, inputs)
         best_rec, best_eff = None, floor
         # candidates come from the store's comparable-shape group (same
         # dim names + exact-match values), not a full-store scan — the
@@ -187,8 +271,10 @@ class StoreAwareAdmission:
                 best_rec, best_eff = rec, eff
         if best_rec is None:
             self.exact += 1
+            _count_admission(space, "exact")
             return dict(inputs), "exact"
         self.padded += 1
+        _count_admission(space, "padded")
         return dict(best_rec.inputs), "padded"
 
     # -- engine admission order -----------------------------------------------
@@ -332,6 +418,16 @@ class Engine:
         self._next_retune_tick = 0
         if serve_cfg.retune or serve_cfg.retune_fleet:
             self._init_controller(retune_tuners)
+        # in-process observability endpoint: /metrics, /status, /plan read
+        # the live serving state this engine just installed (plus its
+        # controller's retune history and fleet bus, when configured)
+        self.status_server = None
+        if serve_cfg.status_port is not None:
+            from repro.tunedb.obs import StatusServer
+            self.status_server = StatusServer(
+                port=serve_cfg.status_port,
+                controller=self.controller,
+                fleet=serve_cfg.retune_fleet).start()
 
     def _init_controller(self, retune_tuners: Optional[Dict[str, Any]]) -> None:
         """Close the loop in-process: drift-triggered sessions + hot-swap.
@@ -363,7 +459,8 @@ class Engine:
                 cooldown_ticks=sc.retune_cooldown_ticks,
                 max_sessions_per_window=sc.retune_max_sessions,
                 session_window_s=sc.retune_window_s,
-                min_gain=sc.retune_min_gain))
+                min_gain=sc.retune_min_gain,
+                sentry=sc.retune_sentry))
         self._next_retune_tick = sc.retune_interval
 
     def maybe_retune(self):

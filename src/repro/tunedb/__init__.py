@@ -20,8 +20,14 @@ The persistence backbone of the input-aware runtime:
                 atomic store/ModelSet hot-swap: the loop closed in-process
   fleet/        distributed tuning: filesystem lease protocol, coordinator,
                 sharded workers (``<store>.shards/<worker_id>.jsonl``)
+  obs/          serving observability: process-wide metrics registry
+                (lock-free per-thread shards), the /metrics + /status +
+                /plan StatusServer, the shared status_snapshot serializer,
+                and the RegressionSentry gating promotions at
+                install_serving / fleet merge / ``tunedb diff``
   __main__.py   ``python -m repro.tunedb`` tune / train / predict / models /
-                retune / watch / fleet / stats / export / merge CLI
+                retune / watch / fleet / stats / serve-status / diff /
+                export / merge CLI
 
 The loop, continuous since PR 3: dispatch records every kernel call's shape
 (and the serving engine replays jit-compiled shapes per decode tick) -> the
@@ -56,6 +62,8 @@ __all__ = [
     "RetuneConfig", "RetuneController", "RetuneReport", "SpaceDecision",
     "Coordinator", "FleetDir", "FleetJob", "FleetReport", "Worker",
     "WorkerReport", "run_fleet_inline",
+    "MetricsRegistry", "RegressionSentry", "SentryReport", "StatusServer",
+    "get_registry", "reset_metrics", "status_snapshot", "plan_snapshot",
 ]
 
 _SESSION_NAMES = ("TuningSession", "TuneJob", "SessionReport",
@@ -67,6 +75,9 @@ _CONTROLLER_NAMES = ("RetuneConfig", "RetuneController", "RetuneReport",
                      "SpaceDecision")
 _FLEET_NAMES = ("Coordinator", "FleetDir", "FleetJob", "FleetReport",
                 "Worker", "WorkerReport", "run_fleet_inline")
+_OBS_NAMES = ("MetricsRegistry", "RegressionSentry", "SentryReport",
+              "StatusServer", "get_registry", "reset_metrics",
+              "status_snapshot", "plan_snapshot")
 
 
 def __getattr__(name):
@@ -88,4 +99,8 @@ def __getattr__(name):
         from . import fleet
 
         return getattr(fleet, name)
+    if name in _OBS_NAMES:
+        from . import obs
+
+        return getattr(obs, name)
     raise AttributeError(name)

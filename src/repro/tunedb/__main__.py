@@ -52,7 +52,9 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import pathlib
 import sys
+import time
 from typing import Dict, List, Optional
 
 from .store import RecordStore
@@ -511,6 +513,25 @@ def _cmd_fleet_worker(args: argparse.Namespace) -> int:
 def _cmd_fleet_status(args: argparse.Namespace) -> int:
     from .fleet import FleetDir
 
+    if getattr(args, "json", False) or getattr(args, "watch", False):
+        # the /status schema off the bus: same serializer as the endpoint
+        from .obs import status_snapshot
+        polls = 0
+        while True:
+            snap = status_snapshot(fleet=args.fleet)
+            if args.watch:
+                _print_fleet_line(snap)
+            else:
+                print(json.dumps(snap, indent=1, sort_keys=True,
+                                 default=str))
+            polls += 1
+            if not args.watch or (args.max_polls and polls >= args.max_polls):
+                return 0
+            try:
+                time.sleep(args.interval)
+            except KeyboardInterrupt:
+                return 0
+
     fleet = FleetDir(args.fleet)
     out = fleet.status()
     report = fleet.root / "report.json"
@@ -518,6 +539,21 @@ def _cmd_fleet_status(args: argparse.Namespace) -> int:
         out["report"] = json.loads(report.read_text())
     print(json.dumps(out, indent=1, sort_keys=True))
     return 0
+
+
+def _print_fleet_line(snap: Dict) -> None:
+    """One compact --watch line from the shared snapshot schema."""
+    fleet = snap.get("fleet") or {}
+    counts = fleet.get("counts") or {}
+    report = fleet.get("report") or {}
+    shards = fleet.get("shard_records") or {}
+    print(f"[fleet] queue={counts.get('queue', 0)} "
+          f"leases={counts.get('leases', 0)} done={counts.get('done', 0)} "
+          f"failed={counts.get('failed', 0)} "
+          f"shard_records={sum(shards.values())} "
+          f"merged={report.get('merged_records', 0)} "
+          f"sentry_blocked={report.get('sentry_blocked', 0)} "
+          f"draining={bool(fleet.get('draining'))}", flush=True)
 
 
 def _cmd_fleet_drain(args: argparse.Namespace) -> int:
@@ -555,11 +591,104 @@ def _cmd_models(args: argparse.Namespace) -> int:
 
 
 def _cmd_stats(args: argparse.Namespace) -> int:
-    out = {"store": RecordStore.open(args.store).stats()}
+    store = RecordStore.open(args.store)
+    telemetry = None
     if args.telemetry and os.path.exists(args.telemetry):
-        out["telemetry"] = ShapeTelemetry.load(args.telemetry).stats()
-    print(json.dumps(out, indent=1, sort_keys=True))
+        telemetry = ShapeTelemetry.load(args.telemetry)
+    if getattr(args, "json", False):
+        # the /status schema, exactly: one serializer for CLI and HTTP
+        from .obs import status_snapshot
+        out = status_snapshot(store=store, telemetry=telemetry)
+    else:
+        out = {"store": store.stats()}
+        if telemetry is not None:
+            out["telemetry"] = telemetry.stats()
+    print(json.dumps(out, indent=1, sort_keys=True, default=str))
     return 0
+
+
+def _cmd_serve_status(args: argparse.Namespace) -> int:
+    from .obs import StatusServer
+    from .store import install_serving
+
+    store = telemetry = None
+    if args.store and os.path.exists(args.store):
+        store = RecordStore.open(args.store)
+        # make the store the process's serving state so the /metrics
+        # collectors and /plan see it exactly like an engine would
+        install_serving(store=store, fingerprint=args.backend)
+    if args.telemetry and os.path.exists(args.telemetry):
+        telemetry = ShapeTelemetry.load(args.telemetry)
+    server = StatusServer(host=args.host, port=args.port, store=store,
+                          telemetry=telemetry, fleet=args.fleet).start()
+    print(f"[tunedb] status endpoint on {server.url} "
+          f"(/metrics /status /plan) — Ctrl-C to stop")
+    try:
+        while True:
+            time.sleep(3600)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.stop()
+    return 0
+
+
+def _load_generation(path: str):
+    """A diffable generation: a store JSONL, or a /plan JSON snapshot.
+
+    Returns ("store", RecordStore) or ("plan", dict)."""
+    with open(path, "r", encoding="utf-8") as fh:
+        head = fh.read(4096).lstrip()
+    if head.startswith("{"):
+        try:
+            doc = json.loads(pathlib.Path(path).read_text())
+        except ValueError:
+            doc = None
+        if isinstance(doc, dict) and "entries" in doc:
+            return "plan", doc
+    return "store", RecordStore.open(path)
+
+
+def _cmd_diff(args: argparse.Namespace) -> int:
+    from .obs import RegressionSentry
+
+    sentry = RegressionSentry(noise_margin=args.margin)
+    old_kind, old = _load_generation(args.old)
+    new_kind, new = _load_generation(args.new)
+    if old_kind != new_kind:
+        print(f"[tunedb] cannot diff a {old_kind} against a {new_kind}",
+              file=sys.stderr)
+        return 2
+    if old_kind == "plan":
+        report = sentry.diff_plans(old, new)
+    else:
+        report = sentry.diff_stores(old, new)
+    if args.json:
+        print(json.dumps(report.to_dict(), indent=1, sort_keys=True))
+    else:
+        print(f"[tunedb] diff {args.old} -> {args.new}: "
+              f"{report.checked} shared key(s) checked, "
+              f"{report.improved} improved, {report.unchanged} unchanged, "
+              f"{report.added} added, {report.removed} removed "
+              f"(noise margin {report.noise_margin:.0%})")
+        for reg in report.regressions:
+            if reg.old_tflops > 0:
+                print(f"[tunedb]   REGRESSED {reg.space} "
+                      f"{_fmt_inputs(reg.inputs)} [{reg.backend}]: "
+                      f"{reg.old_tflops:.2f} -> {reg.new_tflops:.2f} "
+                      f"TFLOPS (-{reg.drop:.0%})")
+            else:
+                print(f"[tunedb]   DROPPED {reg.space} "
+                      f"{_fmt_inputs(reg.inputs)}: planned entry missing "
+                      f"from the new generation")
+        verdict = "OK" if report.ok else \
+            f"{len(report.regressions)} regression(s)"
+        print(f"[tunedb] verdict: {verdict}")
+    return 0 if report.ok else 1
+
+
+def _fmt_inputs(inputs) -> str:
+    return ",".join(f"{k}={v}" for k, v in sorted(inputs.items()))
 
 
 def _cmd_export(args: argparse.Namespace) -> int:
@@ -757,6 +886,15 @@ def build_parser() -> argparse.ArgumentParser:
 
     fst = fsub.add_parser("status", help="print fleet state as JSON")
     fst.add_argument("--fleet", required=True)
+    fst.add_argument("--json", action="store_true",
+                     help="emit the full /status snapshot schema (the "
+                          "same serializer the HTTP endpoint uses)")
+    fst.add_argument("--watch", action="store_true",
+                     help="poll the bus and print one progress line per "
+                          "--interval seconds (Ctrl-C to stop)")
+    fst.add_argument("--interval", type=float, default=2.0)
+    fst.add_argument("--max-polls", type=int, default=0,
+                     help="stop --watch after N polls (0 = forever)")
     fst.set_defaults(fn=_cmd_fleet_status)
 
     fd = fsub.add_parser("drain", help="stop the fleet once the queue empties")
@@ -769,7 +907,35 @@ def build_parser() -> argparse.ArgumentParser:
     s = sub.add_parser("stats", help="print store/telemetry statistics")
     s.add_argument("--store", default=DEFAULT_STORE)
     s.add_argument("--telemetry", default=None)
+    s.add_argument("--json", action="store_true",
+                   help="emit the full /status snapshot schema (the same "
+                        "serializer the HTTP endpoint uses)")
     s.set_defaults(fn=_cmd_stats)
+
+    ss = sub.add_parser(
+        "serve-status",
+        help="HTTP observability endpoint: /metrics, /status, /plan")
+    ss.add_argument("--store", default=DEFAULT_STORE)
+    ss.add_argument("--telemetry", default=None)
+    ss.add_argument("--fleet", default=None,
+                    help="include this fleet bus in /status")
+    ss.add_argument("--backend", default=None,
+                    help="pin the installed serving view to one fingerprint")
+    ss.add_argument("--host", default="127.0.0.1")
+    ss.add_argument("--port", type=int, default=9177)
+    ss.set_defaults(fn=_cmd_serve_status)
+
+    d = sub.add_parser(
+        "diff",
+        help="regression sentry: compare two store (or /plan snapshot) "
+             "generations; exit 1 when the new one regresses")
+    d.add_argument("old", help="baseline store JSONL or /plan JSON")
+    d.add_argument("new", help="candidate store JSONL or /plan JSON")
+    d.add_argument("--margin", type=float, default=0.10,
+                   help="noise margin: flag only records slower than "
+                        "old*(1-margin) (default 0.10)")
+    d.add_argument("--json", action="store_true")
+    d.set_defaults(fn=_cmd_diff)
 
     e = sub.add_parser("export", help="compact a store (latest per shape)")
     e.add_argument("--store", default=DEFAULT_STORE)

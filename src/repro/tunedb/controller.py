@@ -53,6 +53,7 @@ small to pay for a session.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import logging
 import threading
@@ -77,6 +78,9 @@ def _default_tuner_factory(space_name: str):
     return InputAwareTuner.train(
         SPACES[space_name], n_samples=4000, hidden=(32, 64, 32), epochs=12,
         backend=SimulatedTPUBackend(noise=0.02), seed=0)
+
+
+HISTORY_CAP = 64        # retune-history entries kept for /status
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,6 +110,12 @@ class RetuneConfig:
     # (0 = tune whenever triggered).  Shapes with no record AND no model
     # prediction count as unbounded gain: nothing serves them today.
     min_gain: float = 0.0
+    # regression-sentry noise margin gating the end-of-epoch serving swap:
+    # None disables; a float arms a RegressionSentry(noise_margin=sentry)
+    # so an epoch whose supersessions regress a serving record beyond the
+    # margin is reported and REFUSED instead of installed (the blocked
+    # epoch shows up in stats()["sentry_blocked"] and the retune history).
+    sentry: Optional[float] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -190,7 +200,11 @@ class RetuneController:
         self.epoch = 0
         self.checks = 0                      # polls (triggered or not)
         self.retunes = 0                     # epochs that actually retuned
+        self.sentry_blocked = 0              # swaps refused by the sentry
         self.last_report: Optional[RetuneReport] = None
+        # bounded per-epoch history for /status and `stats --json`
+        self.history: collections.deque = collections.deque(
+            maxlen=HISTORY_CAP)
         # async state: at most one in-flight background epoch
         self._async: Optional[threading.Thread] = None
         self._async_report: Optional[RetuneReport] = None
@@ -301,8 +315,24 @@ class RetuneController:
         """Detection only — no sessions, no swap, baseline untouched."""
         self.checks += 1
         fp = serving_state().fingerprint
-        return {space: self._decide(drift, fp)
-                for space, drift in self.telemetry.diff(self._baseline).items()}
+        decisions = {
+            space: self._decide(drift, fp)
+            for space, drift in self.telemetry.diff(self._baseline).items()}
+        try:        # publish the drift view every poll (control path)
+            from .obs.metrics import get_registry
+            reg = get_registry()
+            drift_g = reg.gauge("tunedb_drift_score",
+                                "telemetry TV-distance per space vs the "
+                                "epoch baseline")
+            mass_g = reg.gauge("tunedb_untuned_mass",
+                               "window traffic fraction on record-less "
+                               "shapes per space")
+            for space, d in decisions.items():
+                drift_g.set(d.drift, space=space)
+                mass_g.set(d.untuned_mass, space=space)
+        except Exception:
+            pass    # observability never blocks detection
+        return decisions
 
     # -- the loop -------------------------------------------------------------
     def _tuner_for(self, space: str):
@@ -602,6 +632,7 @@ class RetuneController:
                 epoch=self.epoch, generation=entry_state.generation,
                 decisions=decisions, sessions=sessions, retrained=[],
                 wall_s=time.time() - t0, mode=mode)
+            self._observe_epoch(self.last_report)
             return self.last_report
 
         fresh = None
@@ -639,22 +670,78 @@ class RetuneController:
                               if cur.models is not None else fresh)
                 if self.models_dir:
                     new_models.save(self.models_dir)
-            new_state = install_serving(store=self.store, models=new_models)
-            self.retunes += 1
+            sentry = None
+            if cfg.sentry is not None:
+                from .obs.sentry import RegressionSentry
+                sentry = RegressionSentry(noise_margin=cfg.sentry)
+            new_state = install_serving(store=self.store, models=new_models,
+                                        sentry=sentry)
+            if new_state.generation == cur.generation:
+                # the sentry refused the swap: the epoch's records stay in
+                # the store (a later, faster remeasure supersedes them) but
+                # the previous generation keeps serving
+                self.sentry_blocked += 1
+            else:
+                self.retunes += 1
         self._baseline = self.telemetry.snapshot()
         self.epoch += 1
         self.last_report = RetuneReport(
             epoch=self.epoch, generation=new_state.generation,
             decisions=decisions, sessions=sessions, retrained=retrained,
             wall_s=time.time() - t0, mode=mode)
+        self._observe_epoch(self.last_report)
         return self.last_report
 
     # -- reporting ------------------------------------------------------------
+    def _observe_epoch(self, report: RetuneReport) -> None:
+        """Append to the bounded history + publish the epoch's metrics.
+
+        Latency is submit→swap: for an async epoch the perf_counter window
+        the submit stamped (the fleet/background round-trip the ISSUE
+        cares about), for an inline epoch the epoch's own wall time.
+        """
+        tuned = [s for s, r in report.sessions.items()
+                 if getattr(r, "tuned", 0)]
+        latency = report.wall_s
+        if (self.async_submit_t is not None and self.async_done_t is not None
+                and self.async_done_t >= self.async_submit_t):
+            latency = self.async_done_t - self.async_submit_t
+        self.history.append({
+            "epoch": report.epoch,
+            "generation": report.generation,
+            "mode": report.mode,
+            "tuned": tuned,
+            "retrained": list(report.retrained),
+            "wall_s": report.wall_s,
+            "latency_s": latency,
+            "sentry_blocked": self.sentry_blocked,
+            "t": time.time(),
+        })
+        try:
+            from .obs.metrics import get_registry
+            reg = get_registry()
+            reg.counter("tunedb_retune_epochs_total",
+                        "controller epochs closed (tuned or not)").inc(
+                            mode=report.mode)
+            if tuned:
+                reg.counter("tunedb_retunes_total",
+                            "epochs that committed new tuning records").inc(
+                                mode=report.mode)
+                reg.histogram("tunedb_retune_latency_seconds",
+                              "retune submit->swap latency").observe(latency)
+            reg.gauge("tunedb_retune_sentry_blocked",
+                      "serving swaps refused by the regression sentry").set(
+                          self.sentry_blocked)
+        except Exception:
+            pass    # observability never blocks the retune loop
+
     def stats(self) -> Dict[str, object]:
         return {
             "epoch": self.epoch,
             "checks": self.checks,
             "retunes": self.retunes,
+            "sentry_blocked": self.sentry_blocked,
+            "history": list(self.history),
             "generation": serving_state().generation,
             "config": dataclasses.asdict(self.cfg),
             "async": {

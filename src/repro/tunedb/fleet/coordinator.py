@@ -31,6 +31,7 @@ import time
 from typing import Dict, Iterable, List, Mapping, Optional, Set, Tuple
 
 from ..store import RecordStore, SAMPLE_SOURCE, TuneRecord
+from ..obs.sentry import RegressionSentry
 from .lease import REPORT, FleetDir, FleetJob, _atomic_write
 
 MERGED = "merged"                       # per-shard merge-cursor directory
@@ -46,6 +47,7 @@ class FleetReport:
     requeued: int = 0                   # expiry reclaims observed this run
     merged_records: int = 0             # serving records folded into the store
     merged_samples: int = 0             # training samples folded in
+    sentry_blocked: int = 0             # shard records refused as regressions
     retrained: List[str] = dataclasses.field(default_factory=list)
     workers: List[str] = dataclasses.field(default_factory=list)
     wall_s: float = 0.0
@@ -66,7 +68,8 @@ class Coordinator:
 
     def __init__(self, fleet_dir: os.PathLike,
                  store: Optional[RecordStore] = None, *,
-                 lease_timeout_s: float = 30.0, max_attempts: int = 3):
+                 lease_timeout_s: float = 30.0, max_attempts: int = 3,
+                 sentry_margin: Optional[float] = None):
         self.fleet = FleetDir(fleet_dir)
         if store is not None:
             if store.path is None:
@@ -95,6 +98,12 @@ class Coordinator:
         self.requeued = 0
         self.merged_records = 0
         self.merged_samples = 0
+        # merge-time regression gate: a shard record that would supersede a
+        # FASTER serving record (beyond the margin) is refused before it
+        # reaches the parent store — None disables the gate
+        self.sentry = (None if sentry_margin is None
+                       else RegressionSentry(noise_margin=sentry_margin))
+        self.sentry_blocked = 0
         # (space, backend) pairs the merge touched — the retrain set
         self.affected: Set[Tuple[str, str]] = set()
         # shard sizes at the last merge: an unchanged file is not re-parsed
@@ -193,6 +202,30 @@ class Coordinator:
         self.merged_samples += n_samples
         return n_recs, n_samples
 
+    def _sentry_refuses(self, rec: TuneRecord) -> bool:
+        """Merge-time regression gate: True when ``rec`` would supersede a
+        faster serving record beyond the sentry's noise margin.  Training
+        samples pass (they never serve); refused records are counted and
+        published to the metrics registry but never reach the store."""
+        if self.sentry is None or rec.source == SAMPLE_SOURCE:
+            return False
+        cur = self.store._index.get((rec.backend, rec.key))
+        # created_at<=0 would be stamped "now" by add() — it WOULD supersede
+        if cur is None or (0 < rec.created_at < cur.created_at):
+            return False                 # no record displaced: nothing to gate
+        if not self.sentry.regresses(cur.tflops, rec.tflops):
+            return False
+        self.sentry_blocked += 1
+        try:
+            from ..obs.metrics import get_registry
+            get_registry().counter(
+                "tunedb_sentry_regressions_total",
+                "records flagged as regressed by the sentry").inc(
+                    where="merge")
+        except Exception:
+            pass
+        return True
+
     def _merge_pass(self, shard_dir) -> Tuple[int, int]:
         n_recs = n_samples = 0
         for shard_path in sorted(shard_dir.glob("*.jsonl")):
@@ -228,6 +261,8 @@ class Coordinator:
                         UnicodeDecodeError):
                     continue             # foreign garbage line: skipped
             for rec in fresh[skip:]:
+                if self._sentry_refuses(rec):
+                    continue             # consumed (cursor advances), refused
                 self.store.add(dataclasses.replace(rec,
                                                    merged_from=worker_id))
                 if rec.source == SAMPLE_SOURCE:
@@ -366,6 +401,7 @@ class Coordinator:
             failed=counts["failed"], requeued=self.requeued,
             merged_records=self.merged_records,
             merged_samples=self.merged_samples,
+            sentry_blocked=self.sentry_blocked,
             retrained=list(retrained or []), workers=workers,
             wall_s=wall_s,
             jobs_per_s=(counts["done"] / wall_s if wall_s > 0 else 0.0))
@@ -373,7 +409,29 @@ class Coordinator:
             _atomic_write(self.fleet.root / REPORT,
                           json.dumps(rep.to_dict(), indent=1,
                                      sort_keys=True))
+        self._publish_metrics(counts)
         return rep
+
+    def _publish_metrics(self, counts: Dict[str, int]) -> None:
+        """Shard-merge progress + queue state into the metrics registry."""
+        try:
+            from ..obs.metrics import get_registry
+            reg = get_registry()
+            jobs = reg.gauge("tunedb_fleet_jobs",
+                             "fleet bus job counts by state")
+            for state in ("queue", "leases", "done", "failed"):
+                jobs.set(counts.get(state, 0), state=state)
+            merged = reg.gauge("tunedb_fleet_merged_records",
+                               "records folded into the parent store")
+            merged.set(self.merged_records, kind="serving")
+            merged.set(self.merged_samples, kind="sample")
+            reg.gauge("tunedb_fleet_requeued",
+                      "expiry reclaims observed this run").set(self.requeued)
+            reg.gauge("tunedb_fleet_sentry_blocked",
+                      "shard records refused by the merge sentry").set(
+                          self.sentry_blocked)
+        except Exception:
+            pass    # observability never blocks the fleet loop
 
 
 def run_fleet_inline(fleet_dir: os.PathLike, store: RecordStore,

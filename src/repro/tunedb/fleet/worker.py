@@ -159,6 +159,7 @@ class Worker:
                 max_attempts=int(self._manifest.get("max_attempts", 3)))
             self.report.failed += 1
             self.report.errors.append(f"{job.job_id}: {err} ({outcome})")
+            self._count_outcome("failed")
             return False
         ok = self.fleet.complete(job, lease_path, {
             "worker_id": self.worker_id, "tflops": rec.tflops,
@@ -170,7 +171,21 @@ class Worker:
                       f"-> {rec.tflops:.1f} TFLOPS")
         else:
             self.report.lost += 1
+        self._count_outcome("tuned" if ok else "lost")
         return ok
+
+    def _count_outcome(self, outcome: str) -> None:
+        """Per-process worker throughput into the metrics registry (thread
+        workers share the coordinator's registry; process workers export
+        their own if they ever grow a scrape endpoint)."""
+        try:
+            from ..obs.metrics import get_registry
+            get_registry().counter(
+                "tunedb_worker_jobs_total",
+                "fleet jobs finished by workers in this process").inc(
+                    outcome=outcome)
+        except Exception:
+            pass
 
     # -- the loop --------------------------------------------------------------
     def run(self, *, max_jobs: Optional[int] = None,

@@ -1,0 +1,44 @@
+"""Serving observability: metrics registry, status endpoint, sentry.
+
+The layer every subsystem from PRs 1–5 publishes into and every dashboard
+reads out of:
+
+``metrics``
+    Process-wide :class:`MetricsRegistry` — counters/gauges with lock-free
+    per-thread shards, ring-buffer-quantile histograms, and scrape-time
+    collectors over the serving stack's existing counters (so the dispatch
+    hot path stays untouched).  Prometheus text + JSON rendering.
+
+``snapshot``
+    :func:`status_snapshot` / :func:`plan_snapshot` — the ONE serializer
+    behind ``/status``, ``/plan``, ``tunedb stats --json`` and
+    ``tunedb fleet status --json``.
+
+``server``
+    :class:`StatusServer` — stdlib HTTP endpoint (``/metrics``,
+    ``/status``, ``/plan``); embedded in ``Engine`` via
+    ``ServeConfig(status_port=...)`` or run standalone with
+    ``python -m repro.tunedb serve-status``.
+
+``sentry``
+    :class:`RegressionSentry` — generation diffs that gate promotion at
+    ``install_serving``, ``Coordinator`` merge, and the ``tunedb diff``
+    CLI: a record slower than the one it replaces beyond the noise margin
+    is reported and refused, never silently frozen into the next plan.
+"""
+
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      get_registry, reset_metrics)
+from .sentry import (DEFAULT_NOISE_MARGIN, Regression, RegressionSentry,
+                     SentryReport, last_report)
+from .server import StatusServer
+from .snapshot import plan_snapshot, status_snapshot
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "get_registry", "reset_metrics",
+    "DEFAULT_NOISE_MARGIN", "Regression", "RegressionSentry", "SentryReport",
+    "last_report",
+    "StatusServer",
+    "plan_snapshot", "status_snapshot",
+]

@@ -1,0 +1,290 @@
+"""Generation-diff regression sentry: refuse to promote slower records.
+
+The tuning loop is optimistic by construction — a retune or a fleet merge
+*replaces* the serving record for a ``(backend, space, shape)`` key with
+whatever newer measurement arrives, and ``install_serving`` freezes the
+result into the next :class:`~repro.tunedb.store.DispatchPlan`.  Nothing in
+PRs 1–5 asked whether the replacement was actually *faster*.  One noisy
+worker or a drifted simulator is enough to regress a hot shape and have the
+plan lock the regression in for a whole generation.
+
+:class:`RegressionSentry` closes that hole at the three promotion edges:
+
+* ``tunedb diff <old> <new>`` — offline, record-by-record comparison of two
+  store files (or two ``/plan`` snapshots); exits non-zero on regressions.
+* ``install_serving(sentry=...)`` — the swap gate.  For a *new* store the
+  sentry diffs it against the currently-serving store; for an in-place
+  retune (same store object) it replays the store's supersession log since
+  the serving plan's pinned ``store_version``.  A regressed generation is
+  warned about, counted in the metrics registry, and **refused**: the
+  previous :class:`~repro.tunedb.store.ServingState` stays installed and
+  the caller sees an unchanged generation.
+* ``Coordinator(sentry_margin=...)`` — the merge gate: shard records that
+  would supersede a faster serving record are skipped (and counted) before
+  they ever reach the parent store.
+
+A record only counts as a regression when the newer record is slower than
+the one it replaces by more than ``noise_margin`` (default 10%) — repeated
+measurements of the same config jitter, and a sentry that cries wolf on
+noise would just get disabled.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+__all__ = [
+    "DEFAULT_NOISE_MARGIN", "Regression", "SentryReport", "RegressionSentry",
+    "last_report",
+]
+
+DEFAULT_NOISE_MARGIN = 0.10
+
+
+@dataclasses.dataclass(frozen=True)
+class Regression:
+    """One key whose replacement record is slower beyond the margin."""
+
+    space: str
+    backend: str
+    inputs: Dict[str, int]
+    old_tflops: float
+    new_tflops: float
+    old_config: Dict[str, int]
+    new_config: Dict[str, int]
+
+    @property
+    def drop(self) -> float:
+        """Fractional slowdown: 0.25 means the new record is 25% slower."""
+        if self.old_tflops <= 0:
+            return 0.0
+        return 1.0 - self.new_tflops / self.old_tflops
+
+    def to_dict(self) -> Dict[str, object]:
+        d = dataclasses.asdict(self)
+        d["drop"] = self.drop
+        return d
+
+
+@dataclasses.dataclass
+class SentryReport:
+    """Outcome of one sentry pass over a pair of generations."""
+
+    checked: int = 0
+    improved: int = 0
+    unchanged: int = 0
+    added: int = 0
+    removed: int = 0
+    noise_margin: float = DEFAULT_NOISE_MARGIN
+    regressions: List[Regression] = dataclasses.field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.regressions
+
+    def to_dict(self) -> Dict[str, object]:
+        return {
+            "checked": self.checked,
+            "improved": self.improved,
+            "unchanged": self.unchanged,
+            "added": self.added,
+            "removed": self.removed,
+            "noise_margin": self.noise_margin,
+            "ok": self.ok,
+            "regressions": [r.to_dict() for r in self.regressions],
+        }
+
+
+_LAST_REPORT: Optional[SentryReport] = None
+
+
+def last_report() -> Optional[SentryReport]:
+    """The most recent report produced by an install/merge gate — the
+    refused ``install_serving`` returns the old state, so callers that
+    need the *why* read it here."""
+    return _LAST_REPORT
+
+
+class RegressionSentry:
+    """Compares record generations and gates promotions.
+
+    ``noise_margin`` is the fractional slowdown tolerated before a
+    replacement is flagged: ``new < old * (1 - noise_margin)`` regresses.
+    """
+
+    def __init__(self, noise_margin: float = DEFAULT_NOISE_MARGIN) -> None:
+        if not 0.0 <= noise_margin < 1.0:
+            raise ValueError(f"noise_margin must be in [0, 1), "
+                             f"got {noise_margin}")
+        self.noise_margin = float(noise_margin)
+
+    # -- record-level checks ------------------------------------------------
+    def regresses(self, old_tflops: float, new_tflops: float) -> bool:
+        return new_tflops < old_tflops * (1.0 - self.noise_margin)
+
+    def check_record(self, old, new) -> Optional[Regression]:
+        """``old``/``new`` are :class:`~repro.tunedb.store.TuneRecord`-likes
+        for the same ``(backend, space, shape)`` key."""
+        if not self.regresses(old.tflops, new.tflops):
+            return None
+        return Regression(
+            space=new.space, backend=new.backend, inputs=dict(new.inputs),
+            old_tflops=old.tflops, new_tflops=new.tflops,
+            old_config=dict(old.config), new_config=dict(new.config))
+
+    # -- store-level diff ---------------------------------------------------
+    def diff_stores(self, old_store, new_store) -> SentryReport:
+        """Record-by-record diff of two stores on the shared serving keys.
+
+        Only *serving* records participate (training samples are never
+        promoted); keys present on one side only count as added/removed,
+        not regressions — the sentry guards replacements, not coverage.
+        """
+        report = SentryReport(noise_margin=self.noise_margin)
+        old_index = _serving_index(old_store)
+        new_index = _serving_index(new_store)
+        for key, new_rec in new_index.items():
+            old_rec = old_index.get(key)
+            if old_rec is None:
+                report.added += 1
+                continue
+            report.checked += 1
+            reg = self.check_record(old_rec, new_rec)
+            if reg is not None:
+                report.regressions.append(reg)
+            elif new_rec.tflops > old_rec.tflops:
+                report.improved += 1
+            else:
+                report.unchanged += 1
+        report.removed = sum(1 for key in old_index if key not in new_index)
+        return report
+
+    def check_supersessions(self, store, since_version: int) -> SentryReport:
+        """Replay the store's supersession log after ``since_version``.
+
+        This is the in-place path: a retune appends into the *serving*
+        store, so there is no second store to diff — but the store records
+        every index replacement (see ``RecordStore._admit``), and any
+        replacement since the serving plan was compiled is exactly the set
+        of records the next ``install_serving`` would freeze in.
+        """
+        report = SentryReport(noise_margin=self.noise_margin)
+        seen: Dict[Tuple, Regression] = {}
+        for sup in getattr(store, "supersessions", ()):
+            if sup.version <= since_version:
+                continue
+            report.checked += 1
+            reg = self.check_record(sup.old, sup.new)
+            key = (sup.new.backend, sup.new.key)
+            if reg is not None:
+                seen[key] = reg
+            else:
+                # a later good replacement clears an earlier regression
+                seen.pop(key, None)
+                if sup.new.tflops > sup.old.tflops:
+                    report.improved += 1
+                else:
+                    report.unchanged += 1
+        report.regressions = list(seen.values())
+        return report
+
+    # -- promotion gates ----------------------------------------------------
+    def check_install(self, cur_state, new_store) -> Optional[SentryReport]:
+        """Gate for ``install_serving``: returns a report when there is
+        something to compare, ``None`` when the sentry has no baseline."""
+        global _LAST_REPORT
+        if new_store is None:
+            return None
+        if cur_state.store is None:
+            return None
+        if new_store is cur_state.store:
+            plan = cur_state.plan
+            if plan is None:
+                return None
+            report = self.check_supersessions(
+                new_store, since_version=plan.store_version)
+        else:
+            report = self.diff_stores(cur_state.store, new_store)
+        _LAST_REPORT = report
+        return report
+
+    def blocks_install(self, cur_state, new_store) -> bool:
+        """True when the swap must be refused.  Warns and publishes
+        ``tunedb_sentry_*`` metrics as a side effect."""
+        report = self.check_install(cur_state, new_store)
+        if report is None or report.ok:
+            return False
+        import warnings
+
+        from .metrics import get_registry
+
+        reg = get_registry()
+        reg.counter("tunedb_sentry_regressions_total",
+                    "records flagged as regressed by the sentry").inc(
+                        len(report.regressions), where="install")
+        reg.counter("tunedb_sentry_blocked_total",
+                    "generation promotions refused by the sentry").inc(
+                        where="install")
+        worst = max(report.regressions, key=lambda r: r.drop)
+        warnings.warn(
+            f"regression sentry refused serving swap: "
+            f"{len(report.regressions)} regressed record(s) beyond "
+            f"{self.noise_margin:.0%} noise margin (worst: {worst.space} "
+            f"{worst.inputs} {worst.old_tflops:.1f}->{worst.new_tflops:.1f} "
+            f"TFLOP/s, -{worst.drop:.0%}); keeping previous generation",
+            RuntimeWarning, stacklevel=3)
+        return True
+
+    # -- plan-snapshot diff (coverage-level) --------------------------------
+    def diff_plans(self, old_plan: Dict, new_plan: Dict) -> SentryReport:
+        """Structural diff of two ``/plan`` JSON snapshots.
+
+        Plan entries carry configs but no measured TFLOP/s, so the sentry
+        checks *coverage*: a shape that was planned in ``old`` but is gone
+        from ``new`` (it will fall back to slower tiers) is flagged as a
+        regression with zeroed perf fields; config changes count as
+        checked/unchanged.
+        """
+        report = SentryReport(noise_margin=self.noise_margin)
+        old_entries = {_plan_key(e): e for e in old_plan.get("entries", [])}
+        new_entries = {_plan_key(e): e for e in new_plan.get("entries", [])}
+        for key, entry in old_entries.items():
+            new_entry = new_entries.get(key)
+            if new_entry is None:
+                report.removed += 1
+                report.regressions.append(Regression(
+                    space=entry.get("space", "?"),
+                    backend=old_plan.get("fingerprint", "?"),
+                    inputs=dict(entry.get("inputs", {})),
+                    old_tflops=0.0, new_tflops=0.0,
+                    old_config=dict(entry.get("config", {})),
+                    new_config={}))
+                continue
+            report.checked += 1
+            if new_entry.get("config") == entry.get("config"):
+                report.unchanged += 1
+            else:
+                report.improved += 1    # changed, perf unknowable offline
+        report.added = sum(1 for k in new_entries if k not in old_entries)
+        return report
+
+
+def _serving_index(store) -> Dict[Tuple, object]:
+    """``(backend, space, shape_key) -> latest serving record`` for a
+    :class:`RecordStore` — mirrors the store's own ``_admit`` policy."""
+    from ..store import SAMPLE_SOURCE
+
+    index: Dict[Tuple, object] = {}
+    for rec in store.records():         # latest-first: first seen wins,
+        if rec.source == SAMPLE_SOURCE:  # matching _admit's newest-wins
+            continue
+        key = (rec.backend, rec.key)
+        if key not in index:
+            index[key] = rec
+    return index
+
+
+def _plan_key(entry: Dict) -> Tuple:
+    return (entry.get("space"),
+            tuple(sorted((entry.get("inputs") or {}).items())))

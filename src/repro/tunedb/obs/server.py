@@ -1,0 +1,138 @@
+"""``serve-status``: a stdlib HTTP endpoint over the observability layer.
+
+Three routes, all read-only:
+
+* ``/metrics`` — Prometheus text exposition (scrape target).
+* ``/status``  — the JSON document from :func:`~.snapshot.status_snapshot`.
+* ``/plan``    — the active :class:`DispatchPlan` table
+  (:func:`~.snapshot.plan_snapshot`), save-able and diffable with
+  ``tunedb diff``.
+* ``/healthz`` — liveness probe, always ``ok``.
+
+The server is a ``ThreadingHTTPServer`` on a daemon thread: scrapes ride
+their own threads and never block serving, and an abandoned server dies
+with the process.  ``port=0`` binds an ephemeral port (tests, and the
+default for ``ServeConfig.status_port=0``); the bound port is ``.port``
+after :meth:`StatusServer.start`.
+
+Run standalone against a store file::
+
+    python -m repro.tunedb serve-status --store tunedb.jsonl --port 9177
+
+or inside a serving process via ``ServeConfig(status_port=...)``.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional
+
+from .metrics import get_registry
+from .snapshot import plan_snapshot, status_snapshot
+
+__all__ = ["StatusServer"]
+
+
+class StatusServer:
+    """Owns the HTTP server lifecycle and the snapshot context.
+
+    ``controller`` / ``fleet`` / ``store`` / ``telemetry`` are optional
+    context handles threaded into every ``/status`` build; whatever is
+    omitted falls back to the process's live serving state, so an Engine
+    only needs to pass its controller.
+    """
+
+    def __init__(self, *, host: str = "127.0.0.1", port: int = 0,
+                 controller=None, fleet: Optional[str] = None,
+                 store=None, telemetry=None, models=None) -> None:
+        self.host = host
+        self.port = port
+        self.controller = controller
+        self.fleet = fleet
+        self.store = store
+        self.telemetry = telemetry
+        self.models = models
+        self._httpd: Optional[ThreadingHTTPServer] = None
+        self._thread: Optional[threading.Thread] = None
+
+    # -- payload builders (also used directly by tests/benchmarks) ---------
+    def metrics_text(self) -> str:
+        return get_registry().render_prometheus()
+
+    def status_json(self) -> dict:
+        return status_snapshot(store=self.store, telemetry=self.telemetry,
+                               controller=self.controller, fleet=self.fleet,
+                               models=self.models)
+
+    def plan_json(self) -> dict:
+        return plan_snapshot()
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> "StatusServer":
+        if self._httpd is not None:
+            return self
+        server = self
+
+        class _Handler(BaseHTTPRequestHandler):
+            def do_GET(self) -> None:       # noqa: N802 (http.server API)
+                path = self.path.split("?", 1)[0].rstrip("/") or "/"
+                try:
+                    if path == "/metrics":
+                        body = server.metrics_text().encode()
+                        ctype = "text/plain; version=0.0.4; charset=utf-8"
+                    elif path in ("/status", "/"):
+                        body = (json.dumps(server.status_json(), indent=1,
+                                           sort_keys=True, default=str)
+                                + "\n").encode()
+                        ctype = "application/json"
+                    elif path == "/plan":
+                        body = (json.dumps(server.plan_json(), indent=1,
+                                           sort_keys=True, default=str)
+                                + "\n").encode()
+                        ctype = "application/json"
+                    elif path == "/healthz":
+                        body, ctype = b"ok\n", "text/plain"
+                    else:
+                        self.send_error(404, "unknown route")
+                        return
+                except Exception as exc:    # surface, don't kill the thread
+                    self.send_error(500, f"snapshot failed: {exc}")
+                    return
+                self.send_response(200)
+                self.send_header("Content-Type", ctype)
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, *args) -> None:   # quiet by default
+                pass
+
+        self._httpd = ThreadingHTTPServer((self.host, self.port), _Handler)
+        self._httpd.daemon_threads = True
+        self.port = self._httpd.server_address[1]
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, name="tunedb-status",
+            daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        if self._httpd is not None:
+            self._httpd.shutdown()
+            self._httpd.server_close()
+            self._httpd = None
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def __enter__(self) -> "StatusServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

@@ -1,0 +1,172 @@
+"""One serializer for every status surface.
+
+``/status`` (HTTP), ``tunedb stats --json``, and ``tunedb fleet status
+--json`` all call :func:`status_snapshot` — there is exactly one place the
+schema lives, so dashboards written against the CLI output work unchanged
+against the endpoint (and vice versa).  Every section is present in every
+snapshot; a subsystem that is not running serializes to ``None`` rather
+than disappearing, so consumers never need existence checks.
+
+Schema (version 1)::
+
+    {
+      "schema": 1,
+      "serving":  {generation, fingerprint, store, models, plan} | nulls,
+      "tiers":    {counts per tier, "rates" per tier, "total"},
+      "telemetry": ShapeTelemetry.stats() | null,
+      "retune":   RetuneController.stats() (incl. "history") | null,
+      "fleet":    {FleetDir.status() + "report"} | null,
+      "metrics":  MetricsRegistry.snapshot(),
+    }
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+__all__ = ["SCHEMA_VERSION", "status_snapshot", "plan_snapshot"]
+
+SCHEMA_VERSION = 1
+
+PLAN_SNAPSHOT_CAP = 2000    # /plan entry cap: a plan can hold thousands
+
+
+def status_snapshot(*, store=None, telemetry=None, controller=None,
+                    fleet: Optional[str] = None, models=None,
+                    registry=None) -> Dict[str, object]:
+    """Build the shared status document.
+
+    With no arguments, reads the process's live serving state (what the
+    HTTP endpoint inside an :class:`~repro.serve.engine.Engine` does);
+    explicit ``store``/``telemetry``/``fleet`` override for the offline
+    CLIs that inspect a store file or a fleet bus from outside.
+    """
+    from ..store import serving_state
+    from ..telemetry import get_telemetry
+    from .metrics import get_registry
+
+    state = serving_state()
+    if store is None:
+        store = state.store
+    if models is None:
+        models = state.models
+    if telemetry is None:
+        telemetry = get_telemetry()
+    if registry is None:
+        registry = get_registry()
+    plan = state.plan
+
+    store_stats = store.stats() if store is not None else None
+    model_stats = models.stats() if models is not None else None
+    plan_stats = None
+    if plan is not None:
+        plan_stats = dict(plan.stats())
+        plan_stats["fingerprint"] = plan.fingerprint
+        plan_stats["store_version"] = plan.store_version
+
+    snapshot: Dict[str, object] = {
+        "schema": SCHEMA_VERSION,
+        "serving": {
+            "generation": state.generation,
+            "fingerprint": state.fingerprint,
+            "store": store_stats,
+            "models": model_stats,
+            "plan": plan_stats,
+        },
+        "tiers": _tier_rates(store, models, plan),
+        "telemetry": telemetry.stats() if telemetry is not None else None,
+        "retune": controller.stats() if controller is not None else None,
+        "fleet": _fleet_section(fleet) if fleet else None,
+        "metrics": registry.snapshot(),
+    }
+    return snapshot
+
+
+def _tier_rates(store, models, plan) -> Dict[str, object]:
+    """Per-tier resolution counts + hit-rate fractions.
+
+    Tier counts come from the counters each tier already maintains (plan
+    hits credit the originating tier's store/model counters too — see
+    ``_tuned_cfg`` — so store/model counts are the authoritative per-tier
+    totals and the plan's own hits are reported separately).
+    """
+    counts = {
+        "exact": getattr(store, "hits", 0) if store is not None else 0,
+        "nearest": getattr(store, "nearest_hits", 0)
+        if store is not None else 0,
+        "model": getattr(models, "hits", 0) if models is not None else 0,
+        "model_gated": getattr(models, "gated", 0)
+        if models is not None else 0,
+        "miss": getattr(store, "misses", 0) if store is not None else 0,
+    }
+    total = counts["exact"] + counts["nearest"] + counts["model"] \
+        + counts["miss"]
+    rates = {tier: (counts[tier] / total if total else 0.0)
+             for tier in ("exact", "nearest", "model", "miss")}
+    out: Dict[str, object] = {"counts": counts, "rates": rates,
+                              "total": total}
+    if plan is not None:
+        out["plan"] = {"hits": plan.hits, "misses": plan.misses}
+    return out
+
+
+def _fleet_section(fleet: str) -> Optional[Dict[str, object]]:
+    import json
+    from pathlib import Path
+
+    from ..fleet.lease import REPORT, FleetDir
+
+    root = Path(fleet)
+    if not root.exists():
+        return None
+    section: Dict[str, object] = dict(FleetDir(root).status())
+    report_path = root / REPORT
+    report = None
+    if report_path.exists():
+        try:
+            report = json.loads(report_path.read_text())
+        except (OSError, ValueError):
+            report = None
+    section["report"] = report
+    return section
+
+
+def plan_snapshot(plan=None, *, cap: int = PLAN_SNAPSHOT_CAP
+                  ) -> Dict[str, object]:
+    """The active :class:`DispatchPlan` as a JSON table (``/plan``).
+
+    Entries carry the shape, chosen config, resolving tier, and whether the
+    entry was compiled in (``built``) or frozen at serving time
+    (``promoted``).  Output is diffable by ``tunedb diff`` across
+    generations (coverage-level — plan entries carry no TFLOP/s).
+    """
+    from ..store import serving_state
+
+    if plan is None:
+        plan = serving_state().plan
+    if plan is None:
+        return {"generation": None, "fingerprint": None,
+                "store_version": None, "entries": [], "truncated": False}
+
+    entries: List[Dict[str, object]] = []
+    truncated = False
+    for origin, table in (("built", plan._table),
+                          ("promoted", plan._overlay)):
+        for (space, key), (config, tier) in list(table.items()):
+            if len(entries) >= cap:
+                truncated = True
+                break
+            entries.append({
+                "space": space,
+                "inputs": {k: v for k, v in key},
+                "config": dict(config),
+                "tier": tier,
+                "origin": origin,
+            })
+    return {
+        "generation": plan.generation,
+        "fingerprint": plan.fingerprint,
+        "store_version": plan.store_version,
+        "entries": entries,
+        "truncated": truncated,
+    }

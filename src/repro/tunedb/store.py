@@ -26,6 +26,7 @@ model.py) are kept in the training log but never enter the serving index.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import hashlib
 import json
@@ -34,7 +35,7 @@ import os
 import pathlib
 import threading
 import time
-from typing import Dict, List, Mapping, Optional, Tuple
+from typing import Deque, Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
@@ -126,6 +127,21 @@ class TuneRecord:
         return cls(**d)
 
 
+SUPERSESSION_CAP = 4096     # bounded like the plan overlay / nearest memos
+
+
+@dataclasses.dataclass(frozen=True)
+class Supersession:
+    """One serving-index replacement: at store ``version``, record ``new``
+    took over the ``(backend, key)`` slot from ``old``.  The regression
+    sentry replays these to audit an in-place generation before it is
+    frozen into a plan."""
+
+    version: int
+    old: TuneRecord
+    new: TuneRecord
+
+
 _MEMO_MISS = object()       # sentinel: None is a valid memoized outcome
 
 
@@ -185,6 +201,13 @@ class RecordStore:
         # lazily-built log2-bucketed neighbor index (see _nearest_index_for);
         # dropped on every add, rebuilt on the next un-memoized nearest()
         self._nearest_index: Optional[Dict[tuple, dict]] = None
+        # bounded log of serving-index replacements: each time add() swaps
+        # the record behind a (backend, key), the (version, old, new) pair
+        # lands here so the regression sentry can audit everything a future
+        # install_serving would freeze in (load-time replays are history,
+        # not promotions, and are not logged).
+        self.supersessions: Deque[Supersession] = collections.deque(
+            maxlen=SUPERSESSION_CAP)
         if self.path is not None and self.path.exists():
             self._load()
 
@@ -212,7 +235,8 @@ class RecordStore:
                 fh.seek(-1, os.SEEK_END)
                 self._needs_newline = fh.read(1) != b"\n"
 
-    def _admit(self, rec: TuneRecord) -> None:
+    def _admit(self, rec: TuneRecord) -> Optional[TuneRecord]:
+        """Index one record; returns the serving record it replaced, if any."""
         if self.path is None:
             # in-memory store: the JSONL *is* this list.  Disk-backed stores
             # re-read the file in training_records() instead of pinning the
@@ -220,16 +244,19 @@ class RecordStore:
             self._all.append(rec)
         if rec.source == SAMPLE_SOURCE:      # training data, never served
             self.n_samples += 1
-            return
+            return None
         k = rec.key
         self._history[k] = self._history.get(k, 0) + 1
         bk = (rec.backend, k)
+        replaced: Optional[TuneRecord] = None
         cur = self._index.get(bk)
         if cur is None or rec.created_at >= cur.created_at:
             self._index[bk] = rec
+            replaced = cur
         any_cur = self._latest.get(k)
         if any_cur is None or rec.created_at >= any_cur.created_at:
             self._latest[k] = rec
+        return replaced
 
     def add(self, rec: TuneRecord) -> TuneRecord:
         """Append one record (stamping created_at if unset) atomically."""
@@ -253,7 +280,10 @@ class RecordStore:
                     if self.fsync:
                         os.fsync(fh.fileno())
                 self.n_lines += 1
-            self._admit(rec)
+            replaced = self._admit(rec)
+            if replaced is not None:
+                self.supersessions.append(
+                    Supersession(version=self.version, old=replaced, new=rec))
         return rec
 
     def sync(self) -> None:
@@ -721,7 +751,8 @@ def install_generation() -> int:
 def install_serving(*, store: object = _KEEP, models: object = _KEEP,
                     fingerprint: object = _KEEP,
                     build_plan: bool = True,
-                    plan_hot_k: int = PLAN_HOT_K) -> ServingState:
+                    plan_hot_k: int = PLAN_HOT_K,
+                    sentry: object = None) -> ServingState:
     """Atomically swap any subset of the dispatcher's serving state.
 
     Every install starts a new generation: the reference flips in one
@@ -744,6 +775,15 @@ def install_serving(*, store: object = _KEEP, models: object = _KEEP,
     compiled, the build reruns against the fresh state — installs are rare
     enough that the retry is theoretical, and a half-published plan is
     never observable either way.
+
+    ``sentry`` (a :class:`~repro.tunedb.obs.RegressionSentry`, or any object
+    with ``blocks_install(cur_state, new_store)``) is the promotion gate:
+    before anything is compiled or swapped, the sentry diffs the incoming
+    store against the serving one (or replays the store's supersession log
+    for an in-place retune).  If the new generation regresses a serving
+    record beyond the noise margin, the install warns, publishes
+    ``tunedb_sentry_*`` metrics, and returns the CURRENT state unchanged —
+    callers detect the refusal by the unbumped ``generation``.
     """
     global _STATE
     while True:
@@ -751,6 +791,8 @@ def install_serving(*, store: object = _KEEP, models: object = _KEEP,
         new_store = cur.store if store is _KEEP else store
         new_models = cur.models if models is _KEEP else models
         new_fp = cur.fingerprint if fingerprint is _KEEP else fingerprint
+        if sentry is not None and sentry.blocks_install(cur, new_store):
+            return cur          # refused: previous generation stays live
         # invalidate BEFORE the plan compiles: resolutions memoized under
         # the old generation must not leak into the new plan's entries
         for obj in (new_store, new_models):
@@ -775,6 +817,18 @@ def install_serving(*, store: object = _KEEP, models: object = _KEEP,
         break
     from repro.kernels.dispatch import reset_fallback_warnings
     reset_fallback_warnings()
+    try:        # installs are rare: publishing generation metadata is cheap
+        from .obs.metrics import get_registry
+        reg = get_registry()
+        reg.counter("tunedb_installs_total",
+                    "serving-state swaps (new generations)").inc(
+                        planned="yes" if plan is not None else "no")
+        if plan is not None:
+            reg.gauge("tunedb_plan_built_entries",
+                      "entries compiled into the current plan").set(
+                          len(plan._table))
+    except Exception:
+        pass    # observability must never block an install
     return new
 
 
