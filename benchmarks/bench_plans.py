@@ -1,0 +1,286 @@
+"""E16 — golden plan artifacts: cold-start parity + fleet propagation.
+
+The PR-7 tentpole claim, gated two ways:
+
+  1. COLD START — a fresh process that installs a PERSISTED plan artifact
+     (``install_serving(plan_dir=)``: manifest schema-gated, entries
+     digest-verified, zero install-time model scans) must resolve the
+     steady-state hot set within 5% of the warm process that compiled the
+     plan itself — and resolve every shape to the IDENTICAL config.  The
+     artifact round trip may not cost anything where it matters: serving.
+
+  2. FLEET — a synthetic 3-replica serving fleet follows a coordinator
+     through several published plan generations (``PlanRegistry`` publish
+     -> ``PlanFollower`` pull/verify/swap).  Every replica must converge
+     to the final generation while concurrent readers observe ZERO torn
+     plans (every entry of a read plan carries the same generation
+     marker) and ZERO stale-generation installs (a replica's installed
+     generation never moves backwards).
+
+Timing noise note: both sides of gate 1 execute the identical lock-free
+table probe — only the table's provenance differs — so the ratio sits at
+~1.0 and the 5% bound is generous; the bench still retries a few times so
+an ambient-load spike cannot fail CI.
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+import threading
+import time
+from pathlib import Path
+
+from repro.core.space import gemm_input
+from repro.core.tuner import clear_tuners
+from repro.kernels import dispatch
+from repro.tunedb import (DispatchPlan, RecordStore, TuneRecord, clear_store,
+                          clear_telemetry, get_telemetry, install_serving,
+                          serving_state, shape_key)
+from repro.tunedb.model import clear_models
+from repro.tunedb.plans import PlanFollower, PlanRegistry, export_plan
+
+from .common import save, table
+
+COLD_WARM_THRESHOLD = 1.05      # cold resolution within 5% of warm
+REPLICAS = 3
+CFG = {"bm": 64, "bn": 128, "bk": 128, "k_unroll": 1, "k_split": 1,
+       "order": 0, "acc32": 1, "prefetch": 2}
+
+
+def _reset() -> None:
+    clear_tuners()
+    clear_store()
+    clear_models()
+    clear_telemetry()
+
+
+def _time_per_call(fn, iters: int) -> float:
+    fn()
+    best = float("inf")
+    for _ in range(3):              # best-of-3 against ambient noise
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / iters)
+    return best
+
+
+# ---------------------------------------------------------------------------
+# 1. cold start from a persisted artifact vs the warm compiling process
+# ---------------------------------------------------------------------------
+
+def _bench_cold_start(fast: bool, tmp: Path) -> dict:
+    _reset()
+    store_path = tmp / "store.jsonl"
+    store = RecordStore(store_path)
+    tuned = [gemm_input(256 * (i + 1), 64, 1024) for i in range(12)]
+    for inputs in tuned:
+        store.add(TuneRecord(space="gemm", inputs=inputs, config=CFG,
+                             tflops=100.0, backend="sim"))
+    novel = [gemm_input(256 * (i + 1) + 48, 64, 1024) for i in range(12)]
+    hot = tuned + novel
+    tel = get_telemetry()
+    for inputs in hot:
+        tel.record("gemm", inputs, n=10)
+
+    iters = 3000 if fast else 15000
+
+    def resolve_hot_set():
+        for inputs in hot:
+            dispatch._tuned_cfg("gemm", inputs)
+
+    # -- warm process: compile at install, export the golden artifact -------
+    t0 = time.perf_counter()
+    install_serving(store=store)
+    install_compile_ms = (time.perf_counter() - t0) * 1e3
+    warm_plan = serving_state().plan
+    warm_cfgs = {shape_key(i): dispatch._tuned_cfg("gemm", i) for i in hot}
+    plan_dir = export_plan(warm_plan, tmp / "store.jsonl.plan", store=store)
+
+    ratio = float("inf")
+    t_warm = t_cold = 0.0
+    attempts = 0
+    install_load_ms = 0.0
+    for attempts in range(1, 6):    # retry: ambient noise must not fail CI
+        install_serving(store=store)         # warm generation back in place
+        t_warm = _time_per_call(resolve_hot_set, iters) / len(hot)
+
+        # -- cold process: fresh store handle, plan LOADED not compiled ----
+        clear_store()
+        cold_store = RecordStore.open(store_path)
+        t0 = time.perf_counter()
+        install_serving(store=cold_store, plan_dir=plan_dir)
+        install_load_ms = (time.perf_counter() - t0) * 1e3
+        assert serving_state().plan.source == "loaded"
+        t_cold = _time_per_call(resolve_hot_set, iters) / len(hot)
+        ratio = t_cold / t_warm
+        if ratio <= COLD_WARM_THRESHOLD:
+            break
+
+    cold_cfgs = {shape_key(i): dispatch._tuned_cfg("gemm", i) for i in hot}
+    identical = cold_cfgs == warm_cfgs
+
+    rows = [
+        {"process": "warm (plan compiled at install)",
+         "us/call": f"{t_warm*1e6:.2f}", "install ms": "-"},
+        {"process": "cold (plan loaded from artifact)",
+         "us/call": f"{t_cold*1e6:.2f}",
+         "install ms": f"{install_load_ms:.1f}"},
+    ]
+    print(table(rows, ["process", "us/call", "install ms"],
+                "E16 — cold start from a golden plan artifact"))
+    print(f"\ncold/warm resolution ratio {ratio:.3f} "
+          f"(gate <= {COLD_WARM_THRESHOLD}); configs identical: "
+          f"{identical}; artifact install {install_load_ms:.1f} ms vs "
+          f"compile install {install_compile_ms:.1f} ms "
+          f"({attempts} timing attempt(s))")
+    _reset()
+    return {"warm_us": t_warm * 1e6, "cold_us": t_cold * 1e6,
+            "ratio": ratio, "identical_configs": identical,
+            "hot_shapes": len(hot), "attempts": attempts,
+            "install_load_ms": install_load_ms,
+            "install_compile_ms": install_compile_ms,
+            "threshold": COLD_WARM_THRESHOLD,
+            "pass": bool(ratio <= COLD_WARM_THRESHOLD and identical)}
+
+
+# ---------------------------------------------------------------------------
+# 2. synthetic 3-replica fleet: publish -> every replica swaps, never torn
+# ---------------------------------------------------------------------------
+
+class _Replica:
+    """One synthetic serving replica: a private atomically-swapped plan ref.
+
+    (Serving state is process-global, so the fleet is modeled with the
+    follower's injectable install target — the swap is the same single
+    reference assignment ``install_serving`` performs.)
+    """
+
+    def __init__(self, name: str):
+        self.name = name
+        self.installed = None           # (plan, generation), one ref
+        self.resolutions = 0
+        self.torn = 0
+        self.stale = 0
+        self._last_gen = 0
+
+    def install(self, plan, pointer) -> bool:
+        self.installed = (plan, int(pointer["generation"]))
+        return True
+
+    def current_plan(self):
+        got = self.installed
+        return got[0] if got else None
+
+    def read(self, shapes) -> None:
+        """One reader pass: every entry of the grabbed plan must carry the
+        SAME generation marker (torn check), and the installed generation
+        must never decrease (stale check)."""
+        got = self.installed
+        if got is None:
+            return
+        plan, gen = got
+        if gen < self._last_gen:
+            self.stale += 1
+        self._last_gen = max(self._last_gen, gen)
+        markers = set()
+        for inputs in shapes:
+            entry = plan.lookup("gemm", shape_key(inputs))
+            if entry is not None:
+                markers.add(entry[0]["g"])
+                self.resolutions += 1
+        if len(markers) > 1:            # mixed generations in one plan read
+            self.torn += 1
+
+
+def _make_plan(gen_marker: int, shapes) -> DispatchPlan:
+    tbl = {("gemm", shape_key(i)): (dict(CFG, g=gen_marker), "exact")
+           for i in shapes}
+    return DispatchPlan(generation=0, fingerprint="sim", store_version=-1,
+                        table=tbl)
+
+
+def _bench_fleet(fast: bool, tmp: Path) -> dict:
+    generations = 6 if fast else 12
+    shapes = [gemm_input(128 * (i + 1), 64, 512) for i in range(16)]
+    registry = PlanRegistry(tmp / "registry")
+
+    replicas = [_Replica(f"replica-{i}") for i in range(REPLICAS)]
+    followers = [PlanFollower(registry, poll_s=0.005, name=r.name,
+                              install=r.install, current_plan=r.current_plan)
+                 for r in replicas]
+    stop = threading.Event()
+
+    def reader(replica: _Replica) -> None:
+        while not stop.is_set():
+            replica.read(shapes)
+
+    readers = [threading.Thread(target=reader, args=(r,), daemon=True)
+               for r in replicas]
+    for f in followers:
+        f.start()
+    for t in readers:
+        t.start()
+
+    t0 = time.perf_counter()
+    for gen in range(1, generations + 1):   # the coordinator's retune loop
+        manifest = registry.publish(_make_plan(gen, shapes))
+        assert manifest.generation == gen
+        time.sleep(0.02)
+
+    deadline = time.time() + 30.0
+    while time.time() < deadline and any(
+            f.generation < generations for f in followers):
+        time.sleep(0.01)
+    wall_s = time.perf_counter() - t0
+    stop.set()
+    for t in readers:
+        t.join(timeout=5.0)
+    for f in followers:
+        f.stop()
+
+    converged = all(f.generation == generations for f in followers)
+    torn = sum(r.torn for r in replicas)
+    stale = sum(r.stale for r in replicas) + sum(
+        f.refused_stale for f in followers)
+    resolutions = sum(r.resolutions for r in replicas)
+    lag_s = max((f.lag_s or 0.0) for f in followers)
+
+    rows = [{"replica": r.name,
+             "generation": f.generation,
+             "installs": f.installs,
+             "resolutions": r.resolutions,
+             "torn": r.torn, "stale": r.stale}
+            for r, f in zip(replicas, followers)]
+    print(table(rows, ["replica", "generation", "installs", "resolutions",
+                       "torn", "stale"],
+                "E16 — 3-replica plan-following fleet"))
+    print(f"\n{generations} generations propagated to {REPLICAS} replicas "
+          f"in {wall_s:.2f}s (max publish->install lag {lag_s*1e3:.0f} ms); "
+          f"{resolutions} concurrent resolutions, {torn} torn, "
+          f"{stale} stale")
+    return {"generations": generations, "replicas": REPLICAS,
+            "converged": converged, "torn": torn, "stale": stale,
+            "resolutions": resolutions, "wall_s": wall_s,
+            "max_lag_s": lag_s,
+            "pass": bool(converged and torn == 0 and stale == 0
+                         and resolutions > 0)}
+
+
+def run(fast: bool = True) -> dict:
+    tmp = Path(tempfile.mkdtemp(prefix="bench_plans_"))
+    try:
+        resolution = _bench_cold_start(fast, tmp)
+        fleet = _bench_fleet(fast, tmp)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    out = {"resolution": resolution, "fleet": fleet,
+           "pass": bool(resolution["pass"] and fleet["pass"])}
+    save("plans", out)
+    print(f"\nE16 verdict: {'PASS' if out['pass'] else 'FAIL'}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -178,6 +178,34 @@ GATES: List[Gate] = [
             "provenance preserved="
             f"{_get(r, 'equivalence', 'provenance_preserved')}"),
     ),
+    Gate(
+        file="plans",
+        name="cold start from a persisted plan artifact resolves within 5% "
+             "of warm, identical configs",
+        check=lambda r: _get(r, "resolution", "pass") is True,
+        detail=lambda r: (
+            f"cold/warm {_get(r, 'resolution', 'ratio', default=9):.3f} vs "
+            f"{_get(r, 'resolution', 'threshold', default=1.05)} "
+            f"({_get(r, 'resolution', 'cold_us', default=0):.2f} vs "
+            f"{_get(r, 'resolution', 'warm_us', default=0):.2f} us/call, "
+            f"identical configs="
+            f"{_get(r, 'resolution', 'identical_configs')}, artifact "
+            f"install {_get(r, 'resolution', 'install_load_ms', default=0):.1f} ms)"),
+    ),
+    Gate(
+        file="plans",
+        name="3-replica fleet converges to the published generation with "
+             "zero torn/stale plan reads",
+        check=lambda r: _get(r, "fleet", "pass") is True,
+        detail=lambda r: (
+            f"converged={_get(r, 'fleet', 'converged')}, "
+            f"{_get(r, 'fleet', 'generations', default=0)} generations x "
+            f"{_get(r, 'fleet', 'replicas', default=0)} replicas, "
+            f"{_get(r, 'fleet', 'resolutions', default=0)} resolutions, "
+            f"torn={_get(r, 'fleet', 'torn', default='?')}, "
+            f"stale={_get(r, 'fleet', 'stale', default='?')}, max lag "
+            f"{_get(r, 'fleet', 'max_lag_s', default=0)*1e3:.0f} ms"),
+    ),
 ]
 
 

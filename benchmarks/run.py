@@ -14,6 +14,8 @@ One benchmark per paper table/figure (DESIGN.md §8 experiment index):
                  nearest lookup, store-aware admission TFLOPS lift
   E15 obs      — serving observability: metrics-on dispatch overhead,
                  regression sentry, /metrics + /status endpoint snapshot
+  E16 plans    — golden plan artifacts: cold-start-from-artifact resolution
+                 parity, 3-replica plan-following fleet (no torn/stale reads)
 
 Gate validation: ``python -m benchmarks.check_gates`` after a run.
 """
@@ -35,7 +37,7 @@ def main() -> None:
 
     from . import (bench_conv, bench_dispatch, bench_fleet, bench_gemm,
                    bench_kernels, bench_mlp, bench_model, bench_obs,
-                   bench_retune, bench_roofline, bench_sampler,
+                   bench_plans, bench_retune, bench_roofline, bench_sampler,
                    bench_selection, bench_tunedb)
     suites = {
         "sampler": lambda: bench_sampler.run(fast),
@@ -52,6 +54,7 @@ def main() -> None:
         "fleet": lambda: bench_fleet.run(fast),
         "dispatch": lambda: bench_dispatch.run(fast),
         "obs": lambda: bench_obs.run(fast),
+        "plans": lambda: bench_plans.run(fast),
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     t_all = time.time()

@@ -160,9 +160,9 @@ def _tuned_cfg(space_name: str, inputs: Mapping[str, int]
         return tuner.best_config(inputs, remeasure=False)
     state = _SERVING_STATE()
     store, models, fp = state.store, state.models, state.fingerprint
-    if store is None and models is None:
-        return None                      # untuned process: ops defaults
     plan = state.plan
+    if store is None and models is None and plan is None:
+        return None                      # untuned process: ops defaults
     key = None
     if plan is not None and (store is None
                              or store.version == plan.store_version):
@@ -176,7 +176,9 @@ def _tuned_cfg(space_name: str, inputs: Mapping[str, int]
             # earned on the slow path — including the exact-tier MISS a
             # model/nearest-served shape books there (store coverage must
             # not inflate just because the plan warmed up)
-            if tier == "exact":
+            if store is None:            # plan-only serving (golden artifact
+                pass                     # cold start): no store to credit
+            elif tier == "exact":
                 store.hits += 1
             elif tier == "nearest":
                 store.misses += 1

@@ -54,6 +54,19 @@ def main() -> None:
     p.add_argument("--retune-sentry", type=float, default=None,
                    help="regression-sentry noise margin gating each "
                         "retune's serving swap (omit to disable)")
+    p.add_argument("--plan-dir", default=None,
+                   help="cold-start from this persisted plan artifact "
+                        "(`tunedb plan export`) instead of compiling one "
+                        "at install time")
+    p.add_argument("--follow", default=None,
+                   help="plan registry directory to follow: each published "
+                        "generation is pulled, digest-verified, and "
+                        "hot-swapped into serving")
+    p.add_argument("--follow-interval", type=float, default=2.0,
+                   help="seconds between plan-registry polls")
+    p.add_argument("--retune-publish", default=None,
+                   help="plan registry directory each successful retune "
+                        "publishes its compiled plan to")
     p.add_argument("--status-port", type=int, default=None,
                    help="serve /metrics, /status and /plan from inside the "
                         "engine on this port (0 = ephemeral)")
@@ -81,6 +94,10 @@ def main() -> None:
         retune_window_s=args.retune_window,
         retune_min_gain=args.retune_min_gain,
         retune_sentry=args.retune_sentry,
+        plan_dir=args.plan_dir,
+        follow=args.follow,
+        follow_interval_s=args.follow_interval,
+        retune_publish=args.retune_publish,
         status_port=args.status_port))
     if eng.status_server is not None:
         print(f"status endpoint: {eng.status_server.url} "

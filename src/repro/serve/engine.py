@@ -73,6 +73,23 @@ class ServeConfig:
     # regression-sentry noise margin gating each retune's serving swap
     # (None disables the gate; see tunedb.obs.RegressionSentry)
     retune_sentry: Optional[float] = None
+    # -- golden plan artifacts (tunedb.plans; see docs/PLANS.md) --------------
+    # load a persisted plan artifact directory at startup instead of
+    # compiling one — the cold-start path that skips install-time model
+    # scans entirely; a torn/unverifiable artifact warns and degrades to a
+    # normal install-time compile
+    plan_dir: Optional[str] = None
+    # plan registry directory to FOLLOW: a PlanFollower daemon thread polls
+    # it and atomically hot-swaps each newly published generation into this
+    # engine's serving state (never a torn or stale-generation plan)
+    follow: Optional[str] = None
+    follow_interval_s: float = 2.0  # seconds between registry polls
+    # sentry noise margin for the follower's plan-coverage diff before a
+    # swap (None disables that refusal gate)
+    follow_sentry: Optional[float] = 0.10
+    # plan registry the retune controller publishes each successful swap's
+    # compiled plan to — the coordinator half of the follow protocol
+    retune_publish: Optional[str] = None
     # append per-decode-tick wall seconds to Engine.tick_times (benchmarks
     # and the fleet acceptance test; off in production serving)
     record_tick_times: bool = False
@@ -342,7 +359,7 @@ class Engine:
         self.tunedb_store = None
         self.tunedb_models = None
         self._models_dir = None
-        if serve_cfg.tunedb or serve_cfg.tunedb_models:
+        if serve_cfg.tunedb or serve_cfg.tunedb_models or serve_cfg.plan_dir:
             import pathlib
             import warnings
 
@@ -365,11 +382,12 @@ class Engine:
                         f"({self.tunedb_store.n_skipped} unreadable lines, 0 "
                         "records); serving degrades to heuristics",
                         RuntimeWarning, stacklevel=2)
-                install_store(self.tunedb_store,
-                              fingerprint=serve_cfg.tunedb_backend)
+                if serve_cfg.plan_dir is None:
+                    install_store(self.tunedb_store,
+                                  fingerprint=serve_cfg.tunedb_backend)
                 if models_dir is None:       # auto-discover next to the store
                     models_dir = default_models_dir(store_path)
-            else:
+            elif serve_cfg.plan_dir is None:
                 # models-only config: no store install runs, but the explicit
                 # backend pin must still take effect — otherwise the model
                 # tier serves the newest any-backend regressor (or a prior
@@ -384,11 +402,39 @@ class Engine:
             if len(models) or models.skipped:
                 self.tunedb_models = models
             self._models_dir = models_dir or None
-            # retarget the global model tier to THIS config's artifacts —
-            # including installing None when there are none (or the tier is
-            # disabled with tunedb_models="") so a previous Engine's
-            # regressors never serve another store's traffic
-            install_models(models if len(models) else None)
+            if serve_cfg.plan_dir is not None:
+                # golden cold start (docs/PLANS.md): ONE install carrying
+                # store + models + the persisted plan, so no install-time
+                # plan compile — and none of its model scans — ever runs;
+                # a rejected artifact degrades to the normal compile
+                from repro.tunedb.plans import (PlanArtifactError,
+                                                check_freshness, load_plan,
+                                                read_manifest)
+                from repro.tunedb.store import install_serving
+                plan = None
+                try:
+                    plan = load_plan(serve_cfg.plan_dir)
+                    note = check_freshness(read_manifest(serve_cfg.plan_dir),
+                                           self.tunedb_store)
+                    if note:
+                        warnings.warn(
+                            f"plan artifact {serve_cfg.plan_dir}: {note}",
+                            RuntimeWarning, stacklevel=2)
+                except PlanArtifactError as e:
+                    warnings.warn(
+                        f"plan artifact {serve_cfg.plan_dir} rejected ({e}); "
+                        "compiling a plan from the store instead",
+                        RuntimeWarning, stacklevel=2)
+                install_serving(store=self.tunedb_store,
+                                models=models if len(models) else None,
+                                fingerprint=serve_cfg.tunedb_backend,
+                                plan=plan)
+            else:
+                # retarget the global model tier to THIS config's artifacts —
+                # including installing None when there are none (or the tier
+                # is disabled with tunedb_models="") so a previous Engine's
+                # regressors never serve another store's traffic
+                install_models(models if len(models) else None)
         self.cache = init_cache(cfg, serve_cfg.slots, serve_cfg.max_len)
         self.lengths = np.zeros(serve_cfg.slots, np.int64)
         self.slot_req: List[Optional[Request]] = [None] * serve_cfg.slots
@@ -418,6 +464,22 @@ class Engine:
         self._next_retune_tick = 0
         if serve_cfg.retune or serve_cfg.retune_fleet:
             self._init_controller(retune_tuners)
+        # plan follower: a daemon thread adopting golden plan generations a
+        # coordinator publishes to the registry — each one digest-verified,
+        # sentry-diffed, and swapped in atomically (docs/PLANS.md)
+        self.follower = None
+        if serve_cfg.follow:
+            from repro.tunedb.plans import PlanFollower
+            follow_sentry = None
+            if serve_cfg.follow_sentry is not None:
+                from repro.tunedb.obs import RegressionSentry
+                follow_sentry = RegressionSentry(
+                    noise_margin=serve_cfg.follow_sentry)
+            self.follower = PlanFollower(
+                serve_cfg.follow, store=self.tunedb_store,
+                fingerprint=serve_cfg.tunedb_backend,
+                poll_s=serve_cfg.follow_interval_s,
+                sentry=follow_sentry).start()
         # in-process observability endpoint: /metrics, /status, /plan read
         # the live serving state this engine just installed (plus its
         # controller's retune history and fleet bus, when configured)
@@ -427,7 +489,8 @@ class Engine:
             self.status_server = StatusServer(
                 port=serve_cfg.status_port,
                 controller=self.controller,
-                fleet=serve_cfg.retune_fleet).start()
+                fleet=serve_cfg.retune_fleet,
+                follower=self.follower).start()
 
     def _init_controller(self, retune_tuners: Optional[Dict[str, Any]]) -> None:
         """Close the loop in-process: drift-triggered sessions + hot-swap.
@@ -460,7 +523,8 @@ class Engine:
                 max_sessions_per_window=sc.retune_max_sessions,
                 session_window_s=sc.retune_window_s,
                 min_gain=sc.retune_min_gain,
-                sentry=sc.retune_sentry))
+                sentry=sc.retune_sentry,
+                publish=sc.retune_publish))
         self._next_retune_tick = sc.retune_interval
 
     def maybe_retune(self):

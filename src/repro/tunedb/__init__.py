@@ -20,6 +20,11 @@ The persistence backbone of the input-aware runtime:
                 atomic store/ModelSet hot-swap: the loop closed in-process
   fleet/        distributed tuning: filesystem lease protocol, coordinator,
                 sharded workers (``<store>.shards/<worker_id>.jsonl``)
+  plans.py      golden plan artifacts: export/load a generation's frozen
+                ``DispatchPlan`` (``<store>.plan/<generation>/``, schema +
+                digest gated), ``PlanRegistry`` publish and ``PlanFollower``
+                replica pull/verify/hot-swap — the fleet bus reused for
+                DISTRIBUTION (see ``docs/PLANS.md``)
   obs/          serving observability: process-wide metrics registry
                 (lock-free per-thread shards), the /metrics + /status +
                 /plan StatusServer, the shared status_snapshot serializer,
@@ -64,6 +69,9 @@ __all__ = [
     "WorkerReport", "run_fleet_inline",
     "MetricsRegistry", "RegressionSentry", "SentryReport", "StatusServer",
     "get_registry", "reset_metrics", "status_snapshot", "plan_snapshot",
+    "PLAN_SCHEMA_VERSION", "PlanArtifactError", "StalePlanError",
+    "PlanManifest", "PlanRegistry", "PlanFollower", "default_plan_dir",
+    "export_plan", "load_plan", "read_manifest",
 ]
 
 _SESSION_NAMES = ("TuningSession", "TuneJob", "SessionReport",
@@ -78,6 +86,10 @@ _FLEET_NAMES = ("Coordinator", "FleetDir", "FleetJob", "FleetReport",
 _OBS_NAMES = ("MetricsRegistry", "RegressionSentry", "SentryReport",
               "StatusServer", "get_registry", "reset_metrics",
               "status_snapshot", "plan_snapshot")
+_PLANS_NAMES = ("PLAN_SCHEMA_VERSION", "PlanArtifactError", "StalePlanError",
+                "PlanManifest", "PlanRegistry", "PlanFollower",
+                "default_plan_dir", "export_plan", "load_plan",
+                "read_manifest")
 
 
 def __getattr__(name):
@@ -103,4 +115,8 @@ def __getattr__(name):
         from . import obs
 
         return getattr(obs, name)
+    if name in _PLANS_NAMES:
+        from . import plans
+
+        return getattr(plans, name)
     raise AttributeError(name)

@@ -27,6 +27,14 @@ Subcommands:
             fleet drain   tell workers to exit once the queue empties;
                           --wait finalizes like ``start --wait``; --compact
                           archives cursor-complete merged shards off the bus
+  plan    golden dispatch-plan artifacts (docs/PLANS.md):
+            plan export   compile a store (+models/telemetry) into a
+                          versioned plan artifact under <store>.plan/
+            plan inspect  verify (schema + digest) and print an artifact
+            plan publish  compile + publish the next generation to a plan
+                          registry directory for followers to pull
+            plan follow   poll a registry and atomically hot-swap each new
+                          generation into this process's serving state
   stats   print store (and optional telemetry) statistics as JSON
   export  compact a store to latest-record-per-shape
   merge   fold several stores into one (newest record per shape wins)
@@ -240,7 +248,8 @@ def _build_retune_controller(args: argparse.Namespace, telemetry, baseline,
         cfg=RetuneConfig(
             drift_threshold=args.drift, untuned_mass_threshold=args.untuned,
             min_calls=args.min_calls, top_k_shapes=args.top_k,
-            workers=args.workers, retrain=not args.no_train, seed=args.seed),
+            workers=args.workers, retrain=not args.no_train, seed=args.seed,
+            publish=getattr(args, "publish", None)),
         baseline=baseline, verbose=True)
 
 
@@ -339,6 +348,17 @@ def _fleet_finalize(coord, args: argparse.Namespace, t0: float) -> int:
                                   min_samples=args.min_samples,
                                   epochs=args.epochs, seed=args.seed)
         print(f"[fleet] retrained {retrained or 'nothing'} -> {models_dir}")
+    if getattr(args, "publish", None):
+        from .plans import PlanArtifactError
+        try:
+            man = coord.publish_plan(
+                args.publish,
+                models_dir=(args.models_dir
+                            or default_models_dir(coord.store.path)))
+            print(f"[fleet] published plan generation {man.generation} "
+                  f"({man.n_entries} entries) -> {args.publish}")
+        except PlanArtifactError as e:
+            print(f"[fleet] plan publish refused: {e}", file=sys.stderr)
     rep = coord.report(retrained=retrained, wall_s=_time.time() - t0)
     print(json.dumps(rep.to_dict(), indent=1, sort_keys=True))
     if not ok:
@@ -370,6 +390,10 @@ def _add_fleet_finalize_args(sp) -> None:
                     help="after every job lands and merges, archive the "
                          "cursor-complete shards out of <store>.shards/ "
                          "instead of leaving them on the bus forever")
+    sp.add_argument("--publish", default=None,
+                    help="after the merge (and --train retrain), compile the "
+                         "merged store into a plan and publish it to this "
+                         "registry dir for serving replicas to follow")
 
 
 def _spawn_workers(args: argparse.Namespace) -> List:
@@ -580,6 +604,116 @@ def _cmd_fleet_drain(args: argparse.Namespace) -> int:
             print(f"[fleet] skipping --compact: {coord.outstanding()} "
                   "job(s) still outstanding (use --wait)", file=sys.stderr)
     return 0
+
+
+# ---------------------------------------------------------------------------
+# plan: golden dispatch-plan artifacts (export / inspect / publish / follow)
+# ---------------------------------------------------------------------------
+
+def _compile_plan_from_args(args: argparse.Namespace):
+    """(store, DispatchPlan) compiled from --store/--models-dir/--telemetry."""
+    from .model import ModelSet, default_models_dir
+    from .store import compile_plan
+
+    store = RecordStore.open(args.store)
+    models = None
+    if not args.no_models:
+        mdir = pathlib.Path(args.models_dir or default_models_dir(args.store))
+        if mdir.is_dir():
+            loaded = ModelSet.load(mdir)
+            if len(loaded):
+                models = loaded
+    telemetry = None
+    if args.telemetry and os.path.exists(args.telemetry):
+        telemetry = ShapeTelemetry.load(args.telemetry)
+    plan = compile_plan(store, models, args.backend,
+                        telemetry=telemetry, hot_k=args.hot_k)
+    if plan is None or not len(plan):
+        raise SystemExit(f"[tunedb] nothing to plan: store {args.store} has "
+                         "no serving records under this fingerprint")
+    return store, plan
+
+
+def _cmd_plan_export(args: argparse.Namespace) -> int:
+    from .plans import PlanArtifactError, default_plan_dir, export_plan
+
+    store, plan = _compile_plan_from_args(args)
+    out = args.out or default_plan_dir(store.path)
+    try:
+        dest = export_plan(plan, out, store=store,
+                           generation=args.generation)
+    except PlanArtifactError as e:       # includes the stale-store refusal
+        print(f"[tunedb] plan export refused: {e}", file=sys.stderr)
+        return 1
+    print(f"[tunedb] exported plan ({len(plan)} entries) -> {dest}")
+    return 0
+
+
+def _cmd_plan_inspect(args: argparse.Namespace) -> int:
+    from .plans import PlanArtifactError, load_plan, read_manifest
+
+    try:
+        manifest = read_manifest(args.plan_dir)
+        plan = load_plan(args.plan_dir)      # digest + schema verification
+    except PlanArtifactError as e:
+        print(f"[tunedb] plan artifact rejected: {e}", file=sys.stderr)
+        return 1
+    out = dict(manifest.to_dict())
+    out["verified"] = True
+    out["tiers"] = plan.stats()["tiers"]
+    print(json.dumps(out, indent=1, sort_keys=True))
+    return 0
+
+
+def _cmd_plan_publish(args: argparse.Namespace) -> int:
+    from .plans import PlanArtifactError, PlanRegistry
+
+    store, plan = _compile_plan_from_args(args)
+    try:
+        manifest = PlanRegistry(args.registry).publish(plan, store=store)
+    except PlanArtifactError as e:
+        print(f"[tunedb] plan publish refused: {e}", file=sys.stderr)
+        return 1
+    print(f"[tunedb] published generation {manifest.generation} "
+          f"({manifest.n_entries} entries, {manifest.digest}) "
+          f"-> {args.registry}")
+    return 0
+
+
+def _cmd_plan_follow(args: argparse.Namespace) -> int:
+    from .obs import RegressionSentry
+    from .plans import PlanFollower
+
+    store = None
+    if args.store and os.path.exists(args.store):
+        store = RecordStore.open(args.store)
+    sentry = None if args.no_sentry else RegressionSentry(
+        noise_margin=args.margin)
+    follower = PlanFollower(args.registry, store=store,
+                            fingerprint=args.backend,
+                            poll_s=args.interval, sentry=sentry)
+    print(f"[tunedb] following {args.registry} every {args.interval:g}s "
+          "— Ctrl-C to stop")
+    polls = 0
+    try:
+        while True:
+            installed = follower.poll_once()
+            polls += 1
+            if installed is not None:
+                print(f"[tunedb] installed generation "
+                      f"{installed['generation']} "
+                      f"({installed.get('n_entries', '?')} entries, "
+                      f"lag {follower.lag_s:.2f}s)")
+            if args.max_polls and polls >= args.max_polls:
+                break
+            time.sleep(args.interval)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        follower.stop()
+    stats = follower.stats()
+    print(json.dumps(stats, indent=1, sort_keys=True))
+    return 0 if stats["installs"] or not args.max_polls else 1
 
 
 def _cmd_models(args: argparse.Namespace) -> int:
@@ -809,6 +943,9 @@ def build_parser() -> argparse.ArgumentParser:
         rp.add_argument("--train-samples", type=int, default=4000)
         rp.add_argument("--epochs", type=int, default=12)
         rp.add_argument("--seed", type=int, default=0)
+        rp.add_argument("--publish", default=None,
+                        help="after a successful swap, publish the new "
+                             "generation's plan to this registry dir")
 
     rt = sub.add_parser(
         "retune", help="one drift-triggered retune pass over a telemetry dump")
@@ -903,6 +1040,62 @@ def build_parser() -> argparse.ArgumentParser:
                     help="wait for outstanding jobs, merge, and report")
     _add_fleet_finalize_args(fd)
     fd.set_defaults(fn=_cmd_fleet_drain)
+
+    pl = sub.add_parser(
+        "plan", help="golden dispatch-plan artifacts (see docs/PLANS.md)")
+    psub = pl.add_subparsers(dest="plan_cmd", required=True)
+
+    def add_plan_compile_args(sp):
+        sp.add_argument("--store", default=DEFAULT_STORE)
+        sp.add_argument("--models-dir", default=None,
+                        help="model artifacts consulted for the hot-set "
+                             "pre-resolution (default: <store>.models/)")
+        sp.add_argument("--no-models", action="store_true",
+                        help="compile from records + nearest only")
+        sp.add_argument("--telemetry", default=None,
+                        help="telemetry dump whose hot set gets pre-resolved")
+        sp.add_argument("--backend", default=None,
+                        help="fingerprint the plan is keyed to (None = any)")
+        sp.add_argument("--hot-k", type=int, default=32,
+                        help="hot shapes per space to pre-resolve")
+
+    pe = psub.add_parser(
+        "export", help="compile a store into a versioned plan artifact")
+    add_plan_compile_args(pe)
+    pe.add_argument("--out", default=None,
+                    help="artifact root (default: <store>.plan/)")
+    pe.add_argument("--generation", type=int, default=None,
+                    help="explicit generation number (default: next free)")
+    pe.set_defaults(fn=_cmd_plan_export)
+
+    pi = psub.add_parser(
+        "inspect", help="verify (schema+digest) and print a plan artifact")
+    pi.add_argument("plan_dir", help="one generation's artifact directory")
+    pi.set_defaults(fn=_cmd_plan_inspect)
+
+    pp = psub.add_parser(
+        "publish", help="compile + publish the next generation to a registry")
+    add_plan_compile_args(pp)
+    pp.add_argument("--registry", required=True,
+                    help="plan registry directory followers poll")
+    pp.set_defaults(fn=_cmd_plan_publish)
+
+    pf = psub.add_parser(
+        "follow", help="poll a registry, hot-swap each new generation")
+    pf.add_argument("--registry", required=True)
+    pf.add_argument("--store", default=None,
+                    help="record store to serve alongside the plan")
+    pf.add_argument("--backend", default=None,
+                    help="fingerprint pin for the serving state")
+    pf.add_argument("--interval", type=float, default=2.0,
+                    help="seconds between registry polls")
+    pf.add_argument("--max-polls", type=int, default=0,
+                    help="stop after N polls (0 = forever)")
+    pf.add_argument("--margin", type=float, default=0.10,
+                    help="sentry noise margin for the coverage diff")
+    pf.add_argument("--no-sentry", action="store_true",
+                    help="skip the RegressionSentry plan diff before a swap")
+    pf.set_defaults(fn=_cmd_plan_follow)
 
     s = sub.add_parser("stats", help="print store/telemetry statistics")
     s.add_argument("--store", default=DEFAULT_STORE)

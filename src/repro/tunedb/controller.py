@@ -116,6 +116,13 @@ class RetuneConfig:
     # margin is reported and REFUSED instead of installed (the blocked
     # epoch shows up in stats()["sentry_blocked"] and the retune history).
     sentry: Optional[float] = None
+    # plan registry directory (tunedb.plans.PlanRegistry): after a
+    # SUCCESSFUL swap, the epoch's compiled DispatchPlan is published there
+    # as the next golden generation for serving replicas to follow.  None
+    # keeps retunes process-local.  A refused publish (e.g. a racing append
+    # made the plan stale) warns and counts in stats()["publish_failed"] —
+    # the local swap already happened and stays.
+    publish: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -201,6 +208,8 @@ class RetuneController:
         self.checks = 0                      # polls (triggered or not)
         self.retunes = 0                     # epochs that actually retuned
         self.sentry_blocked = 0              # swaps refused by the sentry
+        self.published_plans = 0             # golden generations published
+        self.publish_failed = 0              # refused/errored publishes
         self.last_report: Optional[RetuneReport] = None
         # bounded per-epoch history for /status and `stats --json`
         self.history: collections.deque = collections.deque(
@@ -683,6 +692,8 @@ class RetuneController:
                 self.sentry_blocked += 1
             else:
                 self.retunes += 1
+                if cfg.publish and new_state.plan is not None:
+                    self._publish_plan(new_state.plan)
         self._baseline = self.telemetry.snapshot()
         self.epoch += 1
         self.last_report = RetuneReport(
@@ -691,6 +702,26 @@ class RetuneController:
             wall_s=time.time() - t0, mode=mode)
         self._observe_epoch(self.last_report)
         return self.last_report
+
+    def _publish_plan(self, plan) -> None:
+        """Push the freshly-swapped generation's plan to the golden-plan
+        registry (cfg.publish) so follower replicas pull it.  Best-effort
+        by design: the LOCAL swap already happened; a refused or failed
+        publish (racing append made the plan stale, unwritable registry)
+        warns and counts, and the next successful epoch publishes again."""
+        try:
+            from .plans import PlanRegistry
+            manifest = PlanRegistry(self.cfg.publish).publish(
+                plan, store=self.store)
+            self.published_plans += 1
+            if self.verbose:
+                print(f"[retune] published plan generation "
+                      f"{manifest.generation} ({manifest.n_entries} "
+                      f"entries) -> {self.cfg.publish}")
+        except Exception as e:
+            self.publish_failed += 1
+            warnings.warn(f"plan publish to {self.cfg.publish} failed: {e}",
+                          RuntimeWarning, stacklevel=3)
 
     # -- reporting ------------------------------------------------------------
     def _observe_epoch(self, report: RetuneReport) -> None:
@@ -741,6 +772,8 @@ class RetuneController:
             "checks": self.checks,
             "retunes": self.retunes,
             "sentry_blocked": self.sentry_blocked,
+            "published_plans": self.published_plans,
+            "publish_failed": self.publish_failed,
             "history": list(self.history),
             "generation": serving_state().generation,
             "config": dataclasses.asdict(self.cfg),

@@ -391,6 +391,38 @@ class Coordinator:
         """The ModelSet the last ``retrain()`` produced (None before)."""
         return getattr(self, "_fresh_models", None)
 
+    def publish_plan(self, registry_dir: os.PathLike, *,
+                     fingerprint: Optional[str] = None,
+                     models_dir: Optional[os.PathLike] = None,
+                     telemetry=None, hot_k: Optional[int] = None):
+        """Compile the merged store into a golden :class:`DispatchPlan` and
+        publish it to a plan registry for serving replicas to follow.
+
+        The distribution half of the fleet story: workers collected records
+        onto the bus, the merge folded them into ``self.store`` — this
+        ships the result.  Models come from the last ``retrain()`` when one
+        ran, else from ``models_dir``; the staleness gate cannot trip here
+        because the plan is compiled from the store's CURRENT version.
+        Returns the published :class:`~repro.tunedb.plans.PlanManifest`.
+        """
+        from ..plans import PlanRegistry
+        from ..store import PLAN_HOT_K, compile_plan
+        models = self.fresh_models()
+        if models is None and models_dir and pathlib.Path(models_dir).is_dir():
+            from ..model import ModelSet
+            loaded = ModelSet.load(models_dir)
+            if len(loaded):
+                models = loaded
+        plan = compile_plan(self.store, models, fingerprint,
+                            telemetry=telemetry,
+                            hot_k=PLAN_HOT_K if hot_k is None else hot_k)
+        if plan is None or not len(plan):
+            raise ValueError(
+                "nothing to publish: the merged store has no serving "
+                "records" + (f" under fingerprint {fingerprint!r}"
+                             if fingerprint else ""))
+        return PlanRegistry(registry_dir).publish(plan, store=self.store)
+
     def report(self, *, retrained: Optional[List[str]] = None,
                wall_s: float = 0.0, write: bool = True) -> FleetReport:
         counts = self.fleet.counts()

@@ -407,6 +407,9 @@ def _serving_collector():
     plan = state.plan
     if plan is not None:
         ps = plan.stats()
+        out.append(("tunedb_plan_source", "gauge",
+                    {"source": str(getattr(plan, "source", "compiled"))},
+                    1.0))
         out.append(("tunedb_plan_lookups_total", "counter",
                     {"result": "hit"}, float(ps.get("hits", 0))))
         out.append(("tunedb_plan_lookups_total", "counter",
@@ -437,8 +440,41 @@ def _serving_collector():
     return out
 
 
+def _follower_collector():
+    """Plan-follower state (tunedb.plans.PlanFollower) at scrape time.
+
+    Followers register themselves in a process-global list; reading their
+    counters here keeps the poll path instrumentation-free, like every
+    other pull-model family.  ``lag_generations`` does one small CURRENT
+    pointer read per follower per scrape — the actual distribution lag a
+    fleet dashboard alerts on."""
+    from ..plans import active_followers
+
+    out = []
+    for f in active_followers():
+        labels = {"follower": f.name}
+        out.append(("tunedb_follower_generation", "gauge", labels,
+                    float(f.generation)))
+        out.append(("tunedb_follower_lag_generations", "gauge", labels,
+                    float(f.lag_generations())))
+        if f.lag_s is not None:
+            out.append(("tunedb_follower_lag_seconds", "gauge", labels,
+                        float(f.lag_s)))
+        out.append(("tunedb_follower_polls_total", "counter", labels,
+                    float(f.polls)))
+        out.append(("tunedb_follower_installs_total", "counter", labels,
+                    float(f.installs)))
+        for reason, n in (("digest", f.refused_digest),
+                          ("stale", f.refused_stale),
+                          ("sentry", f.refused_sentry)):
+            out.append(("tunedb_follower_refusals_total", "counter",
+                        {**labels, "reason": reason}, float(n)))
+    return out
+
+
 def _register_default_collectors(registry: MetricsRegistry) -> None:
     registry.register_collector(_serving_collector)
+    registry.register_collector(_follower_collector)
 
 
 _register_default_collectors(_REGISTRY)

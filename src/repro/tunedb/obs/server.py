@@ -46,7 +46,8 @@ class StatusServer:
 
     def __init__(self, *, host: str = "127.0.0.1", port: int = 0,
                  controller=None, fleet: Optional[str] = None,
-                 store=None, telemetry=None, models=None) -> None:
+                 store=None, telemetry=None, models=None,
+                 follower=None) -> None:
         self.host = host
         self.port = port
         self.controller = controller
@@ -54,6 +55,7 @@ class StatusServer:
         self.store = store
         self.telemetry = telemetry
         self.models = models
+        self.follower = follower
         self._httpd: Optional[ThreadingHTTPServer] = None
         self._thread: Optional[threading.Thread] = None
 
@@ -64,7 +66,7 @@ class StatusServer:
     def status_json(self) -> dict:
         return status_snapshot(store=self.store, telemetry=self.telemetry,
                                controller=self.controller, fleet=self.fleet,
-                               models=self.models)
+                               models=self.models, follower=self.follower)
 
     def plan_json(self) -> dict:
         return plan_snapshot()

@@ -16,6 +16,7 @@ Schema (version 1)::
       "telemetry": ShapeTelemetry.stats() | null,
       "retune":   RetuneController.stats() (incl. "history") | null,
       "fleet":    {FleetDir.status() + "report"} | null,
+      "follower": PlanFollower.stats() | null,
       "metrics":  MetricsRegistry.snapshot(),
     }
 """
@@ -33,7 +34,7 @@ PLAN_SNAPSHOT_CAP = 2000    # /plan entry cap: a plan can hold thousands
 
 def status_snapshot(*, store=None, telemetry=None, controller=None,
                     fleet: Optional[str] = None, models=None,
-                    registry=None) -> Dict[str, object]:
+                    registry=None, follower=None) -> Dict[str, object]:
     """Build the shared status document.
 
     With no arguments, reads the process's live serving state (what the
@@ -63,6 +64,11 @@ def status_snapshot(*, store=None, telemetry=None, controller=None,
         plan_stats = dict(plan.stats())
         plan_stats["fingerprint"] = plan.fingerprint
         plan_stats["store_version"] = plan.store_version
+    if follower is None:
+        # an engine-owned follower is also discoverable process-globally
+        from ..plans import active_followers
+        live = active_followers()
+        follower = live[0] if live else None
 
     snapshot: Dict[str, object] = {
         "schema": SCHEMA_VERSION,
@@ -77,6 +83,7 @@ def status_snapshot(*, store=None, telemetry=None, controller=None,
         "telemetry": telemetry.stats() if telemetry is not None else None,
         "retune": controller.stats() if controller is not None else None,
         "fleet": _fleet_section(fleet) if fleet else None,
+        "follower": follower.stats() if follower is not None else None,
         "metrics": registry.snapshot(),
     }
     return snapshot
@@ -146,7 +153,8 @@ def plan_snapshot(plan=None, *, cap: int = PLAN_SNAPSHOT_CAP
         plan = serving_state().plan
     if plan is None:
         return {"generation": None, "fingerprint": None,
-                "store_version": None, "entries": [], "truncated": False}
+                "store_version": None, "source": None, "digest": None,
+                "entries": [], "truncated": False}
 
     entries: List[Dict[str, object]] = []
     truncated = False
@@ -167,6 +175,8 @@ def plan_snapshot(plan=None, *, cap: int = PLAN_SNAPSHOT_CAP
         "generation": plan.generation,
         "fingerprint": plan.fingerprint,
         "store_version": plan.store_version,
+        "source": getattr(plan, "source", "compiled"),
+        "digest": getattr(plan, "digest", None),
         "entries": entries,
         "truncated": truncated,
     }

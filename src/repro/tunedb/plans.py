@@ -1,0 +1,642 @@
+"""Golden dispatch-plan artifacts: persist, publish, follow.
+
+PR 5 made ``install_serving`` COMPILE each serving generation into a frozen
+:class:`~repro.tunedb.store.DispatchPlan`; this module makes that plan a
+first-class **artifact** — the MITuna "golden find-DB" shape applied to
+compiled plans.  Three layers, one file:
+
+**Artifact** (:func:`export_plan` / :func:`load_plan`) — one generation's
+plan serialized to a directory::
+
+    <store>.plan/<generation>/
+        manifest.json     # schema version, generation, fingerprint,
+                          # store_version, digest, n_entries, provenance
+        entries.jsonl     # one canonical JSON line per (space, shape) entry
+
+The entries blob is byte-deterministic (sorted entries, sorted keys) and the
+manifest pins its SHA-256 ``digest``, so a loader can prove it holds exactly
+what the exporter wrote.  Loading is gated like model artifacts: a manifest
+from a newer schema, a torn file, or a digest mismatch raises
+:class:`PlanArtifactError` — a plan is either verified whole or refused,
+never half-read.  ``install_serving(plan_dir=...)`` in a cold process loads
+the table directly and skips the install-time model scans entirely.
+
+Export REFUSES a stale plan (:class:`StalePlanError`): if the live store's
+``version`` has advanced past the plan's compiled ``store_version``, the
+in-memory plan no longer reflects the store and must be recompiled before
+it can be published as golden.
+
+**Registry** (:class:`PlanRegistry`) — the fleet filesystem bus reused for
+*distribution* instead of *collection*::
+
+    <registry>/
+        generations/<generation>/   # immutable plan artifacts (see above)
+        CURRENT.json                # the atomic pointer: {generation,
+                                    # fingerprint, digest, path, published_at}
+
+``publish`` writes the artifact into a temp directory, renames it into
+``generations/`` (atomic; a collision with a racing publisher retries at the
+next generation number), then atomically replaces ``CURRENT.json``.  Readers
+therefore see either the previous complete generation or the new complete
+generation — never a torn one.
+
+**Follower** (:class:`PlanFollower`) — the replica side: a daemon thread
+polls ``CURRENT.json`` and, when the published generation advances, pulls
+the artifact, verifies the digest, optionally runs a
+:class:`~repro.tunedb.obs.RegressionSentry` coverage diff against the plan
+it currently serves, and hot-swaps through the same atomic
+``install_serving`` flip every other promotion uses.  A pull that fails any
+check is counted and dropped — the replica keeps serving its current
+generation, and the next poll retries.  Generations never move backwards:
+a ``CURRENT`` older than what the follower already installed is refused as
+stale, so no replica ever serves a torn or rolled-back plan.
+
+See ``docs/PLANS.md`` for the written contract this module implements.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pathlib
+import threading
+import time
+from typing import Callable, Dict, List, Mapping, Optional, Tuple
+
+from .store import (DispatchPlan, RecordStore, normalize_config,
+                    normalize_inputs, shape_key)
+
+__all__ = [
+    "PLAN_SCHEMA_VERSION", "PlanArtifactError", "StalePlanError",
+    "PlanManifest", "default_plan_dir", "plan_entries", "entries_blob",
+    "plan_digest", "export_plan", "load_plan", "read_manifest",
+    "check_freshness", "PlanRegistry", "PlanFollower", "active_followers",
+]
+
+PLAN_SCHEMA_VERSION = 1
+
+MANIFEST_NAME = "manifest.json"
+ENTRIES_NAME = "entries.jsonl"
+CURRENT_NAME = "CURRENT.json"
+GENERATIONS = "generations"
+
+
+class PlanArtifactError(RuntimeError):
+    """A persisted plan cannot be loaded safely (schema from the future,
+    torn manifest/entries, digest mismatch).  Callers degrade — recompile
+    from the store — rather than serve a plan they cannot verify."""
+
+
+class StalePlanError(PlanArtifactError):
+    """The in-memory plan's compiled ``store_version`` is behind the live
+    store: records were appended after the compile, so exporting this plan
+    would publish a table that silently shadows fresher tuning outcomes.
+    Recompile (``install_serving`` / ``compile_plan``) and export that."""
+
+
+def default_plan_dir(store_path: os.PathLike) -> pathlib.Path:
+    """Where a store's plan artifacts live: ``<store>.plan/`` sibling."""
+    p = pathlib.Path(store_path)
+    return p.with_name(p.name + ".plan")
+
+
+# ---------------------------------------------------------------------------
+# artifact serialization
+# ---------------------------------------------------------------------------
+
+def plan_entries(plan: DispatchPlan) -> List[Dict[str, object]]:
+    """The plan's full table (base + overlay) as sorted, plain-JSON entries.
+
+    Sorting makes the serialized blob byte-deterministic: the same plan
+    always digests to the same value, so artifact equality is digest
+    equality.  Overlay promotions are exported like built entries (their
+    ``origin`` says where they came from); on load they are frozen into the
+    base table — a promotion that proved itself in one generation IS part
+    of the golden artifact.
+    """
+    out: List[Dict[str, object]] = []
+    for origin, table in (("built", plan._table), ("promoted", plan._overlay)):
+        for (space, key), (config, tier) in list(table.items()):
+            out.append({
+                "space": space,
+                "inputs": {k: int(v) for k, v in key},
+                "config": {k: int(v) for k, v in config.items()},
+                "tier": tier,
+                "origin": origin,
+            })
+    out.sort(key=lambda e: (e["space"], sorted(e["inputs"].items())))
+    return out
+
+
+def entries_blob(entries: List[Dict[str, object]]) -> bytes:
+    """Canonical JSONL bytes for a list of plan entries."""
+    return "".join(json.dumps(e, sort_keys=True) + "\n"
+                   for e in entries).encode("utf-8")
+
+
+def plan_digest(blob: bytes) -> str:
+    return "sha256:" + hashlib.sha256(blob).hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanManifest:
+    """The verified identity of one exported plan artifact."""
+
+    generation: int
+    fingerprint: Optional[str]
+    store_version: int
+    digest: str
+    n_entries: int
+    created_at: float
+    store_path: Optional[str] = None
+    store_records: int = 0
+    store_max_created_at: float = 0.0
+    plan_schema_version: int = PLAN_SCHEMA_VERSION
+
+    def to_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, object]) -> "PlanManifest":
+        if not isinstance(d, Mapping) or "digest" not in d \
+                or "generation" not in d:
+            raise PlanArtifactError(f"not a plan manifest: {dict(d)!r:.120}")
+        version = int(d.get("plan_schema_version", -1))
+        if version > PLAN_SCHEMA_VERSION:
+            raise PlanArtifactError(
+                f"plan schema v{version} > v{PLAN_SCHEMA_VERSION} "
+                "(refusing to misread a newer writer's artifact)")
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+
+def _write_artifact(plan: DispatchPlan, dest: pathlib.Path, *,
+                    generation: int,
+                    store: Optional[RecordStore]) -> PlanManifest:
+    """Write ``dest/`` (manifest + entries) atomically via tmp-dir rename.
+
+    ``dest`` must not exist: the artifact directory appears fully formed or
+    not at all.  Raises :exc:`FileExistsError` when a racing writer won the
+    name — registry publishers retry at the next generation number.
+    """
+    if store is not None and plan.store_version >= 0 \
+            and store.version > plan.store_version:
+        raise StalePlanError(
+            f"plan was compiled at store version {plan.store_version} but "
+            f"the store has advanced to {store.version}: "
+            f"{store.version - plan.store_version} record(s) appended since "
+            "the compile would be silently shadowed; recompile "
+            "(install_serving) before exporting")
+    entries = plan_entries(plan)
+    blob = entries_blob(entries)
+    meta: Dict[str, object] = {}
+    if store is not None:
+        recs = store.records()
+        meta = {
+            "store_path": str(store.path) if store.path else None,
+            "store_records": len(recs),
+            "store_max_created_at": max(
+                (r.created_at for r in recs), default=0.0),
+        }
+    manifest = PlanManifest(
+        generation=int(generation),
+        fingerprint=plan.fingerprint,
+        store_version=plan.store_version,
+        digest=plan_digest(blob),
+        n_entries=len(entries),
+        created_at=time.time(),
+        **meta)
+    dest = pathlib.Path(dest)
+    dest.parent.mkdir(parents=True, exist_ok=True)
+    tmp = dest.parent / f".tmp-{dest.name}-{os.getpid()}-{id(plan) & 0xffff}"
+    tmp.mkdir(parents=True, exist_ok=True)
+    try:
+        (tmp / ENTRIES_NAME).write_bytes(blob)
+        (tmp / MANIFEST_NAME).write_text(
+            json.dumps(manifest.to_dict(), sort_keys=True), encoding="utf-8")
+        os.rename(tmp, dest)            # atomic: whole artifact or nothing
+    except BaseException:
+        for p in (tmp / ENTRIES_NAME, tmp / MANIFEST_NAME):
+            p.unlink(missing_ok=True)
+        if tmp.exists():
+            tmp.rmdir()
+        raise
+    return manifest
+
+
+def _generation_name(generation: int) -> str:
+    return f"{int(generation):08d}"
+
+
+def _next_generation(root: pathlib.Path) -> int:
+    """One past the highest numeric artifact directory under ``root``."""
+    latest = 0
+    if root.is_dir():
+        for p in root.iterdir():
+            try:
+                latest = max(latest, int(p.name))
+            except ValueError:
+                continue                # tmp dirs, foreign files
+    return latest + 1
+
+
+def export_plan(plan: DispatchPlan, out_dir: os.PathLike, *,
+                store: Optional[RecordStore] = None,
+                generation: Optional[int] = None) -> pathlib.Path:
+    """Export ``plan`` under ``out_dir/<generation>/``; returns the path.
+
+    ``out_dir`` is the artifact root (``<store>.plan/`` by convention);
+    ``generation`` defaults to one past the highest generation already
+    exported there.  ``store`` (when given) arms the staleness gate and
+    records provenance in the manifest.  Raises :class:`StalePlanError`
+    rather than silently truncating when the store outran the plan.
+    """
+    root = pathlib.Path(out_dir)
+    gen = generation if generation is not None else _next_generation(root)
+    while True:
+        dest = root / _generation_name(gen)
+        try:
+            _write_artifact(plan, dest, generation=gen, store=store)
+            return dest
+        except FileExistsError:
+            if generation is not None:
+                raise
+            gen += 1                    # racing exporter took the slot
+
+
+def read_manifest(plan_dir: os.PathLike) -> PlanManifest:
+    """Parse + schema-gate a plan directory's manifest (no entry read)."""
+    path = pathlib.Path(plan_dir) / MANIFEST_NAME
+    try:
+        doc = json.loads(path.read_text(encoding="utf-8"))
+    except FileNotFoundError:
+        raise PlanArtifactError(f"{path}: not a plan artifact (no manifest)")
+    except (OSError, ValueError) as e:
+        raise PlanArtifactError(f"{path}: torn or unreadable manifest ({e})")
+    return PlanManifest.from_dict(doc)
+
+
+def load_plan(plan_dir: os.PathLike) -> DispatchPlan:
+    """Load + verify a persisted plan artifact into a :class:`DispatchPlan`.
+
+    The manifest is schema-gated, the entries blob is digest-verified
+    against it byte-for-byte BEFORE a single entry is parsed, and every
+    entry lands in the base table (overlay promotions were frozen at
+    export).  Any failure raises :class:`PlanArtifactError`; a loaded plan
+    is whole by construction.  ``plan.source`` is ``"loaded"`` and
+    ``plan.digest`` carries the verified digest so observability can tell
+    a golden plan from an install-time compile.
+    """
+    plan_dir = pathlib.Path(plan_dir)
+    manifest = read_manifest(plan_dir)
+    entries_path = plan_dir / ENTRIES_NAME
+    try:
+        blob = entries_path.read_bytes()
+    except OSError as e:
+        raise PlanArtifactError(f"{entries_path}: unreadable entries ({e})")
+    digest = plan_digest(blob)
+    if digest != manifest.digest:
+        raise PlanArtifactError(
+            f"{plan_dir}: digest mismatch (manifest {manifest.digest}, "
+            f"entries {digest}) — torn or tampered artifact, refusing to "
+            "serve it")
+    table: Dict[tuple, Tuple[Dict[str, int], str]] = {}
+    for i, line in enumerate(blob.decode("utf-8").splitlines()):
+        if not line.strip():
+            continue
+        try:
+            e = json.loads(line)
+            key = (str(e["space"]), shape_key(normalize_inputs(e["inputs"])))
+            table[key] = (normalize_config(e["config"]),
+                          str(e.get("tier", "exact")))
+        except (ValueError, TypeError, KeyError) as exc:
+            # the digest already matched, so a bad line is a bad EXPORT,
+            # not a torn file — still refuse: golden means verified whole
+            raise PlanArtifactError(
+                f"{entries_path}:{i + 1}: bad plan entry ({exc})")
+    if len(table) != manifest.n_entries:
+        raise PlanArtifactError(
+            f"{plan_dir}: {len(table)} entries parsed but manifest "
+            f"promises {manifest.n_entries}")
+    return DispatchPlan(
+        generation=manifest.generation, fingerprint=manifest.fingerprint,
+        store_version=manifest.store_version, table=table,
+        source="loaded", digest=manifest.digest)
+
+
+def check_freshness(manifest: PlanManifest,
+                    store: Optional[RecordStore]) -> Optional[str]:
+    """Does the live store look NEWER than this artifact?  Returns a
+    human-readable warning (or None).
+
+    A cold process cannot compare ``store.version`` (it counts in-process
+    appends, so a freshly-opened store is always at 0); the manifest's
+    recorded ``store_max_created_at`` is the cross-process signal: serving
+    records stamped after the export mean the artifact no longer reflects
+    the store's best knowledge.  Advisory only — the caller decides whether
+    to install anyway (the plan still stands aside on the next in-process
+    append either way).
+    """
+    if store is None or manifest.store_max_created_at <= 0:
+        return None
+    newest = max((r.created_at for r in store.records()), default=0.0)
+    if newest > manifest.store_max_created_at + 1e-6:
+        return (f"store has records newer ({newest:.0f}) than the plan "
+                f"artifact ({manifest.store_max_created_at:.0f}); the "
+                "loaded plan may shadow fresher tuning — consider "
+                "re-exporting")
+    return None
+
+
+# ---------------------------------------------------------------------------
+# registry: publish/follow over a shared directory
+# ---------------------------------------------------------------------------
+
+def _atomic_write(path: pathlib.Path, text: str) -> None:
+    tmp = path.with_name(path.name + f".tmp-{os.getpid()}")
+    tmp.write_text(text, encoding="utf-8")
+    os.replace(tmp, path)
+
+
+class PlanRegistry:
+    """One coordinator publishes plan generations; N replicas follow.
+
+    The fleet's filesystem-bus pattern reused for distribution: every
+    mutation is a single atomic filesystem operation, so any number of
+    follower processes and publishers share the directory with no locks.
+    ``CURRENT.json`` is the only mutable file — an atomic tmp+replace
+    pointer at the latest complete artifact under ``generations/``.
+    """
+
+    def __init__(self, root: os.PathLike):
+        self.root = pathlib.Path(root)
+        self.generations_dir = self.root / GENERATIONS
+
+    def init(self) -> "PlanRegistry":
+        self.generations_dir.mkdir(parents=True, exist_ok=True)
+        return self
+
+    def generation_dir(self, generation: int) -> pathlib.Path:
+        return self.generations_dir / _generation_name(generation)
+
+    def publish(self, plan: DispatchPlan, *,
+                store: Optional[RecordStore] = None) -> PlanManifest:
+        """Export ``plan`` as the registry's next generation and flip
+        ``CURRENT`` to it.  Artifact first, pointer second: a follower that
+        reads the new pointer always finds a complete, digest-verified
+        artifact behind it.  Stale plans are refused (see
+        :class:`StalePlanError`) before anything touches the registry.
+        """
+        if plan is None:
+            raise ValueError("nothing to publish: plan is None")
+        self.init()
+        gen = _next_generation(self.generations_dir)
+        while True:
+            dest = self.generation_dir(gen)
+            try:
+                manifest = _write_artifact(plan, dest, generation=gen,
+                                           store=store)
+                break
+            except FileExistsError:
+                gen += 1                # racing publisher took the slot
+        pointer = dict(manifest.to_dict())
+        pointer["path"] = f"{GENERATIONS}/{_generation_name(gen)}"
+        pointer["published_at"] = time.time()
+        _atomic_write(self.root / CURRENT_NAME,
+                      json.dumps(pointer, sort_keys=True))
+        self._count("published")
+        return manifest
+
+    def current(self) -> Optional[Dict[str, object]]:
+        """The published pointer, or None (no publish yet / torn write on a
+        filesystem without atomic replace — indistinguishable, and both
+        mean "try again next poll")."""
+        try:
+            doc = json.loads((self.root / CURRENT_NAME).read_text(
+                encoding="utf-8"))
+        except (OSError, ValueError):
+            return None
+        if not isinstance(doc, dict) or "generation" not in doc:
+            return None
+        return doc
+
+    def pull(self, pointer: Mapping[str, object]) -> DispatchPlan:
+        """Load the artifact behind a ``current()`` pointer and verify that
+        it is exactly the one the pointer promised (digest equality) —
+        a publisher overwriting generations out from under a reader (which
+        the protocol never does) would be caught here, not served."""
+        rel = str(pointer.get("path")
+                  or f"{GENERATIONS}/{_generation_name(int(pointer['generation']))}")
+        plan = load_plan(self.root / rel)
+        want = pointer.get("digest")
+        if want and plan.digest != want:
+            raise PlanArtifactError(
+                f"{self.root / rel}: artifact digest {plan.digest} does not "
+                f"match the published pointer ({want})")
+        return plan
+
+    def _count(self, event: str) -> None:
+        try:
+            from .obs.metrics import get_registry
+            get_registry().counter(
+                "tunedb_plan_registry_events_total",
+                "plan registry publishes/pulls").inc(event=event)
+        except Exception:
+            pass        # observability never blocks the protocol
+
+
+# ---------------------------------------------------------------------------
+# follower: the replica side of the protocol
+# ---------------------------------------------------------------------------
+
+# live followers, for the scrape-time metrics collector (obs.metrics reads
+# this at /metrics render time — zero instrumentation on the poll path)
+_FOLLOWERS: List["PlanFollower"] = []
+_FOLLOWERS_LOCK = threading.Lock()
+
+
+def active_followers() -> List["PlanFollower"]:
+    with _FOLLOWERS_LOCK:
+        return list(_FOLLOWERS)
+
+
+class PlanFollower:
+    """Poll a :class:`PlanRegistry` and atomically adopt new generations.
+
+    By default an adopted plan is installed into the process-global serving
+    state (``install_serving(plan=...)``) — the same one-reference flip the
+    retune controller uses, so a replica mid-resolution sees either the old
+    generation or the new one, never a mix.  Tests and synthetic fleets
+    inject ``install=`` / ``current_plan=`` to follow into a private
+    replica state instead.
+
+    Refusal, not failure, is the steady state of a distributed puller:
+
+    * **torn pull** — the artifact fails digest verification (or vanished
+      mid-read): counted as ``refused_digest``, retried next poll;
+    * **stale generation** — ``CURRENT`` points at or below what this
+      follower already installed (a rolled-back or replayed pointer):
+      counted as ``refused_stale``, never installed;
+    * **sentry refusal** — the new plan's coverage regresses the serving
+      plan beyond the sentry margin: counted as ``refused_sentry`` and the
+      current generation keeps serving.
+    """
+
+    def __init__(self, registry: os.PathLike, *,
+                 store: Optional[RecordStore] = None,
+                 fingerprint: Optional[str] = None,
+                 poll_s: float = 2.0,
+                 sentry=None,
+                 install: Optional[Callable] = None,
+                 current_plan: Optional[Callable] = None,
+                 name: Optional[str] = None):
+        self.registry = (registry if isinstance(registry, PlanRegistry)
+                         else PlanRegistry(registry))
+        self.store = store
+        self.fingerprint = fingerprint
+        self.poll_s = float(poll_s)
+        self.sentry = sentry
+        self.name = name or f"follower-{os.getpid()}-{id(self) & 0xffff}"
+        self.generation = -1            # last INSTALLED registry generation
+        self.installed_at: Optional[float] = None
+        self.lag_s: Optional[float] = None   # publish -> install delay
+        self.polls = 0
+        self.installs = 0
+        self.refused_digest = 0
+        self.refused_stale = 0
+        self.refused_sentry = 0
+        self.errors = 0
+        self._install = install or self._install_serving
+        self._current_plan = current_plan or self._serving_plan
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        with _FOLLOWERS_LOCK:
+            _FOLLOWERS.append(self)
+
+    # -- default install target: the process-global serving state ----------
+    @staticmethod
+    def _serving_plan():
+        from .store import serving_state
+        return serving_state().plan
+
+    def _install_serving(self, plan: DispatchPlan,
+                         pointer: Mapping[str, object]) -> bool:
+        from .store import _KEEP, install_serving
+        install_serving(
+            store=self.store if self.store is not None else _KEEP,
+            fingerprint=(self.fingerprint if self.fingerprint is not None
+                         else _KEEP),
+            plan=plan)
+        return True
+
+    # -- one protocol round --------------------------------------------------
+    def poll_once(self) -> Optional[Dict[str, object]]:
+        """Check the registry once; returns the pointer installed this
+        round, or None (nothing new, or the candidate was refused)."""
+        self.polls += 1
+        pointer = self.registry.current()
+        if pointer is None:
+            return None
+        try:
+            gen = int(pointer["generation"])
+        except (TypeError, ValueError):
+            self.errors += 1
+            return None
+        if gen <= self.generation:
+            if gen < self.generation:
+                self.refused_stale += 1     # rollback: refuse, keep serving
+            return None
+        try:
+            plan = self.registry.pull(pointer)
+        except PlanArtifactError:
+            self.refused_digest += 1        # torn pull: retry next poll
+            return None
+        if self.sentry is not None:
+            cur = self._current_plan()
+            if cur is not None:
+                from .obs.snapshot import plan_snapshot
+                report = self.sentry.diff_plans(plan_snapshot(cur),
+                                                plan_snapshot(plan))
+                if not report.ok:
+                    self.refused_sentry += 1
+                    import warnings
+                    warnings.warn(
+                        f"plan follower {self.name} refused generation "
+                        f"{gen}: {len(report.regressions)} planned shape(s) "
+                        "lose coverage vs the serving plan; keeping "
+                        f"generation {self.generation}",
+                        RuntimeWarning, stacklevel=2)
+                    return None
+        if not self._install(plan, pointer):
+            self.errors += 1
+            return None
+        self.generation = gen
+        self.installs += 1
+        self.installed_at = time.time()
+        published = pointer.get("published_at")
+        if isinstance(published, (int, float)) and published > 0:
+            self.lag_s = max(self.installed_at - float(published), 0.0)
+        return dict(pointer)
+
+    # -- daemon loop ---------------------------------------------------------
+    def start(self) -> "PlanFollower":
+        if self._thread is not None:
+            return self
+        self._stop.clear()
+        self._thread = threading.Thread(
+            target=self._run, name=self.name, daemon=True)
+        self._thread.start()
+        return self
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            try:
+                self.poll_once()
+            except Exception:
+                self.errors += 1        # a broken poll must not kill the loop
+            self._stop.wait(self.poll_s)
+
+    def stop(self, timeout: float = 5.0) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=timeout)
+            self._thread = None
+        with _FOLLOWERS_LOCK:
+            if self in _FOLLOWERS:
+                _FOLLOWERS.remove(self)
+
+    # -- reporting -----------------------------------------------------------
+    def published_generation(self) -> Optional[int]:
+        pointer = self.registry.current()
+        if pointer is None:
+            return None
+        try:
+            return int(pointer["generation"])
+        except (TypeError, ValueError):
+            return None
+
+    def lag_generations(self) -> int:
+        """How many generations behind the registry this follower is."""
+        published = self.published_generation()
+        if published is None:
+            return 0
+        return max(published - max(self.generation, 0), 0)
+
+    def stats(self) -> Dict[str, object]:
+        return {
+            "name": self.name,
+            "registry": str(self.registry.root),
+            "generation": self.generation,
+            "published_generation": self.published_generation(),
+            "lag_generations": self.lag_generations(),
+            "lag_s": self.lag_s,
+            "polls": self.polls,
+            "installs": self.installs,
+            "refused_digest": self.refused_digest,
+            "refused_stale": self.refused_stale,
+            "refused_sentry": self.refused_sentry,
+            "errors": self.errors,
+            "running": self._thread is not None,
+        }

@@ -615,18 +615,21 @@ class DispatchPlan:
     """
 
     __slots__ = ("generation", "fingerprint", "store_version", "hits",
-                 "misses", "_table", "_overlay", "_lock")
+                 "misses", "source", "digest", "_table", "_overlay", "_lock")
 
     OVERLAY_CAP = 4096          # runaway-shape backstop, like the memos
 
     def __init__(self, *, generation: int, fingerprint: Optional[str],
                  store_version: int,
-                 table: Dict[tuple, Tuple[Dict[str, int], str]]):
+                 table: Dict[tuple, Tuple[Dict[str, int], str]],
+                 source: str = "compiled", digest: Optional[str] = None):
         self.generation = generation
         self.fingerprint = fingerprint
         self.store_version = store_version
         self.hits = 0
         self.misses = 0
+        self.source = source        # "compiled" (install-time) | "loaded"
+        self.digest = digest        # artifact sha256, when source=="loaded"
         self._table = table
         self._overlay: Dict[tuple, Tuple[Dict[str, int], str]] = {}
         self._lock = threading.Lock()
@@ -655,7 +658,8 @@ class DispatchPlan:
             tiers[tier] = tiers.get(tier, 0) + 1
         return {"generation": self.generation, "entries": len(self),
                 "built": len(self._table), "promoted": len(self._overlay),
-                "hits": self.hits, "misses": self.misses, "tiers": tiers}
+                "hits": self.hits, "misses": self.misses, "tiers": tiers,
+                "source": self.source, "digest": self.digest}
 
 
 def compile_plan(store: Optional[RecordStore], models, fingerprint:
@@ -752,7 +756,9 @@ def install_serving(*, store: object = _KEEP, models: object = _KEEP,
                     fingerprint: object = _KEEP,
                     build_plan: bool = True,
                     plan_hot_k: int = PLAN_HOT_K,
-                    sentry: object = None) -> ServingState:
+                    sentry: object = None,
+                    plan: Optional[DispatchPlan] = None,
+                    plan_dir: Optional[os.PathLike] = None) -> ServingState:
     """Atomically swap any subset of the dispatcher's serving state.
 
     Every install starts a new generation: the reference flips in one
@@ -784,13 +790,29 @@ def install_serving(*, store: object = _KEEP, models: object = _KEEP,
     record beyond the noise margin, the install warns, publishes
     ``tunedb_sentry_*`` metrics, and returns the CURRENT state unchanged —
     callers detect the refusal by the unbumped ``generation``.
+
+    ``plan`` (or ``plan_dir``, a persisted artifact directory — see
+    :mod:`repro.tunedb.plans`) installs a PRE-BUILT plan instead of
+    compiling one: the golden-artifact cold-start path, which skips the
+    install-time model scans entirely.  The plan is re-pinned to the live
+    store's ``version`` at flip time (a persisted artifact's recorded
+    version counts another process's appends and means nothing here), and
+    when no fingerprint is pinned yet the plan's own fingerprint is
+    adopted.  Subsequent in-process appends still stand the plan aside
+    exactly as they would a compiled one.
     """
     global _STATE
+    if plan_dir is not None and plan is None:
+        from .plans import load_plan
+        plan = load_plan(plan_dir)      # PlanArtifactError propagates
+    preplan = plan
     while True:
         cur = _STATE
         new_store = cur.store if store is _KEEP else store
         new_models = cur.models if models is _KEEP else models
         new_fp = cur.fingerprint if fingerprint is _KEEP else fingerprint
+        if fingerprint is _KEEP and new_fp is None and preplan is not None:
+            new_fp = preplan.fingerprint
         if sentry is not None and sentry.blocks_install(cur, new_store):
             return cur          # refused: previous generation stays live
         # invalidate BEFORE the plan compiles: resolutions memoized under
@@ -799,8 +821,13 @@ def install_serving(*, store: object = _KEEP, models: object = _KEEP,
             invalidate = getattr(obj, "invalidate_memos", None)
             if callable(invalidate):
                 invalidate()
-        plan = None
-        if build_plan:
+        plan = preplan
+        if plan is not None:
+            # re-pin to the LIVE store's in-process version counter so the
+            # stand-aside gate works; -1 (no store) never matches a store
+            plan.store_version = (new_store.version
+                                  if new_store is not None else -1)
+        elif build_plan:
             from .telemetry import get_telemetry
             plan = compile_plan(new_store, new_models, new_fp,
                                 telemetry=get_telemetry(), hot_k=plan_hot_k)

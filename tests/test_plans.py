@@ -1,0 +1,512 @@
+"""Golden plan artifacts + plan-following fleet (PR 7).
+
+Pins the tentpole contracts: an exported ``DispatchPlan`` artifact
+round-trips into a fresh process byte-verified and table-identical
+(overlay promotions frozen in); every corruption mode — tampered entries,
+torn manifest, future schema, stale store — is REFUSED, never partially
+served; the registry's publish/follow protocol hot-swaps whole
+generations only (no torn plan, no generation rollback), with the
+regression sentry gating coverage loss; and the serving/CLI/observability
+surfaces (``install_serving(plan_dir=)``, ``ServeConfig``, ``tunedb
+plan``, ``/status``, ``/metrics``) all agree on what is installed.
+"""
+
+import json
+import subprocess
+import sys
+import threading
+from pathlib import Path
+
+import pytest
+
+from repro.core.space import gemm_input
+from repro.core.tuner import clear_tuners
+from repro.kernels import dispatch
+from repro.tunedb import (DispatchPlan, RecordStore, TuneRecord, clear_store,
+                          clear_telemetry, get_telemetry, install_serving,
+                          serving_state, shape_key)
+from repro.tunedb.model import clear_models
+from repro.tunedb.obs import RegressionSentry, status_snapshot
+from repro.tunedb.obs.metrics import get_registry, reset_metrics
+from repro.tunedb.plans import (ENTRIES_NAME, MANIFEST_NAME,
+                                PLAN_SCHEMA_VERSION, PlanArtifactError,
+                                PlanFollower, PlanRegistry, StalePlanError,
+                                check_freshness, default_plan_dir,
+                                export_plan, load_plan, read_manifest)
+from repro.tunedb.plans import _FOLLOWERS, _FOLLOWERS_LOCK
+
+CFG = {"bm": 64, "bn": 128, "bk": 128, "k_unroll": 1, "k_split": 1,
+       "order": 0, "acc32": 1, "prefetch": 2}
+
+
+@pytest.fixture(autouse=True)
+def _clean_globals():
+    def reset():
+        clear_tuners()
+        clear_store()
+        clear_models()
+        clear_telemetry()
+        dispatch.reset_fallback_warnings()
+        reset_metrics()
+        with _FOLLOWERS_LOCK:
+            for f in list(_FOLLOWERS):
+                f._stop.set()
+            _FOLLOWERS.clear()
+    reset()
+    yield
+    reset()
+
+
+def _rec(m, n, k, *, backend="test", tflops=100.0, **cfg_over):
+    return TuneRecord(space="gemm", inputs=gemm_input(m, n, k),
+                      config=dict(CFG, **cfg_over), tflops=tflops,
+                      backend=backend)
+
+
+def _seed_store(path, n=4):
+    store = RecordStore(path)
+    for i in range(n):
+        store.add(_rec(256 * (i + 1), 64, 1024, bm=64 * (1 + i % 2)))
+    return store
+
+
+def _compiled_plan(store):
+    install_serving(store=store)
+    plan = serving_state().plan
+    assert plan is not None and plan.source == "compiled"
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# artifact round trip
+# ---------------------------------------------------------------------------
+
+def test_export_load_round_trip_table_identical(tmp_path):
+    store = _seed_store(tmp_path / "s.jsonl")
+    plan = _compiled_plan(store)
+    # a slow-path promotion must be frozen into the artifact too
+    promoted = gemm_input(640, 64, 1024)
+    plan.promote("gemm", shape_key(promoted), dict(CFG, bm=32), "nearest")
+
+    dest = export_plan(plan, default_plan_dir(store.path), store=store)
+    assert dest == tmp_path / "s.jsonl.plan" / "00000001"
+    loaded = load_plan(dest)
+
+    assert loaded.source == "loaded"
+    assert loaded.digest == read_manifest(dest).digest
+    assert len(loaded) == len(plan)
+    for i in range(4):
+        key = shape_key(gemm_input(256 * (i + 1), 64, 1024))
+        assert loaded.lookup("gemm", key) == plan.lookup("gemm", key)
+    # the promoted overlay entry is a base-table entry after the round trip
+    assert loaded.lookup("gemm", shape_key(promoted)) == \
+        (dict(CFG, bm=32), "nearest")
+
+
+def test_export_refuses_when_store_outran_the_plan(tmp_path):
+    store = _seed_store(tmp_path / "s.jsonl")
+    plan = _compiled_plan(store)
+    store.add(_rec(4096, 64, 1024))         # store advances past the compile
+    with pytest.raises(StalePlanError, match="recompile"):
+        export_plan(plan, tmp_path / "out", store=store)
+    # refusal is whole: no partial artifact directory appeared
+    assert not any((tmp_path / "out").glob("*")) \
+        or not (tmp_path / "out").exists()
+    # recompiling clears the gate
+    plan2 = _compiled_plan(store)
+    assert export_plan(plan2, tmp_path / "out", store=store).exists()
+
+
+def test_load_refuses_tampered_entries(tmp_path):
+    store = _seed_store(tmp_path / "s.jsonl")
+    dest = export_plan(_compiled_plan(store), tmp_path / "out", store=store)
+    blob = (dest / ENTRIES_NAME).read_bytes()
+    (dest / ENTRIES_NAME).write_bytes(blob.replace(b'"bm": 64', b'"bm": 8'))
+    with pytest.raises(PlanArtifactError, match="digest mismatch"):
+        load_plan(dest)
+
+
+def test_load_refuses_torn_or_missing_manifest(tmp_path):
+    store = _seed_store(tmp_path / "s.jsonl")
+    dest = export_plan(_compiled_plan(store), tmp_path / "out", store=store)
+    manifest = (dest / MANIFEST_NAME).read_text()
+    (dest / MANIFEST_NAME).write_text(manifest[:len(manifest) // 2])
+    with pytest.raises(PlanArtifactError, match="torn or unreadable"):
+        load_plan(dest)
+    (dest / MANIFEST_NAME).unlink()
+    with pytest.raises(PlanArtifactError, match="no manifest"):
+        read_manifest(dest)
+
+
+def test_load_refuses_future_schema(tmp_path):
+    store = _seed_store(tmp_path / "s.jsonl")
+    dest = export_plan(_compiled_plan(store), tmp_path / "out", store=store)
+    doc = json.loads((dest / MANIFEST_NAME).read_text())
+    doc["plan_schema_version"] = PLAN_SCHEMA_VERSION + 1
+    (dest / MANIFEST_NAME).write_text(json.dumps(doc))
+    with pytest.raises(PlanArtifactError, match="refusing to misread"):
+        load_plan(dest)
+
+
+def test_load_refuses_entry_count_drift(tmp_path):
+    store = _seed_store(tmp_path / "s.jsonl")
+    dest = export_plan(_compiled_plan(store), tmp_path / "out", store=store)
+    doc = json.loads((dest / MANIFEST_NAME).read_text())
+    doc["n_entries"] = doc["n_entries"] + 1
+    (dest / MANIFEST_NAME).write_text(json.dumps(doc))
+    with pytest.raises(PlanArtifactError, match="promises"):
+        load_plan(dest)
+
+
+def test_freshness_warns_when_store_gained_records_since_export(tmp_path):
+    store = _seed_store(tmp_path / "s.jsonl")
+    dest = export_plan(_compiled_plan(store), tmp_path / "out", store=store)
+    assert check_freshness(read_manifest(dest), store) is None
+    store.add(TuneRecord(space="gemm", inputs=gemm_input(4096, 64, 1024),
+                         config=CFG, tflops=50.0, created_at=9e9))
+    warning = check_freshness(read_manifest(dest), store)
+    assert warning is not None and "newer" in warning
+
+
+# ---------------------------------------------------------------------------
+# cold install: plan_dir skips the install-time scans
+# ---------------------------------------------------------------------------
+
+class _CountingModels:
+    """A ModelSet stand-in that fails the test if install consults it."""
+
+    def __init__(self):
+        self.calls = 0
+
+    def predict(self, *a, **k):
+        self.calls += 1
+        return None
+
+    def __len__(self):
+        return 1
+
+
+def test_install_plan_dir_cold_start_skips_model_scans(tmp_path):
+    store = _seed_store(tmp_path / "s.jsonl")
+    tel = get_telemetry()
+    for i in range(4):
+        tel.record("gemm", gemm_input(256 * (i + 1), 64, 1024), n=5)
+    plan = _compiled_plan(store)
+    warm_cfg = dispatch._tuned_cfg("gemm", gemm_input(256, 64, 1024))
+    dest = export_plan(plan, tmp_path / "out", store=store)
+
+    # fresh handles, as a cold process would open them
+    clear_store()
+    clear_telemetry()
+    cold_store = RecordStore.open(tmp_path / "s.jsonl")
+    models = _CountingModels()
+    state = install_serving(store=cold_store, models=models, plan_dir=dest)
+    assert state.plan.source == "loaded"
+    assert state.plan.digest == read_manifest(dest).digest
+    assert models.calls == 0            # the whole point of the artifact
+    assert dispatch._tuned_cfg("gemm", gemm_input(256, 64, 1024)) == warm_cfg
+
+
+def test_install_plan_only_serving_no_store(tmp_path):
+    store = _seed_store(tmp_path / "s.jsonl")
+    dest = export_plan(_compiled_plan(store), tmp_path / "out", store=store)
+    clear_store()
+    state = install_serving(plan_dir=dest)
+    # fingerprint adopted from the artifact, resolution works store-less
+    assert state.plan.source == "loaded"
+    cfg = dispatch._tuned_cfg("gemm", gemm_input(256, 64, 1024))
+    assert cfg is not None and cfg["bm"] == CFG["bm"]
+    assert state.plan.hits >= 1
+
+
+def test_install_bad_plan_dir_raises_not_degrades(tmp_path):
+    store = _seed_store(tmp_path / "s.jsonl")
+    with pytest.raises(PlanArtifactError):
+        install_serving(store=store, plan_dir=tmp_path / "nope")
+
+
+def test_fresh_process_installs_from_artifact(tmp_path):
+    store = _seed_store(tmp_path / "s.jsonl")
+    dest = export_plan(_compiled_plan(store), tmp_path / "out", store=store)
+    code = (
+        "from repro.tunedb import RecordStore, install_serving, "
+        "serving_state, shape_key\n"
+        "from repro.core.space import gemm_input\n"
+        f"store = RecordStore.open({str(tmp_path / 's.jsonl')!r})\n"
+        f"state = install_serving(store=store, plan_dir={str(dest)!r})\n"
+        "assert state.plan.source == 'loaded', state.plan.source\n"
+        "entry = state.plan.lookup('gemm', "
+        "shape_key(gemm_input(256, 64, 1024)))\n"
+        "assert entry is not None and entry[1] == 'exact'\n"
+        "print('cold-ok', state.plan.stats()['entries'])\n")
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env={"PYTHONPATH": str(Path(__file__).resolve().parents[1] / "src"),
+             "PATH": "/usr/bin:/bin"})
+    assert out.returncode == 0, out.stderr
+    assert out.stdout.startswith("cold-ok 4")
+
+
+# ---------------------------------------------------------------------------
+# registry + follower protocol
+# ---------------------------------------------------------------------------
+
+def _marked_plan(gen, shapes, **cfg_over):
+    tbl = {("gemm", shape_key(i)): (dict(CFG, g=gen, **cfg_over), "exact")
+           for i in shapes}
+    return DispatchPlan(generation=0, fingerprint="sim", store_version=-1,
+                        table=tbl)
+
+
+def test_registry_publish_current_pull(tmp_path):
+    shapes = [gemm_input(128 * (i + 1), 64, 512) for i in range(3)]
+    reg = PlanRegistry(tmp_path / "reg")
+    assert reg.current() is None
+    m1 = reg.publish(_marked_plan(1, shapes))
+    m2 = reg.publish(_marked_plan(2, shapes))
+    assert (m1.generation, m2.generation) == (1, 2)
+    pointer = reg.current()
+    assert pointer["generation"] == 2 and pointer["digest"] == m2.digest
+    plan = reg.pull(pointer)
+    assert plan.digest == m2.digest
+    assert plan.lookup("gemm", shape_key(shapes[0]))[0]["g"] == 2
+    # pointer/artifact divergence is caught at pull, not served
+    bad = dict(pointer, digest="sha256:" + "0" * 64)
+    with pytest.raises(PlanArtifactError, match="does not match"):
+        reg.pull(bad)
+
+
+def test_follower_installs_only_new_generations(tmp_path):
+    shapes = [gemm_input(128, 64, 512)]
+    reg = PlanRegistry(tmp_path / "reg")
+    installed = []
+    f = PlanFollower(reg, name="t",
+                     install=lambda p, ptr: installed.append(ptr) or True,
+                     current_plan=lambda: None)
+    assert f.poll_once() is None        # nothing published yet
+    reg.publish(_marked_plan(1, shapes))
+    assert f.poll_once()["generation"] == 1
+    assert f.poll_once() is None        # same generation: no reinstall
+    assert (f.generation, f.installs, len(installed)) == (1, 1, 1)
+    assert f.lag_s is not None and f.lag_s >= 0.0
+    assert f.lag_generations() == 0
+    st = f.stats()
+    assert st["published_generation"] == 1 and st["running"] is False
+
+
+def test_follower_refuses_generation_rollback(tmp_path):
+    shapes = [gemm_input(128, 64, 512)]
+    reg = PlanRegistry(tmp_path / "reg")
+    reg.publish(_marked_plan(1, shapes))
+    reg.publish(_marked_plan(2, shapes))
+    holder = {}
+    f = PlanFollower(reg, name="t",
+                     install=lambda p, ptr: holder.update(p=p) or True,
+                     current_plan=lambda: holder.get("p"))
+    assert f.poll_once()["generation"] == 2
+    # hand-roll a rollback: CURRENT repointed at generation 1
+    old = json.loads((reg.generation_dir(1) / MANIFEST_NAME).read_text())
+    old["path"] = "generations/00000001"
+    (tmp_path / "reg" / "CURRENT.json").write_text(json.dumps(old))
+    assert f.poll_once() is None
+    assert f.refused_stale == 1 and f.generation == 2
+    assert holder["p"].lookup("gemm", shape_key(shapes[0]))[0]["g"] == 2
+
+
+def test_follower_refuses_torn_artifact_keeps_serving(tmp_path):
+    shapes = [gemm_input(128, 64, 512)]
+    reg = PlanRegistry(tmp_path / "reg")
+    reg.publish(_marked_plan(1, shapes))
+    holder = {}
+    f = PlanFollower(reg, name="t",
+                     install=lambda p, ptr: holder.update(p=p) or True,
+                     current_plan=lambda: holder.get("p"))
+    assert f.poll_once()["generation"] == 1
+    reg.publish(_marked_plan(2, shapes))
+    gen2 = reg.generation_dir(2) / ENTRIES_NAME
+    gen2.write_bytes(gen2.read_bytes()[:10])        # torn pull
+    assert f.poll_once() is None
+    assert f.refused_digest == 1 and f.generation == 1
+    assert holder["p"].lookup("gemm", shape_key(shapes[0]))[0]["g"] == 1
+
+
+def test_follower_sentry_refuses_coverage_loss(tmp_path):
+    shapes = [gemm_input(128 * (i + 1), 64, 512) for i in range(4)]
+    reg = PlanRegistry(tmp_path / "reg")
+    reg.publish(_marked_plan(1, shapes))
+    holder = {}
+    f = PlanFollower(reg, name="t", sentry=RegressionSentry(),
+                     install=lambda p, ptr: holder.update(p=p) or True,
+                     current_plan=lambda: holder.get("p"))
+    assert f.poll_once()["generation"] == 1
+    reg.publish(_marked_plan(2, shapes[:1]))        # drops 3 planned shapes
+    with pytest.warns(RuntimeWarning, match="lose coverage"):
+        assert f.poll_once() is None
+    assert f.refused_sentry == 1 and f.generation == 1
+    # a same-coverage generation then lands normally
+    reg.publish(_marked_plan(3, shapes))
+    assert f.poll_once()["generation"] == 3
+    assert holder["p"].lookup("gemm", shape_key(shapes[0]))[0]["g"] == 3
+
+
+def test_follower_default_target_is_global_serving(tmp_path):
+    shapes = [gemm_input(128, 64, 512)]
+    reg = PlanRegistry(tmp_path / "reg")
+    reg.publish(_marked_plan(1, shapes))
+    f = PlanFollower(reg, name="t", fingerprint="sim")
+    assert f.poll_once()["generation"] == 1
+    plan = serving_state().plan
+    assert plan is not None and plan.source == "loaded"
+    assert dispatch._tuned_cfg("gemm", gemm_input(128, 64, 512))["g"] == 1
+
+
+def test_threaded_publish_race_no_torn_or_stale_reads(tmp_path):
+    shapes = [gemm_input(128 * (i + 1), 64, 512) for i in range(8)]
+    reg = PlanRegistry(tmp_path / "reg")
+    holder = {}
+    f = PlanFollower(reg, name="t", poll_s=0.001,
+                     install=lambda p, ptr:
+                     holder.update(p=(p, int(ptr["generation"]))) or True,
+                     current_plan=lambda:
+                     holder["p"][0] if "p" in holder else None)
+    torn, stale, reads, last_gen = [], [], [0], [0]
+    stop = threading.Event()
+
+    def read_loop():
+        while not stop.is_set():
+            got = holder.get("p")
+            if got is None:
+                continue
+            plan, gen = got
+            if gen < last_gen[0]:
+                stale.append(gen)
+            last_gen[0] = max(last_gen[0], gen)
+            markers = {plan.lookup("gemm", shape_key(s))[0]["g"]
+                       for s in shapes}
+            if len(markers) > 1:
+                torn.append(markers)
+            reads[0] += 1
+
+    reader = threading.Thread(target=read_loop, daemon=True)
+    f.start()
+    reader.start()
+    for gen in range(1, 9):
+        reg.publish(_marked_plan(gen, shapes))
+    deadline = threading.Event()
+    for _ in range(500):                # wait for convergence, max 5s
+        if f.generation == 8:
+            break
+        deadline.wait(0.01)
+    stop.set()
+    reader.join(timeout=5.0)
+    f.stop()
+    assert f.generation == 8
+    assert reads[0] > 0 and torn == [] and stale == []
+
+
+# ---------------------------------------------------------------------------
+# publishers: retune controller + fleet coordinator
+# ---------------------------------------------------------------------------
+
+def test_controller_publishes_each_swap(tmp_path):
+    from repro.tunedb.controller import RetuneConfig, RetuneController
+    store = _seed_store(tmp_path / "s.jsonl")
+    ctl = RetuneController(
+        store, cfg=RetuneConfig(publish=str(tmp_path / "reg")))
+    ctl._publish_plan(_compiled_plan(store))
+    assert ctl.published_plans == 1 and ctl.publish_failed == 0
+    assert ctl.stats()["published_plans"] == 1
+    assert PlanRegistry(tmp_path / "reg").current()["generation"] == 1
+
+
+def test_coordinator_publish_plan(tmp_path):
+    from repro.tunedb.fleet import Coordinator
+    store = _seed_store(tmp_path / "s.jsonl")
+    coord = Coordinator(tmp_path / "fleet", store)
+    manifest = coord.publish_plan(tmp_path / "reg", fingerprint="test")
+    assert manifest.generation == 1 and manifest.n_entries >= 4
+    plan = PlanRegistry(tmp_path / "reg").pull(
+        PlanRegistry(tmp_path / "reg").current())
+    assert plan.fingerprint == "test"
+
+
+# ---------------------------------------------------------------------------
+# serving + CLI + observability surfaces
+# ---------------------------------------------------------------------------
+
+def test_engine_serves_from_plan_dir(tmp_path):
+    import jax
+    import jax.numpy as jnp
+    from repro.models import ModelConfig, init_params
+    from repro.serve import Engine, ServeConfig
+    store = _seed_store(tmp_path / "s.jsonl")
+    dest = export_plan(_compiled_plan(store), tmp_path / "out", store=store)
+    clear_store()
+    cfg = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4, n_kv=2,
+                      d_ff=128, vocab=128, dtype=jnp.float32, attn_chunk=16,
+                      logit_chunk=16, remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    Engine(cfg, params, ServeConfig(
+        max_len=64, slots=2, tunedb=str(tmp_path / "s.jsonl"),
+        plan_dir=str(dest)))
+    plan = serving_state().plan
+    assert plan is not None and plan.source == "loaded"
+    assert plan.digest == read_manifest(dest).digest
+
+
+def test_cli_plan_export_inspect_publish_follow(tmp_path, capsys):
+    from repro.tunedb.__main__ import main
+    store_path = tmp_path / "s.jsonl"
+    _seed_store(store_path)
+    out_dir = tmp_path / "artifacts"
+    assert main(["plan", "export", "--store", str(store_path),
+                 "--no-models", "--out", str(out_dir)]) == 0
+    exported = capsys.readouterr().out
+    assert "00000001" in exported and "entries" in exported
+    dest = out_dir / "00000001"
+
+    assert main(["plan", "inspect", str(dest)]) == 0
+    inspected = json.loads(capsys.readouterr().out)
+    assert inspected["verified"] is True
+    assert inspected["digest"].startswith("sha256:")
+    assert inspected["tiers"] == {"exact": 4}
+
+    assert main(["plan", "publish", "--store", str(store_path),
+                 "--no-models", "--registry", str(tmp_path / "reg")]) == 0
+    capsys.readouterr()
+    assert main(["plan", "follow", "--registry", str(tmp_path / "reg"),
+                 "--store", str(store_path), "--interval", "0.01",
+                 "--max-polls", "5"]) == 0
+    follow_out = capsys.readouterr().out
+    stats = json.loads(follow_out[follow_out.index("{"):])
+    assert stats["installs"] == 1 and stats["generation"] == 1
+    assert serving_state().plan.source == "loaded"
+
+
+def test_cli_plan_export_stale_store_fails_cleanly(tmp_path, capsys):
+    from repro.tunedb.__main__ import main
+    store_path = tmp_path / "s.jsonl"
+    _seed_store(store_path)
+    dest = export_plan(_compiled_plan(RecordStore.open(store_path)),
+                       tmp_path / "out")
+    (dest / ENTRIES_NAME).write_bytes(b"garbage\n")
+    assert main(["plan", "inspect", str(dest)]) == 1
+    assert "digest mismatch" in capsys.readouterr().err
+
+
+def test_snapshot_and_metrics_carry_follower_and_plan_source(tmp_path):
+    shapes = [gemm_input(128, 64, 512)]
+    reg = PlanRegistry(tmp_path / "reg")
+    reg.publish(_marked_plan(1, shapes))
+    f = PlanFollower(reg, name="rep-0", fingerprint="sim")
+    assert f.poll_once() is not None
+
+    doc = status_snapshot()
+    assert doc["serving"]["plan"]["source"] == "loaded"
+    assert doc["follower"]["name"] == "rep-0"
+    assert doc["follower"]["generation"] == 1
+
+    text = get_registry().render_prometheus()
+    assert 'tunedb_plan_source{source="loaded"} 1' in text
+    assert 'tunedb_follower_generation{follower="rep-0"} 1' in text
+    assert 'tunedb_follower_installs_total{follower="rep-0"} 1' in text
