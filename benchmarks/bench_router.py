@@ -1,0 +1,254 @@
+"""E17 — fleet-global telemetry + shape-affinity routing.
+
+The PR-8 tentpole claim, gated two ways:
+
+  1. ROUTING — a synthetic 3-replica fleet serves a mixed gemm workload.
+     The coordinator partitions the global hot set into per-replica
+     affinity classes and publishes one SMALL specialized plan per replica
+     (the real ``publish_replica_plans`` -> ``PlanRegistry`` round trip);
+     each request then dispatches at the TFLOPS of the config its landing
+     replica actually resolves — the tuned record when the replica's plan
+     covers the shape, the vendor heuristic config when it does not.  The
+     ``ShapeAffinityRouter`` must beat (or match) round-robin on BOTH
+     geomean dispatched TFLOPS and plan hit rate, with ZERO starved
+     request class and the load bound respected.
+
+  2. FLEET TRIGGER — three replicas each record a window BELOW the retune
+     controller's ``min_calls`` floor, so a process-local controller never
+     triggers.  Their cumulative dumps aggregate on the bus, and the SAME
+     controller reading the ``FleetTelemetryView`` must trigger — the
+     retune fires off fleet-wide mass no single replica's window would
+     have tripped.
+"""
+
+from __future__ import annotations
+
+import math
+import random
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+from repro.core.backend import SimulatedTPUBackend
+from repro.core.search import enumerate_legal
+from repro.core.space import gemm_input
+from repro.core.tuner import clear_tuners
+from repro.kernels import dispatch
+from repro.serve.router import make_router
+from repro.tunedb import (RecordStore, TuneRecord, clear_store,
+                          clear_telemetry, install_store, shape_key)
+from repro.tunedb.controller import RetuneConfig, RetuneController
+from repro.tunedb.fleet import Coordinator
+from repro.tunedb.model import clear_models
+from repro.tunedb.plans import PlanRegistry
+from repro.tunedb.session import backend_fingerprint
+from repro.tunedb.telemetry import (FleetTelemetryView, ShapeTelemetry,
+                                    TelemetryExporter)
+
+from .common import save, table
+
+REPLICAS = 3
+POLICIES = ("affinity", "round_robin", "random")
+
+
+def _reset() -> None:
+    clear_tuners()
+    clear_store()
+    clear_models()
+    clear_telemetry()
+
+
+def _geomean(xs) -> float:
+    return math.exp(sum(math.log(x) for x in xs) / len(xs)) if xs else 0.0
+
+
+# ---------------------------------------------------------------------------
+# 1. shape-affinity routing vs the baselines on a mixed workload
+# ---------------------------------------------------------------------------
+
+def _tuned_and_heuristic_tflops(backend, inputs, *, sample=48):
+    """(best config, its TFLOPS, heuristic TFLOPS) for one gemm shape."""
+    from repro.core.space import GEMM_SPACE
+    legal = enumerate_legal(GEMM_SPACE, inputs)
+    stride = max(1, len(legal) // sample)
+    scored = [(float(backend.measure("gemm", cfg, inputs)), cfg)
+              for cfg in legal[::stride]]
+    best_tf, best_cfg = max(scored, key=lambda p: p[0])
+    heur = dispatch._heuristic_cfg("gemm", inputs)
+    heur_tf = float(backend.measure("gemm", heur, inputs))
+    return best_cfg, best_tf, min(heur_tf, best_tf)
+
+
+def _bench_routing(fast: bool, tmp: Path) -> dict:
+    _reset()
+    backend = SimulatedTPUBackend(noise=0.0)
+    fp = backend_fingerprint(backend)
+    n_classes = 6 if fast else 12
+    n_requests = 600 if fast else 2400
+
+    # the hot set: n_classes shape classes in distinct log2 buckets, each
+    # tuned into the store with its measured-best config
+    store = RecordStore.open(tmp / "store.jsonl")
+    classes = []                 # (inputs, tuned_tflops, heuristic_tflops)
+    tel = ShapeTelemetry()
+    for i in range(n_classes):
+        inputs = gemm_input(128 * 2 ** (i % 4) + 128 * i, 64, 1024)
+        cfg, best_tf, heur_tf = _tuned_and_heuristic_tflops(backend, inputs)
+        store.add(TuneRecord(space="gemm", inputs=inputs, config=cfg,
+                             tflops=best_tf, backend=fp))
+        classes.append((inputs, best_tf, heur_tf))
+        tel.record("gemm", inputs, n=100 - 5 * i)   # skewed hot-shape mass
+
+    # the real specialization path: partition -> per-replica plan registries
+    coord = Coordinator(tmp / "fleet", store)
+    published = coord.publish_replica_plans(tmp / "registries", REPLICAS,
+                                            telemetry=tel, fingerprint=fp)
+    plans = []
+    for entry in published:
+        reg = PlanRegistry(entry["registry"])
+        pointer = reg.current()
+        plans.append(reg.pull(pointer) if pointer is not None else None)
+
+    # mixed workload: hot classes plus a cold class NO plan covers
+    cold = gemm_input(96, 96, 96)
+    cold_tf = _tuned_and_heuristic_tflops(backend, cold)[2]
+    rng = random.Random(0)
+    workload = [rng.randrange(n_classes + 1) for _ in range(n_requests)]
+
+    results = {}
+    for policy in POLICIES:
+        router = make_router(policy)
+        for i, plan in enumerate(plans):
+            router.add_replica(f"replica-{i}", plan=plan)
+        hits = 0
+        tflops = []
+        served = [0] * (n_classes + 1)
+        t0 = time.perf_counter()
+        for cls in workload:
+            inputs = classes[cls][0] if cls < n_classes else cold
+            replica = router.route([("gemm", inputs)])
+            served[cls] += 1
+            plan = replica.current_plan()
+            covered = plan is not None and \
+                plan.lookup("gemm", shape_key(inputs)) is not None
+            if covered:
+                hits += 1
+                tflops.append(classes[cls][1])
+            else:
+                tflops.append(classes[cls][2] if cls < n_classes
+                              else cold_tf)
+        route_us = (time.perf_counter() - t0) / n_requests * 1e6
+        loads = [r.assigned for r in router.replicas]
+        results[policy] = {
+            "geomean_tflops": _geomean(tflops),
+            "hit_rate": hits / n_requests,
+            "starved_classes": sum(1 for n in served if n == 0),
+            "load_spread": max(loads) - min(loads),
+            "route_us": route_us,
+            "outcomes": dict(router.outcomes),
+        }
+
+    aff, rr = results["affinity"], results["round_robin"]
+    max_imbalance = make_router("affinity").max_imbalance
+    rows = [dict({"policy": p},
+                 **{"geomean TFLOPS": f"{r['geomean_tflops']:.1f}",
+                    "hit rate": f"{r['hit_rate']:.3f}",
+                    "starved": r["starved_classes"],
+                    "load spread": r["load_spread"],
+                    "us/route": f"{r['route_us']:.2f}"})
+            for p, r in results.items()]
+    print(table(rows, ["policy", "geomean TFLOPS", "hit rate", "starved",
+                       "load spread", "us/route"],
+                "E17 — shape-affinity routing vs baselines "
+                f"({REPLICAS} replicas, {n_requests} requests, "
+                f"{n_classes}+1 classes)"))
+    print(f"\naffinity/round-robin: TFLOPS x"
+          f"{aff['geomean_tflops'] / rr['geomean_tflops']:.2f}, hit rate "
+          f"{aff['hit_rate']:.3f} vs {rr['hit_rate']:.3f}; outcomes "
+          f"{aff['outcomes']}")
+    ok = (aff["geomean_tflops"] >= rr["geomean_tflops"]
+          and aff["hit_rate"] >= rr["hit_rate"]
+          and aff["starved_classes"] == 0
+          and aff["load_spread"] <= max_imbalance + 1)
+    _reset()
+    return {"policies": results, "replicas": REPLICAS,
+            "requests": n_requests, "classes": n_classes + 1,
+            "plan_entries": [entry["entries"] for entry in published],
+            "tflops_ratio_vs_rr": (aff["geomean_tflops"]
+                                   / rr["geomean_tflops"]),
+            "hit_rate_affinity": aff["hit_rate"],
+            "hit_rate_round_robin": rr["hit_rate"],
+            "starved_classes": aff["starved_classes"],
+            "pass": bool(ok)}
+
+
+# ---------------------------------------------------------------------------
+# 2. the retune trigger only the aggregated fleet view can trip
+# ---------------------------------------------------------------------------
+
+def _bench_fleet_trigger(fast: bool, tmp: Path) -> dict:
+    _reset()
+    bus = tmp / "telemetry"
+    cfg = RetuneConfig(min_calls=32, untuned_mass_threshold=0.5)
+    store = RecordStore()
+    install_store(store)              # empty store: the window is untuned
+    shape = gemm_input(4096, 64, 1024)
+    per_replica = 15                  # < min_calls: alone, never triggers
+
+    local = ShapeTelemetry()
+    fleet_view = FleetTelemetryView(bus, local=local, refresh_s=0.0)
+    ctl_fleet = RetuneController(store, telemetry=fleet_view, cfg=cfg)
+    ctl_local = RetuneController(store, telemetry=local, cfg=cfg)
+
+    local.record("gemm", shape, n=per_replica)
+    for i in range(REPLICAS - 1):
+        tel = ShapeTelemetry()
+        tel.record("gemm", shape, n=per_replica)
+        TelemetryExporter(tel, bus, worker_id=f"peer{i}").export_once()
+
+    dec_local = ctl_local.check().get("gemm")
+    dec_fleet = ctl_fleet.check().get("gemm")
+    local_trigger = bool(dec_local and dec_local.trigger)
+    fleet_trigger = bool(dec_fleet and dec_fleet.trigger)
+    window_local = dec_local.window_calls if dec_local else 0
+    window_fleet = dec_fleet.window_calls if dec_fleet else 0
+
+    rows = [
+        {"scope": "process (one replica)", "window calls": window_local,
+         "min_calls": cfg.min_calls, "trigger": local_trigger},
+        {"scope": f"fleet ({REPLICAS} replicas)",
+         "window calls": window_fleet, "min_calls": cfg.min_calls,
+         "trigger": fleet_trigger},
+    ]
+    print(table(rows, ["scope", "window calls", "min_calls", "trigger"],
+                "E17 — retune trigger off aggregated fleet telemetry"))
+    print(f"\n{REPLICAS} replicas x {per_replica} calls: each window sits "
+          f"below min_calls={cfg.min_calls}; only the aggregated view "
+          f"({window_fleet} calls, scope "
+          f"{ctl_fleet.stats()['telemetry_scope']}) trips the controller")
+    _reset()
+    return {"replicas": REPLICAS, "calls_per_replica": per_replica,
+            "min_calls": cfg.min_calls,
+            "window_calls_local": window_local,
+            "window_calls_fleet": window_fleet,
+            "local_trigger": local_trigger, "fleet_trigger": fleet_trigger,
+            "pass": bool(fleet_trigger and not local_trigger)}
+
+
+def run(fast: bool = True) -> dict:
+    tmp = Path(tempfile.mkdtemp(prefix="bench_router_"))
+    try:
+        routing = _bench_routing(fast, tmp)
+        trigger = _bench_fleet_trigger(fast, tmp)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    out = {"routing": routing, "fleet_trigger": trigger,
+           "pass": bool(routing["pass"] and trigger["pass"])}
+    save("router", out)
+    print(f"\nE17 verdict: {'PASS' if out['pass'] else 'FAIL'}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -206,6 +206,35 @@ GATES: List[Gate] = [
             f"stale={_get(r, 'fleet', 'stale', default='?')}, max lag "
             f"{_get(r, 'fleet', 'max_lag_s', default=0)*1e3:.0f} ms"),
     ),
+    Gate(
+        file="router",
+        name="shape-affinity routing >= round-robin on geomean TFLOPS and "
+             "plan hit rate, zero starved class",
+        check=lambda r: _get(r, "routing", "pass") is True,
+        detail=lambda r: (
+            f"TFLOPS x{_get(r, 'routing', 'tflops_ratio_vs_rr', default=0):.2f}"
+            f" vs round-robin, hit rate "
+            f"{_get(r, 'routing', 'hit_rate_affinity', default=0):.3f} vs "
+            f"{_get(r, 'routing', 'hit_rate_round_robin', default=0):.3f}, "
+            f"starved classes "
+            f"{_get(r, 'routing', 'starved_classes', default='?')} "
+            f"(plan entries {_get(r, 'routing', 'plan_entries', default=[])})"),
+    ),
+    Gate(
+        file="router",
+        name="retune triggers off aggregated fleet telemetry that no "
+             "single replica's window trips",
+        check=lambda r: _get(r, "fleet_trigger", "pass") is True,
+        detail=lambda r: (
+            f"local window "
+            f"{_get(r, 'fleet_trigger', 'window_calls_local', default=0)} "
+            f"calls -> trigger="
+            f"{_get(r, 'fleet_trigger', 'local_trigger')}, fleet window "
+            f"{_get(r, 'fleet_trigger', 'window_calls_fleet', default=0)} "
+            f"calls -> trigger={_get(r, 'fleet_trigger', 'fleet_trigger')} "
+            f"(min_calls "
+            f"{_get(r, 'fleet_trigger', 'min_calls', default='?')})"),
+    ),
 ]
 
 

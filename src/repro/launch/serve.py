@@ -67,6 +67,17 @@ def main() -> None:
     p.add_argument("--retune-publish", default=None,
                    help="plan registry directory each successful retune "
                         "publishes its compiled plan to")
+    p.add_argument("--telemetry-export", type=float, default=0.0,
+                   help="with --retune-fleet: export this engine's shape "
+                        "telemetry to the fleet bus every N seconds and "
+                        "retune off the aggregated fleet-global view "
+                        "(0 = process-local telemetry)")
+    p.add_argument("--router", choices=["affinity", "round_robin", "random"],
+                   default=None,
+                   help="request-router policy: 'affinity' routes each "
+                        "request to the replica whose dispatch plan covers "
+                        "its shapes (load-bounded, with a no-starvation "
+                        "escape); omit to disable routing")
     p.add_argument("--status-port", type=int, default=None,
                    help="serve /metrics, /status and /plan from inside the "
                         "engine on this port (0 = ephemeral)")
@@ -98,6 +109,8 @@ def main() -> None:
         follow=args.follow,
         follow_interval_s=args.follow_interval,
         retune_publish=args.retune_publish,
+        telemetry_export_s=args.telemetry_export,
+        router=args.router,
         status_port=args.status_port))
     if eng.status_server is not None:
         print(f"status endpoint: {eng.status_server.url} "
@@ -125,7 +138,12 @@ def main() -> None:
                       "`fleet drain --wait` to finish and merge them)")
         st = eng.controller.stats()
         print(f"retune: {st['retunes']} epoch(s) over {st['checks']} polls, "
-              f"serving generation {st['generation']}")
+              f"serving generation {st['generation']} "
+              f"(telemetry scope: {st['telemetry_scope']})")
+    if eng.router is not None:
+        rt = eng.router.stats()
+        print(f"router[{rt['policy']}]: {rt['decisions']} decision(s) "
+              f"by outcome {rt['outcomes']}")
 
 
 if __name__ == "__main__":

@@ -301,12 +301,24 @@ def attention(p: Params, x: jax.Array, *, n_heads: int, n_kv: int,
     else:
         q_start = 0
 
-    if cache is not None and S == 1 and decode_kv_splits > 1 \
-            and k.shape[1] % decode_kv_splits == 0:
-        # long-context decode: sequence-parallel flash-decoding (SP)
-        from repro.serve.flash_decode import flash_decode_attention
-        out = flash_decode_attention(q, k, v, kv_len,
-                                     n_splits=decode_kv_splits)
+    n_splits = 0
+    if cache is not None and S == 1 and decode_kv_splits > 1:
+        # long-context decode: sequence-parallel flash-decoding (SP).
+        # The split count routes through the tuned attention space (this
+        # runs at trace time, so the resolver's telemetry record is
+        # captured by the engine like any kernel call); the caller's
+        # decode_kv_splits is the heuristic fallback when nothing tuned
+        # resolves, so untuned processes behave exactly as before.
+        from repro.serve.flash_decode import (flash_decode_attention,
+                                              resolve_decode_splits)
+        n_splits = resolve_decode_splits(
+            B=B, Hq=n_heads, Hkv=n_kv, Lkv=k.shape[1], D=head_dim,
+            dtype_bits=dispatch._dtype_bits(q.dtype), causal=int(causal),
+            default=decode_kv_splits)
+        if n_splits <= 1 or k.shape[1] % n_splits != 0:
+            n_splits = 0                 # untiled split: dense decode path
+    if n_splits > 1:
+        out = flash_decode_attention(q, k, v, kv_len, n_splits=n_splits)
     elif causal_block_skip and causal and memory is None and cache is None \
             and q.shape[1] == k.shape[1] \
             and q.shape[1] % min(attn_chunk, q.shape[1]) == 0:

@@ -1,4 +1,12 @@
 from .engine import Engine, ServeConfig
-from .flash_decode import flash_decode_attention
+from .flash_decode import flash_decode_attention, resolve_decode_splits
+from .router import (ROUTER_POLICIES, RandomRouter, Replica,
+                     RoundRobinRouter, Router, ShapeAffinityRouter,
+                     make_router, plan_coverage)
 
-__all__ = ["Engine", "ServeConfig", "flash_decode_attention"]
+__all__ = [
+    "Engine", "ServeConfig",
+    "flash_decode_attention", "resolve_decode_splits",
+    "ROUTER_POLICIES", "RandomRouter", "Replica", "RoundRobinRouter",
+    "Router", "ShapeAffinityRouter", "make_router", "plan_coverage",
+]

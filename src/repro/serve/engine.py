@@ -73,6 +73,19 @@ class ServeConfig:
     # regression-sentry noise margin gating each retune's serving swap
     # (None disables the gate; see tunedb.obs.RegressionSentry)
     retune_sentry: Optional[float] = None
+    # -- fleet-global telemetry + routing (tunedb.telemetry / serve.router) ---
+    # > 0 (with retune_fleet set): export this engine's telemetry to the
+    # fleet bus every N seconds (<fleet>/telemetry/<worker>/, cumulative
+    # dumps) AND hand the retune controller the aggregated
+    # FleetTelemetryView — retunes then trigger off fleet-wide hot-shape
+    # mass instead of this one process's window; 0 stays process-local
+    telemetry_export_s: float = 0.0
+    # request-router policy for a multi-replica front-end: "affinity"
+    # (route each request to the replica whose plan covers its shapes),
+    # "round_robin" / "random" baselines; None disables routing.  The
+    # engine registers itself as the first replica; peers are added via
+    # engine.router.add_replica
+    router: Optional[str] = None
     # -- golden plan artifacts (tunedb.plans; see docs/PLANS.md) --------------
     # load a persisted plan artifact directory at startup instead of
     # compiling one — the cold-start path that skips install-time model
@@ -460,10 +473,41 @@ class Engine:
         self.admission = (StoreAwareAdmission()
                           if serve_cfg.admission == "store" else None)
         self._last_admit_len: Optional[int] = None
+        # fleet-global telemetry: export this engine's counters to the bus
+        # and aggregate every replica's dumps into one global view the
+        # retune controller reads (drift/untuned-mass off FLEET-wide
+        # traffic, not this process's window) — own dumps are excluded
+        # from the aggregate so local counts never fold in twice
+        self.exporter = None
+        self._fleet_view = None
+        if serve_cfg.retune_fleet and serve_cfg.telemetry_export_s > 0:
+            from repro.tunedb.fleet import FleetDir
+            from repro.tunedb.telemetry import (FleetTelemetryView,
+                                                TelemetryExporter,
+                                                get_telemetry)
+            tel_dir = FleetDir(serve_cfg.retune_fleet).telemetry_dir()
+            self.exporter = TelemetryExporter(
+                get_telemetry(), tel_dir,
+                interval_s=serve_cfg.telemetry_export_s).start()
+            self._fleet_view = FleetTelemetryView(
+                tel_dir, exclude={self.exporter.worker_id},
+                refresh_s=serve_cfg.telemetry_export_s)
         self.controller = None
         self._next_retune_tick = 0
         if serve_cfg.retune or serve_cfg.retune_fleet:
             self._init_controller(retune_tuners)
+        # shape-affinity request router: this engine registers itself as
+        # the first routable replica (its live plan + active-slot load);
+        # front-ends add peer replicas through engine.router.add_replica
+        self.router = None
+        if serve_cfg.router:
+            from repro.tunedb.store import serving_state
+            from .router import make_router
+            self.router = make_router(serve_cfg.router)
+            self.router.add_replica(
+                "local",
+                plan=lambda: serving_state().plan,
+                load=lambda: sum(r is not None for r in self.slot_req))
         # plan follower: a daemon thread adopting golden plan generations a
         # coordinator publishes to the registry — each one digest-verified,
         # sentry-diffed, and swapped in atomically (docs/PLANS.md)
@@ -490,7 +534,8 @@ class Engine:
                 port=serve_cfg.status_port,
                 controller=self.controller,
                 fleet=serve_cfg.retune_fleet,
-                follower=self.follower).start()
+                follower=self.follower,
+                router=self.router).start()
 
     def _init_controller(self, retune_tuners: Optional[Dict[str, Any]]) -> None:
         """Close the loop in-process: drift-triggered sessions + hot-swap.
@@ -509,6 +554,10 @@ class Engine:
             self.tunedb_store = store
         self.controller = RetuneController(
             store,
+            # the aggregated fleet view when telemetry export is on: drift
+            # and untuned-mass judge GLOBAL hot-shape mass, so a shape no
+            # single replica's window would trip on still triggers here
+            telemetry=self._fleet_view,
             tuners=retune_tuners,
             models_dir=self._models_dir,
             async_mode=sc.retune_async,
@@ -602,6 +651,13 @@ class Engine:
                                               last_len=self._last_admit_len)
                 req = pending.pop(nxt)
                 self._last_admit_len = len(req.prompt)
+                if self.router is not None:
+                    # single-process engine: the decision is recorded (and
+                    # scraped at /status) even though the only replica is
+                    # us — a front-end holding the same router object over
+                    # several engines gets real placement from this call
+                    self.router.route(
+                        self._prefill_shapes.get(len(req.prompt), []))
                 self._prefill_one(slot, req)
                 active += 1
             if active == 0:

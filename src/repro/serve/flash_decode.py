@@ -24,6 +24,35 @@ import jax.numpy as jnp
 from repro.parallel.sharding import constrain
 
 
+def resolve_decode_splits(*, B: int, Hq: int, Hkv: int, Lkv: int, D: int,
+                          dtype_bits: int, causal: int = 1,
+                          default: int = 1) -> int:
+    """Tuned KV-split count for one decode step, telemetry-fed.
+
+    The split count is derived from the attention space's tuned ``b_kv``
+    (KV block size) for the decode shape ``Lq=1``: ``n_splits = Lkv //
+    b_kv`` — each split reduces one tuned-size KV block.  The shape is
+    recorded into telemetry first, so decode-split traffic participates in
+    hot-shape mining, frozen plans, and retunes like every other kernel
+    call (ROADMAP item 3, first slice).  Falls back to ``default`` (the
+    previously hard-coded caller value) when no tuned config resolves or
+    the tuned block does not tile ``Lkv`` — behavior is unchanged for
+    untuned processes.
+    """
+    from repro.kernels import dispatch
+    inputs = {"B": int(B), "Hq": int(Hq), "Hkv": int(Hkv), "Lq": 1,
+              "Lkv": int(Lkv), "D": int(D), "dtype_bits": int(dtype_bits),
+              "causal": int(causal)}
+    dispatch._record("attention", inputs)
+    cfg = dispatch._tuned_cfg("attention", inputs)
+    if cfg is None:
+        return default
+    b_kv = int(cfg.get("b_kv", 0))
+    if b_kv <= 0 or Lkv % b_kv != 0:
+        return default
+    return max(1, Lkv // b_kv)
+
+
 def flash_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                            kv_len: jax.Array, *, n_splits: int
                            ) -> jax.Array:

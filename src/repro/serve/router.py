@@ -1,0 +1,243 @@
+"""Shape-affinity request routing across serving replicas.
+
+With fleet-global telemetry (PR 8) the coordinator publishes SMALL
+per-replica plans — each replica specializes on one affinity class of the
+global hot set ("A Few Fit Most" applied across processes).  That only
+pays off if requests actually LAND on the replica whose plan covers their
+shapes; this module is the front-end that makes it so.
+
+``Router`` is the one interface: a set of :class:`Replica` handles (name
+plus live plan/load probes) and ``route(shapes) -> Replica`` per pending
+request.  Three policies:
+
+``ShapeAffinityRouter``
+    Scores every replica by :func:`plan_coverage` — the fraction of the
+    request's (space, inputs) shapes the replica's installed
+    :class:`~repro.tunedb.store.DispatchPlan` already resolves (the same
+    ``shape_key`` probe the store-aware admission uses) — and assigns the
+    request to the best-covering replica *within a load bound*: a replica
+    more than ``max_imbalance`` requests above the least-loaded one is
+    ineligible, so affinity can never pile every request onto one hot
+    replica.  A request NO plan covers takes the no-starvation escape
+    hatch: least-loaded replica, unconditionally — every request class is
+    always served.  Decision outcomes:
+
+    * ``affinity`` — the best-covering replica won outright;
+    * ``balanced`` — the globally best-covering replica was excluded by
+      the load bound and an eligible replica was taken instead;
+    * ``escape``   — zero coverage everywhere; routed by load alone.
+
+``RoundRobinRouter`` / ``RandomRouter``
+    The baselines the E17 gate compares against (outcome ``baseline``).
+
+Wired through ``ServeConfig(router=...)`` / ``launch.serve --router`` and
+the ``tunedb fleet route`` CLI verb; decisions feed the
+``tunedb_router_decisions_total{policy,outcome}`` metric family and the
+``/status`` router section.
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+from typing import Callable, Dict, Iterable, List, Optional, Tuple, Union
+
+from repro.tunedb.store import shape_key
+
+__all__ = [
+    "ROUTER_POLICIES", "Replica", "Router", "RoundRobinRouter",
+    "RandomRouter", "ShapeAffinityRouter", "make_router", "plan_coverage",
+]
+
+Shape = Tuple[str, Dict[str, int]]          # (space, inputs)
+
+
+def plan_coverage(plan, shapes: Iterable[Shape]) -> float:
+    """Fraction of ``(space, inputs)`` shapes ``plan`` already resolves.
+
+    The same lock-free ``plan.lookup(space, shape_key(inputs))`` probe the
+    store-aware admission scores with — a covered shape dispatches at
+    zero resolution cost on that replica.  No plan or no shapes -> 0.0
+    (nothing is known to be covered).
+    """
+    shapes = list(shapes)
+    if plan is None or not shapes:
+        return 0.0
+    hits = 0
+    for space, inputs in shapes:
+        if plan.lookup(space, shape_key(inputs)) is not None:
+            hits += 1
+    return hits / len(shapes)
+
+
+class Replica:
+    """One routable replica: a name plus live plan and load probes.
+
+    ``plan`` and ``load`` may be static values or zero-arg callables —
+    an in-process engine hands in ``lambda: serving_state().plan`` and its
+    active-slot counter; the CLI dry-run hands in plans pulled from the
+    per-replica registries and a synthetic load of 0.
+    """
+
+    __slots__ = ("name", "_plan", "_load", "assigned")
+
+    def __init__(self, name: str, *,
+                 plan: Union[object, Callable[[], object], None] = None,
+                 load: Union[float, Callable[[], float], None] = None):
+        self.name = name
+        self._plan = plan
+        self._load = load
+        self.assigned = 0               # router-side assignment counter
+
+    def current_plan(self):
+        return self._plan() if callable(self._plan) else self._plan
+
+    def current_load(self) -> float:
+        if callable(self._load):
+            return float(self._load())
+        if self._load is not None:
+            return float(self._load)
+        return float(self.assigned)     # default: what the router sent it
+
+    def stats(self) -> Dict[str, object]:
+        plan = self.current_plan()
+        return {"name": self.name, "assigned": self.assigned,
+                "load": self.current_load(),
+                "plan_entries": (len(plan) if plan is not None else 0)}
+
+
+class Router:
+    """Policy-agnostic base: replica registry, accounting, metrics."""
+
+    policy = "base"
+
+    def __init__(self, replicas: Optional[Iterable[Replica]] = None):
+        self._lock = threading.Lock()
+        self.replicas: List[Replica] = list(replicas or [])
+        self.decisions = 0
+        self.outcomes: Dict[str, int] = {}
+
+    def add_replica(self, name: str, *, plan=None, load=None) -> Replica:
+        r = Replica(name, plan=plan, load=load)
+        with self._lock:
+            self.replicas.append(r)
+        return r
+
+    def route(self, shapes: Iterable[Shape] = ()) -> Replica:
+        """Assign one pending request (its prefill/decode shapes) to a
+        replica.  Every request gets a replica — policies may only bias
+        the choice, never refuse it."""
+        with self._lock:
+            if not self.replicas:
+                raise RuntimeError("router has no replicas to route to")
+            replica, outcome = self._pick(list(shapes))
+            replica.assigned += 1
+            self.decisions += 1
+            self.outcomes[outcome] = self.outcomes.get(outcome, 0) + 1
+        self._count_decision(outcome)
+        return replica
+
+    def _pick(self, shapes: List[Shape]) -> Tuple[Replica, str]:
+        raise NotImplementedError
+
+    def _count_decision(self, outcome: str) -> None:
+        try:
+            from repro.tunedb.obs.metrics import get_registry
+            get_registry().counter(
+                "tunedb_router_decisions_total",
+                "request routing decisions by policy and outcome").inc(
+                    policy=self.policy, outcome=outcome)
+        except Exception:               # metrics must never drop a request
+            pass
+
+    def stats(self) -> Dict[str, object]:
+        with self._lock:
+            return {"policy": self.policy, "decisions": self.decisions,
+                    "outcomes": dict(self.outcomes),
+                    "replicas": [r.stats() for r in self.replicas]}
+
+
+class RoundRobinRouter(Router):
+    """Baseline: cycle through replicas regardless of shape or load."""
+
+    policy = "round_robin"
+
+    def __init__(self, replicas: Optional[Iterable[Replica]] = None):
+        super().__init__(replicas)
+        self._next = 0
+
+    def _pick(self, shapes: List[Shape]) -> Tuple[Replica, str]:
+        r = self.replicas[self._next % len(self.replicas)]
+        self._next += 1
+        return r, "baseline"
+
+
+class RandomRouter(Router):
+    """Baseline: uniform random replica (seeded, reproducible)."""
+
+    policy = "random"
+
+    def __init__(self, replicas: Optional[Iterable[Replica]] = None, *,
+                 seed: int = 0):
+        super().__init__(replicas)
+        self._rng = random.Random(seed)
+
+    def _pick(self, shapes: List[Shape]) -> Tuple[Replica, str]:
+        return self._rng.choice(self.replicas), "baseline"
+
+
+class ShapeAffinityRouter(Router):
+    """Route to the replica whose plan covers the request's shapes.
+
+    ``max_imbalance`` is the load-balance bound: a replica whose current
+    load exceeds the least-loaded replica's by more than this many
+    requests is ineligible this decision, however good its coverage —
+    affinity sharpens placement, it must not starve the rest of the fleet
+    of work or melt one replica.  Ties on coverage break toward the
+    less-loaded replica, then the registration order (deterministic).
+    """
+
+    policy = "affinity"
+
+    def __init__(self, replicas: Optional[Iterable[Replica]] = None, *,
+                 max_imbalance: float = 4.0):
+        super().__init__(replicas)
+        self.max_imbalance = float(max_imbalance)
+
+    def _pick(self, shapes: List[Shape]) -> Tuple[Replica, str]:
+        loads = [r.current_load() for r in self.replicas]
+        floor = min(loads)
+        coverage = [plan_coverage(r.current_plan(), shapes)
+                    for r in self.replicas]
+        eligible = [i for i, load in enumerate(loads)
+                    if load - floor <= self.max_imbalance]
+        best = max(eligible, key=lambda i: (coverage[i], -loads[i], -i))
+        if coverage[best] <= 0.0:
+            # no-starvation escape hatch: nobody covers this request
+            # class, so place it purely by load — it is served NOW and its
+            # shapes enter that replica's telemetry, which is what later
+            # earns it a specialized plan
+            idx = min(range(len(self.replicas)), key=lambda i: loads[i])
+            return self.replicas[idx], "escape"
+        if max(coverage) > coverage[best]:
+            return self.replicas[best], "balanced"
+        return self.replicas[best], "affinity"
+
+
+ROUTER_POLICIES: Dict[str, type] = {
+    "affinity": ShapeAffinityRouter,
+    "round_robin": RoundRobinRouter,
+    "random": RandomRouter,
+}
+
+
+def make_router(policy: str, **kwargs) -> Router:
+    """Instantiate a router by policy name (the ``ServeConfig.router`` /
+    ``--router`` / ``fleet route --policy`` values)."""
+    try:
+        cls = ROUTER_POLICIES[policy]
+    except KeyError:
+        raise ValueError(
+            f"unknown router policy {policy!r}; "
+            f"choose from {sorted(ROUTER_POLICIES)}") from None
+    return cls(**kwargs)

@@ -49,8 +49,9 @@ from .store import (PLAN_HOT_K, SCHEMA_VERSION, DispatchPlan, RecordStore,
                     clear_store, compile_plan, get_store, input_key,
                     install_generation, install_serving, install_store,
                     normalize_config, serving_state, shape_key)
-from .telemetry import (ShapeTelemetry, SpaceDrift, TelemetrySnapshot,
-                        clear_telemetry, get_telemetry, record_shape)
+from .telemetry import (FleetTelemetryView, ShapeTelemetry, SpaceDrift,
+                        TelemetryExporter, TelemetrySnapshot, clear_telemetry,
+                        get_telemetry, record_shape)
 
 __all__ = [
     "PLAN_HOT_K", "SCHEMA_VERSION", "DispatchPlan", "RecordStore",
@@ -58,8 +59,8 @@ __all__ = [
     "active_fingerprint", "clear_store", "compile_plan", "get_store",
     "input_key", "install_generation", "install_serving", "install_store",
     "normalize_config", "serving_state", "shape_key",
-    "ShapeTelemetry", "SpaceDrift", "TelemetrySnapshot", "clear_telemetry",
-    "get_telemetry", "record_shape",
+    "FleetTelemetryView", "ShapeTelemetry", "SpaceDrift", "TelemetryExporter",
+    "TelemetrySnapshot", "clear_telemetry", "get_telemetry", "record_shape",
     "TuningSession", "TuneJob", "SessionReport", "backend_fingerprint",
     "MODEL_SCHEMA_VERSION", "ModelSet", "PerfModel", "clear_models",
     "collect_samples", "default_models_dir", "get_models", "harvest",

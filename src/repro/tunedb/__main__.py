@@ -27,6 +27,9 @@ Subcommands:
             fleet drain   tell workers to exit once the queue empties;
                           --wait finalizes like ``start --wait``; --compact
                           archives cursor-complete merged shards off the bus
+            fleet route   dry-run shape-affinity routing: score a --shape
+                          request against every per-replica plan registry
+                          under --registry-root and print the chosen replica
   plan    golden dispatch-plan artifacts (docs/PLANS.md):
             plan export   compile a store (+models/telemetry) into a
                           versioned plan artifact under <store>.plan/
@@ -520,7 +523,8 @@ def _cmd_fleet_worker(args: argparse.Namespace) -> int:
 
     worker = Worker(args.fleet, worker_id=args.worker_id,
                     tuner_factory=tuner_factory,
-                    remeasure=not args.no_remeasure, verbose=True)
+                    remeasure=not args.no_remeasure, verbose=True,
+                    telemetry_export_s=args.telemetry_export)
     print(f"[fleet] worker {worker.worker_id} claiming from {args.fleet}")
     report = worker.run(
         max_jobs=args.max_jobs if args.max_jobs > 0 else None,
@@ -603,6 +607,62 @@ def _cmd_fleet_drain(args: argparse.Namespace) -> int:
         else:
             print(f"[fleet] skipping --compact: {coord.outstanding()} "
                   "job(s) still outstanding (use --wait)", file=sys.stderr)
+    return 0
+
+
+def _cmd_fleet_route(args: argparse.Namespace) -> int:
+    """Dry-run one routing decision against published per-replica plans.
+
+    Loads the current plan from every per-replica registry under
+    ``--registry-root`` (what ``Coordinator.publish_replica_plans`` writes),
+    scores the ``--shape`` request against each with the same
+    ``plan_coverage`` probe the in-engine router uses, and prints the
+    chosen replica — the operator's answer to "where would this request
+    land, and why".
+    """
+    from repro.core.space import SPACES
+    from repro.serve.router import make_router, plan_coverage
+
+    from .plans import PlanArtifactError, PlanRegistry
+
+    if args.shape and not args.space:
+        raise SystemExit("--shape needs --space")
+    shapes = [(args.space, _parse_shape(spec, SPACES[args.space]))
+              for spec in args.shape]
+
+    root = pathlib.Path(args.registry_root)
+    replica_dirs = sorted(d for d in root.glob(args.glob) if d.is_dir())
+    if not replica_dirs:
+        raise SystemExit(f"[fleet] no replica registries matching "
+                         f"{args.glob!r} under {root}")
+    router = make_router(args.policy)
+    plans: Dict[str, object] = {}
+    for d in replica_dirs:
+        reg = PlanRegistry(d)
+        pointer = reg.current()
+        plan = None
+        if pointer is not None:
+            try:
+                plan = reg.pull(pointer)
+            except PlanArtifactError as e:
+                print(f"[fleet] {d.name}: plan rejected ({e})",
+                      file=sys.stderr)
+        plans[d.name] = plan
+        router.add_replica(d.name, plan=plan)
+
+    picked = router.route(shapes)
+    outcomes = router.stats()["outcomes"]
+    out = {
+        "policy": args.policy,
+        "replica": picked.name,
+        "outcome": next(iter(outcomes)),
+        "shapes": [{"space": s, "inputs": i} for s, i in shapes],
+        "coverage": {name: plan_coverage(p, shapes)
+                     for name, p in plans.items()},
+        "plan_entries": {name: (len(p) if p is not None else 0)
+                         for name, p in plans.items()},
+    }
+    print(json.dumps(out, indent=1, sort_keys=True))
     return 0
 
 
@@ -1019,6 +1079,11 @@ def build_parser() -> argparse.ArgumentParser:
     fw.add_argument("--train-samples", type=int, default=4000)
     fw.add_argument("--epochs", type=int, default=12)
     fw.add_argument("--seed", type=int, default=0)
+    fw.add_argument("--telemetry-export", type=float, default=0.0,
+                    help="export this worker's shape telemetry to the "
+                         "fleet bus every N seconds (0 = off); the "
+                         "coordinator aggregates dumps into the "
+                         "fleet-global view")
     fw.set_defaults(fn=_cmd_fleet_worker)
 
     fst = fsub.add_parser("status", help="print fleet state as JSON")
@@ -1040,6 +1105,25 @@ def build_parser() -> argparse.ArgumentParser:
                     help="wait for outstanding jobs, merge, and report")
     _add_fleet_finalize_args(fd)
     fd.set_defaults(fn=_cmd_fleet_drain)
+
+    fr = fsub.add_parser(
+        "route", help="dry-run shape-affinity routing against per-replica "
+                      "plan registries")
+    fr.add_argument("--registry-root", required=True,
+                    help="directory holding the per-replica plan registries "
+                         "(what the coordinator's replica-plan publish "
+                         "writes)")
+    fr.add_argument("--glob", default="replica-*",
+                    help="registry subdirectory pattern under the root")
+    fr.add_argument("--space", default=None,
+                    choices=["gemm", "conv", "attention", "ssd"],
+                    help="space the --shape flags belong to")
+    fr.add_argument("--shape", action="append", default=[],
+                    help="request shape, e.g. M=4096,N=16,K=2560 "
+                         "(repeatable: a request may carry several shapes)")
+    fr.add_argument("--policy", default="affinity",
+                    choices=["affinity", "round_robin", "random"])
+    fr.set_defaults(fn=_cmd_fleet_route)
 
     pl = sub.add_parser(
         "plan", help="golden dispatch-plan artifacts (see docs/PLANS.md)")

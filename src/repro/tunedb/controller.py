@@ -771,6 +771,9 @@ class RetuneController:
             "epoch": self.epoch,
             "checks": self.checks,
             "retunes": self.retunes,
+            # "fleet" when the controller reads a FleetTelemetryView —
+            # retunes then trigger off aggregated multi-replica mass
+            "telemetry_scope": getattr(self.telemetry, "scope", "process"),
             "sentry_blocked": self.sentry_blocked,
             "published_plans": self.published_plans,
             "publish_failed": self.publish_failed,

@@ -30,7 +30,9 @@ import pathlib
 import time
 from typing import Dict, Iterable, List, Mapping, Optional, Set, Tuple
 
-from ..store import RecordStore, SAMPLE_SOURCE, TuneRecord
+from ..store import (DispatchPlan, RecordStore, SAMPLE_SOURCE, TuneRecord,
+                     shape_key)
+from ..telemetry import FleetTelemetryView, ShapeTelemetry
 from ..obs.sentry import RegressionSentry
 from .lease import REPORT, FleetDir, FleetJob, _atomic_write
 
@@ -139,14 +141,20 @@ class Coordinator:
         self.published += n
         return n
 
-    def plan_from_telemetry(self, telemetry, *, spaces: Optional[List[str]]
-                            = None, top_k: int = 8,
+    def plan_from_telemetry(self, telemetry=None, *,
+                            spaces: Optional[List[str]] = None, top_k: int = 8,
                             backend: Optional[str] = None,
                             skip_existing: bool = True,
                             source: str = "fleet") -> List[FleetJob]:
         """Mine the top-K hot shapes per space into publishable jobs,
         skipping shapes the parent store already serves (under ``backend``,
-        when the fleet tunes for a pinned fingerprint)."""
+        when the fleet tunes for a pinned fingerprint).  With no
+        ``telemetry`` argument the FLEET-GLOBAL view is mined: every
+        replica's latest cumulative dump on the bus, aggregated by
+        :meth:`global_telemetry` — so published plans track fleet-wide
+        hot-shape mass, not one process's window."""
+        if telemetry is None:
+            telemetry = self.global_telemetry()
         jobs: List[FleetJob] = []
         for space in (spaces if spaces is not None else telemetry.spaces()):
             for inputs, count in telemetry.hot_shapes(space, top_k):
@@ -156,6 +164,148 @@ class Coordinator:
                 jobs.append(FleetJob(space=space, inputs=dict(inputs),
                                      count=count, source=source))
         return jobs
+
+    # -- fleet-global telemetry ------------------------------------------------
+    def global_telemetry(self, *, local: Optional[ShapeTelemetry] = None,
+                         refresh_s: float = 0.0) -> FleetTelemetryView:
+        """The aggregated fleet-wide telemetry view.
+
+        Folds every worker's latest cumulative dump under
+        ``<fleet>/telemetry/`` (written by
+        :class:`~repro.tunedb.telemetry.TelemetryExporter`) into one
+        :class:`FleetTelemetryView` with per-replica provenance
+        (``.replicas()``: worker -> {epoch, calls, age_s}).  ``local``
+        defaults to an EMPTY telemetry: the coordinator is an aggregator,
+        not a traffic source, so the view is pure bus state unless a
+        serving process hands in its own counters.
+        """
+        return FleetTelemetryView(
+            self.fleet.telemetry_dir(),
+            local=local if local is not None else ShapeTelemetry(),
+            refresh_s=refresh_s)
+
+    def telemetry_provenance(self) -> Dict[str, Dict[str, object]]:
+        """Per-replica dump provenance off the bus, for report/status."""
+        return self.global_telemetry().replicas()
+
+    @staticmethod
+    def _shape_bucket(space: str, inputs: Mapping[str, object]) -> tuple:
+        """Affinity-class signature: (space, log2-bucketed dims).
+
+        Shapes whose dimensions share log2 buckets want the same kernel
+        configs (the store's nearest index uses the same quantization), so
+        they belong on the same replica — routing them together keeps each
+        replica's plan small AND its hit rate high.
+        """
+        sig = []
+        for k in sorted(inputs):
+            v = inputs[k]
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                sig.append((k, str(v)))
+            elif v > 0:
+                sig.append((k, int(v).bit_length()))
+            else:
+                sig.append((k, int(v)))
+        return (space, tuple(sig))
+
+    def partition_hot_shapes(self, n_replicas: int, *, telemetry=None,
+                             top_k: int = 32,
+                             spaces: Optional[List[str]] = None
+                             ) -> List[List[Tuple[str, Dict[str, int], int]]]:
+        """Partition the global hot set into per-replica affinity classes.
+
+        Hot shapes group into buckets by :meth:`_shape_bucket` signature;
+        buckets are assigned hottest-first to the replica with the least
+        accumulated call mass (greedy LPT) — so class mass stays balanced
+        while same-bucket shapes land on the same replica.  Returns one
+        ``[(space, inputs, count), ...]`` class per replica.
+        """
+        if n_replicas <= 0:
+            raise ValueError(f"n_replicas must be positive, got {n_replicas}")
+        if telemetry is None:
+            telemetry = self.global_telemetry()
+        buckets: Dict[tuple, List] = {}
+        for space in (spaces if spaces is not None else telemetry.spaces()):
+            for inputs, count in telemetry.hot_shapes(space, top_k):
+                b = buckets.setdefault(self._shape_bucket(space, inputs),
+                                       [0, []])
+                b[0] += count
+                b[1].append((space, dict(inputs), int(count)))
+        classes: List[List[Tuple[str, Dict[str, int], int]]] = [
+            [] for _ in range(n_replicas)]
+        loads = [0] * n_replicas
+        for _sig, (mass, shapes) in sorted(
+                buckets.items(), key=lambda kv: (-kv[1][0], repr(kv[0]))):
+            i = min(range(n_replicas), key=lambda j: (loads[j], j))
+            loads[i] += mass
+            classes[i].extend(shapes)
+        return classes
+
+    def publish_replica_plans(self, registry_root: os.PathLike,
+                              n_replicas: int, *, telemetry=None,
+                              fingerprint: Optional[str] = None,
+                              models_dir: Optional[os.PathLike] = None,
+                              top_k: int = 32) -> List[Dict[str, object]]:
+        """Publish one SMALL specialized plan per replica affinity class.
+
+        Each class's shapes resolve through the usual cascade (store exact
+        -> model predict -> nearest) and freeze into a per-replica
+        :class:`DispatchPlan` published under
+        ``<registry_root>/replica-<i>/`` via the existing
+        :class:`~repro.tunedb.plans.PlanRegistry` — replicas follow their
+        own registry with the same :class:`PlanFollower` protocol.  Unlike
+        ``publish_plan`` (one global plan covering every serving record),
+        a replica plan holds ONLY its class: that is what keeps per-replica
+        plans small and affinity-routing hit rates high.  Returns one
+        summary dict per replica.
+        """
+        from ..plans import PlanRegistry
+        classes = self.partition_hot_shapes(n_replicas, telemetry=telemetry,
+                                            top_k=top_k)
+        models = self.fresh_models()
+        if models is None and models_dir \
+                and pathlib.Path(models_dir).is_dir():
+            from ..model import ModelSet
+            loaded = ModelSet.load(models_dir)
+            if len(loaded):
+                models = loaded
+        predict = getattr(models, "predict", None) if models is not None \
+            else None
+        out: List[Dict[str, object]] = []
+        root = pathlib.Path(registry_root)
+        for i, shapes in enumerate(classes):
+            table: Dict[tuple, Tuple[Dict[str, int], str]] = {}
+            for space, inputs, _count in shapes:
+                cfg, tier = None, ""
+                rec = self.store.get(space, inputs, backend=fingerprint)
+                if rec is not None:
+                    cfg, tier = rec.config, "exact"
+                if cfg is None and callable(predict):
+                    got = predict(space, inputs, backend=fingerprint)
+                    if got is not None:
+                        cfg, tier = got[0], "model"
+                if cfg is None:
+                    rec = self.store.nearest(space, inputs,
+                                             backend=fingerprint, count=False)
+                    if rec is not None:
+                        cfg, tier = rec.config, "nearest"
+                if cfg is not None:
+                    table[(space, shape_key(inputs))] = (dict(cfg), tier)
+            name = f"replica-{i}"
+            manifest = None
+            if table:
+                plan = DispatchPlan(generation=0, fingerprint=fingerprint,
+                                    store_version=self.store.version,
+                                    table=table)
+                manifest = PlanRegistry(root / name).publish(
+                    plan, store=self.store)
+            out.append({
+                "replica": name, "registry": str(root / name),
+                "shapes": len(shapes), "entries": len(table),
+                "mass": sum(c for _, _, c in shapes),
+                "generation": (manifest.generation if manifest is not None
+                               else None)})
+        return out
 
     # -- shard merge -----------------------------------------------------------
     def _cursor(self, worker_id: str) -> Tuple[int, int]:
@@ -403,10 +553,17 @@ class Coordinator:
         ships the result.  Models come from the last ``retrain()`` when one
         ran, else from ``models_dir``; the staleness gate cannot trip here
         because the plan is compiled from the store's CURRENT version.
-        Returns the published :class:`~repro.tunedb.plans.PlanManifest`.
+        With no ``telemetry`` argument, the fleet-global aggregated view
+        (when any replica has dumped onto the bus) pre-resolves the GLOBAL
+        hot set into the plan.  Returns the published
+        :class:`~repro.tunedb.plans.PlanManifest`.
         """
         from ..plans import PlanRegistry
         from ..store import PLAN_HOT_K, compile_plan
+        if telemetry is None:
+            fleet_view = self.global_telemetry()
+            if fleet_view.total() > 0:
+                telemetry = fleet_view
         models = self.fresh_models()
         if models is None and models_dir and pathlib.Path(models_dir).is_dir():
             from ..model import ModelSet

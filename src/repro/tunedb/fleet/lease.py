@@ -160,6 +160,15 @@ class FleetDir:
     def shard_path(self, worker_id: str) -> pathlib.Path:
         return self.shard_dir() / f"{worker_id}.jsonl"
 
+    def telemetry_dir(self) -> pathlib.Path:
+        """Per-worker cumulative telemetry dumps ride the bus itself.
+
+        ``<fleet>/telemetry/<worker_id>/<epoch>.json`` — written by
+        :class:`~repro.tunedb.telemetry.TelemetryExporter`, aggregated by
+        the coordinator's :meth:`Coordinator.global_telemetry`.
+        """
+        return self.root / "telemetry"
+
     # -- publish -------------------------------------------------------------
     def publish(self, job: FleetJob, *, force: bool = False) -> bool:
         """Queue one job unless it is already anywhere in the lifecycle.

@@ -28,6 +28,7 @@ from typing import Callable, Dict, List, Mapping, Optional
 
 from ..session import record_from_search
 from ..store import RecordStore, SAMPLE_SOURCE, TuneRecord
+from ..telemetry import TelemetryExporter, get_telemetry
 from .lease import FleetDir, FleetJob
 
 
@@ -67,6 +68,7 @@ class Worker:
                  tuner_factory: Optional[Callable[[str], object]] = None,
                  heartbeat_s: float = 2.0, poll_s: float = 0.2,
                  remeasure: bool = True, collect_samples: bool = True,
+                 telemetry_export_s: float = 0.0,
                  verbose: bool = False):
         self.fleet = FleetDir(fleet_dir)
         self.worker_id = worker_id or default_worker_id()
@@ -74,6 +76,11 @@ class Worker:
         self.poll_s = poll_s
         self.remeasure = remeasure
         self.collect_samples = collect_samples
+        # > 0: periodically dump this process's telemetry onto the bus
+        # (``<fleet>/telemetry/<worker_id>/``) for the coordinator's
+        # fleet-global aggregation — see Coordinator.global_telemetry
+        self.telemetry_export_s = float(telemetry_export_s)
+        self.exporter: Optional[TelemetryExporter] = None
         self.verbose = verbose
         self._tuners: Dict[str, object] = dict(tuners or {})
         self._tuner_factory = tuner_factory or _default_tuner_factory
@@ -193,6 +200,11 @@ class Worker:
         """Work until drained (DRAIN marker + empty queue), ``max_jobs``
         jobs are done, or the queue stays empty for ``idle_timeout_s``."""
         t0 = time.time()
+        if self.telemetry_export_s > 0 and self.exporter is None:
+            self.exporter = TelemetryExporter(
+                get_telemetry(), self.fleet.telemetry_dir(),
+                worker_id=self.worker_id,
+                interval_s=self.telemetry_export_s).start()
         idle_since: Optional[float] = None
         while True:
             if max_jobs is not None and self.report.claimed >= max_jobs:
@@ -211,5 +223,8 @@ class Worker:
                     and now - idle_since >= idle_timeout_s):
                 break
             time.sleep(self.poll_s)
+        if self.exporter is not None:
+            self.exporter.stop()         # final dump: the window's tail lands
+            self.exporter = None
         self.report.wall_s = time.time() - t0
         return self.report

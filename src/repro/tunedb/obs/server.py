@@ -47,7 +47,7 @@ class StatusServer:
     def __init__(self, *, host: str = "127.0.0.1", port: int = 0,
                  controller=None, fleet: Optional[str] = None,
                  store=None, telemetry=None, models=None,
-                 follower=None) -> None:
+                 follower=None, router=None) -> None:
         self.host = host
         self.port = port
         self.controller = controller
@@ -56,6 +56,7 @@ class StatusServer:
         self.telemetry = telemetry
         self.models = models
         self.follower = follower
+        self.router = router
         self._httpd: Optional[ThreadingHTTPServer] = None
         self._thread: Optional[threading.Thread] = None
 
@@ -66,7 +67,8 @@ class StatusServer:
     def status_json(self) -> dict:
         return status_snapshot(store=self.store, telemetry=self.telemetry,
                                controller=self.controller, fleet=self.fleet,
-                               models=self.models, follower=self.follower)
+                               models=self.models, follower=self.follower,
+                               router=self.router)
 
     def plan_json(self) -> dict:
         return plan_snapshot()

@@ -17,6 +17,7 @@ Schema (version 1)::
       "retune":   RetuneController.stats() (incl. "history") | null,
       "fleet":    {FleetDir.status() + "report"} | null,
       "follower": PlanFollower.stats() | null,
+      "router":   Router.stats() | null,
       "metrics":  MetricsRegistry.snapshot(),
     }
 """
@@ -34,7 +35,8 @@ PLAN_SNAPSHOT_CAP = 2000    # /plan entry cap: a plan can hold thousands
 
 def status_snapshot(*, store=None, telemetry=None, controller=None,
                     fleet: Optional[str] = None, models=None,
-                    registry=None, follower=None) -> Dict[str, object]:
+                    registry=None, follower=None,
+                    router=None) -> Dict[str, object]:
     """Build the shared status document.
 
     With no arguments, reads the process's live serving state (what the
@@ -70,6 +72,13 @@ def status_snapshot(*, store=None, telemetry=None, controller=None,
         live = active_followers()
         follower = live[0] if live else None
 
+    # flush pending lock-free ring buffers before serializing: without this
+    # a snapshot taken between drains under-reports shapes recorded via
+    # record_buffered (duck-typed: fleet views drain their local leg only)
+    drain = getattr(telemetry, "drain_pending", None)
+    if callable(drain):
+        drain()
+
     snapshot: Dict[str, object] = {
         "schema": SCHEMA_VERSION,
         "serving": {
@@ -84,6 +93,7 @@ def status_snapshot(*, store=None, telemetry=None, controller=None,
         "retune": controller.stats() if controller is not None else None,
         "fleet": _fleet_section(fleet) if fleet else None,
         "follower": follower.stats() if follower is not None else None,
+        "router": router.stats() if router is not None else None,
         "metrics": registry.snapshot(),
     }
     return snapshot
@@ -126,7 +136,20 @@ def _fleet_section(fleet: str) -> Optional[Dict[str, object]]:
     root = Path(fleet)
     if not root.exists():
         return None
-    section: Dict[str, object] = dict(FleetDir(root).status())
+    fd = FleetDir(root)
+    try:
+        section: Dict[str, object] = dict(fd.status())
+    except FileNotFoundError:
+        # a telemetry-only bus: exporters may land dumps before any
+        # `fleet start` writes the manifest — still a real fleet surface
+        section = {"root": str(root), "store": None, "counts": None,
+                   "draining": False, "lease_age_s": {},
+                   "shard_records": {}}
+    tel_dir = fd.telemetry_dir()
+    if tel_dir.is_dir():
+        from ..telemetry import FleetTelemetryView, ShapeTelemetry
+        section["telemetry_replicas"] = FleetTelemetryView(
+            tel_dir, local=ShapeTelemetry(), refresh_s=0.0).replicas()
     report_path = root / REPORT
     report = None
     if report_path.exists():

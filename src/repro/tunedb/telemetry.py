@@ -416,6 +416,221 @@ class ShapeTelemetry:
 
 
 # ---------------------------------------------------------------------------
+# Fleet scope: periodic dump export + the aggregated global read view.
+# ---------------------------------------------------------------------------
+
+def _count_dump(worker_id: str) -> None:
+    try:                                    # obs imports telemetry: lazy
+        from .obs.metrics import get_registry
+        get_registry().counter(
+            "tunedb_telemetry_dumps_total",
+            "cumulative telemetry dumps exported to the fleet bus",
+        ).inc(worker=worker_id)
+    except Exception:                       # metrics must never break export
+        pass
+
+
+class TelemetryExporter:
+    """Periodic export of one process's telemetry to the fleet bus.
+
+    Every ``interval_s`` the exporter writes a CUMULATIVE dump of
+    ``telemetry`` to ``<out_dir>/<worker_id>/<epoch>.json`` via
+    :meth:`ShapeTelemetry.save` (atomic tmp+rename), bumping the epoch in
+    the filename each time.  Cumulative dumps make aggregation idempotent:
+    a reader folds only the LATEST epoch per worker, so a torn read, a
+    missed interval, or a reader racing the pruner can never double-count
+    a call.  Old epochs are pruned (last ``keep`` retained) so the bus
+    directory stays O(workers), not O(uptime).
+    """
+
+    def __init__(self, telemetry: ShapeTelemetry, out_dir: os.PathLike, *,
+                 worker_id: Optional[str] = None, interval_s: float = 5.0,
+                 keep: int = 2) -> None:
+        import socket
+        self.telemetry = telemetry
+        self.out_dir = pathlib.Path(out_dir)
+        self.worker_id = worker_id or (
+            f"{socket.gethostname()}-{os.getpid()}")
+        self.interval_s = float(interval_s)
+        self.keep = max(1, int(keep))
+        self.exports = 0
+        self._epoch = 0
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def export_once(self) -> pathlib.Path:
+        """Write one cumulative dump; returns the dump path."""
+        self._epoch += 1
+        dest = self.out_dir / self.worker_id / f"{self._epoch:08d}.json"
+        self.telemetry.save(dest)
+        self.exports += 1
+        _count_dump(self.worker_id)
+        stale = sorted(dest.parent.glob("*.json"))[:-self.keep]
+        for p in stale:
+            try:
+                p.unlink()
+            except OSError:                  # a concurrent reader won the race
+                pass
+        return dest
+
+    def start(self) -> "TelemetryExporter":
+        if self._thread is not None:
+            return self
+        self._stop.clear()
+
+        def loop() -> None:
+            while not self._stop.wait(self.interval_s):
+                try:
+                    self.export_once()
+                except OSError:              # bus unavailable: retry next tick
+                    pass
+
+        self._thread = threading.Thread(
+            target=loop, name=f"telemetry-export-{self.worker_id}",
+            daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, *, final_export: bool = True) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+        if final_export:
+            try:
+                self.export_once()           # flush the tail of the window
+            except OSError:
+                pass
+
+    def stats(self) -> Dict[str, object]:
+        return {"worker_id": self.worker_id, "epoch": self._epoch,
+                "exports": self.exports, "interval_s": self.interval_s,
+                "out_dir": str(self.out_dir)}
+
+
+class FleetTelemetryView:
+    """Fleet-global telemetry: local counters merged with every worker's dump.
+
+    Duck-types the :class:`ShapeTelemetry` read surface (``snapshot`` /
+    ``diff`` / ``count`` / ``hot_shapes`` / ``spaces`` / ``total`` /
+    ``stats`` / ``drain_pending``) so the :class:`RetuneController` and
+    ``plan_from_telemetry`` consume the GLOBAL view unchanged.  Each
+    :meth:`refresh` rebuilds a merged :class:`ShapeTelemetry` from the
+    local instance plus the latest cumulative dump of every worker under
+    ``dump_root`` — counts are monotone (dumps are cumulative), so epoch
+    diffs over rebuilt views behave exactly like diffs over one process's
+    counters.  Reads are throttled to ``refresh_s``; epoch entry points
+    (``snapshot``/``diff``/``stats``) always force a rebuild.
+    """
+
+    scope = "fleet"
+
+    def __init__(self, dump_root: os.PathLike, *,
+                 local: Optional[ShapeTelemetry] = None,
+                 refresh_s: float = 2.0,
+                 exclude: Iterable[str] = ()) -> None:
+        self.dump_root = pathlib.Path(dump_root)
+        self.local = local if local is not None else get_telemetry()
+        self.refresh_s = float(refresh_s)
+        # worker dirs to skip — a process that both exports AND aggregates
+        # passes its own worker_id so its live local counts never fold in
+        # twice (once live, once via its own stale dump)
+        self.exclude = frozenset(exclude)
+        self.refreshes = 0
+        self._lock = threading.Lock()
+        self._merged = ShapeTelemetry()
+        self._replicas: Dict[str, Dict[str, object]] = {}
+        self._last_refresh: Optional[float] = None
+
+    def refresh(self, force: bool = False) -> ShapeTelemetry:
+        """Rebuild (or reuse, inside the throttle window) the merged view."""
+        import time
+        now = time.monotonic()
+        with self._lock:
+            if (not force and self._last_refresh is not None
+                    and now - self._last_refresh < self.refresh_s):
+                return self._merged
+            merged = ShapeTelemetry()
+            merged.merge(self.local)
+            replicas: Dict[str, Dict[str, object]] = {}
+            if self.dump_root.is_dir():
+                for wdir in sorted(self.dump_root.iterdir()):
+                    if not wdir.is_dir() or wdir.name in self.exclude:
+                        continue
+                    prov = self._merge_worker(merged, wdir)
+                    if prov is not None:
+                        replicas[wdir.name] = prov
+            self._merged = merged
+            self._replicas = replicas
+            self._last_refresh = now
+            self.refreshes += 1
+            return merged
+
+    @staticmethod
+    def _merge_worker(merged: ShapeTelemetry,
+                      wdir: pathlib.Path) -> Optional[Dict[str, object]]:
+        """Fold one worker's latest dump; provenance dict or None."""
+        import time
+        for latest in sorted(wdir.glob("*.json"), reverse=True):
+            try:
+                dump = ShapeTelemetry.load(latest)
+                age_s = max(0.0, time.time() - latest.stat().st_mtime)
+            except (OSError, ValueError):    # pruned/torn mid-read: try older
+                continue
+            merged.merge(dump)
+            try:
+                epoch = int(latest.stem)
+            except ValueError:
+                epoch = -1
+            try:
+                from .obs.metrics import get_registry
+                get_registry().gauge(
+                    "tunedb_fleet_telemetry_lag_seconds",
+                    "age of the newest readable telemetry dump per worker",
+                ).set(age_s, worker=wdir.name)
+            except Exception:
+                pass
+            return {"epoch": epoch, "calls": dump.total(), "age_s": age_s}
+        return None
+
+    def replicas(self) -> Dict[str, Dict[str, object]]:
+        """Per-replica provenance: worker -> {epoch, calls, age_s}."""
+        self.refresh()
+        with self._lock:
+            return {w: dict(p) for w, p in self._replicas.items()}
+
+    # -- ShapeTelemetry read surface ------------------------------------------
+    def snapshot(self) -> TelemetrySnapshot:
+        return self.refresh(force=True).snapshot()
+
+    def diff(self, prev: TelemetrySnapshot) -> Dict[str, SpaceDrift]:
+        return self.refresh(force=True).diff(prev)
+
+    def count(self, space: str, inputs: Mapping[str, int]) -> int:
+        return self.refresh().count(space, inputs)
+
+    def hot_shapes(self, space: str, top_k: int = 8
+                   ) -> List[Tuple[Dict[str, int], int]]:
+        return self.refresh().hot_shapes(space, top_k)
+
+    def spaces(self) -> List[str]:
+        return self.refresh().spaces()
+
+    def total(self, space: Optional[str] = None) -> int:
+        return self.refresh().total(space)
+
+    def drain_pending(self) -> int:
+        return self.local.drain_pending()
+
+    def stats(self) -> Dict[str, object]:
+        out = self.refresh(force=True).stats()
+        with self._lock:
+            out["scope"] = self.scope
+            out["replicas"] = {w: dict(p) for w, p in self._replicas.items()}
+        return out
+
+
+# ---------------------------------------------------------------------------
 # Process-global collector: dispatch feeds this unconditionally; it is always
 # present (a counter, not a policy), unlike the optional global store/tuner.
 # ---------------------------------------------------------------------------

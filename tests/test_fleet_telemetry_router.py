@@ -1,0 +1,481 @@
+"""Fleet-global telemetry + shape-affinity routing (PR 8).
+
+Pins the fleet-scope refactor's contracts: a cumulative telemetry dump on
+the bus aggregates (latest epoch per worker, torn reads fall back) into
+exactly the counts the in-process collectors hold — even under concurrent
+ring writers; per-replica provenance round-trips; the retune controller
+triggers off aggregated multi-replica mass that no single replica's window
+would have tripped; the coordinator partitions the global hot set into
+balanced per-replica affinity classes and publishes SMALL specialized
+plans; the router lands covered requests on their plan's replica inside a
+load bound with a no-starvation escape; `/status` drains pending rings
+before serializing; and `resolve_decode_splits` routes flash-decoding's
+split count through tuned dispatch with the caller's value as fallback.
+"""
+
+import json
+import threading
+
+import pytest
+
+from repro.core.space import gemm_input
+from repro.core.tuner import clear_tuners
+from repro.kernels import dispatch
+from repro.serve.router import (RandomRouter, Replica, RoundRobinRouter,
+                                ShapeAffinityRouter, make_router,
+                                plan_coverage)
+from repro.tunedb import (RecordStore, TuneRecord, clear_store,
+                          clear_telemetry, get_telemetry, install_store,
+                          serving_state)
+from repro.tunedb.controller import RetuneConfig, RetuneController
+from repro.tunedb.fleet import Coordinator
+from repro.tunedb.model import clear_models
+from repro.tunedb.obs.snapshot import status_snapshot
+from repro.tunedb.plans import PlanRegistry
+from repro.tunedb.store import DispatchPlan, shape_key
+from repro.tunedb.telemetry import (FleetTelemetryView, ShapeTelemetry,
+                                    TelemetryExporter)
+
+CFG = {"bm": 64, "bn": 128, "bk": 128, "k_unroll": 1, "k_split": 1,
+       "order": 0, "acc32": 1, "prefetch": 2}
+
+ATTN_CFG = {"b_q": 128, "b_kv": 512, "acc32": 1, "prefetch": 2}
+
+
+@pytest.fixture(autouse=True)
+def _clean_globals():
+    def reset():
+        clear_tuners()
+        clear_store()
+        clear_models()
+        clear_telemetry()
+        dispatch.reset_fallback_warnings()
+    reset()
+    yield
+    reset()
+
+
+def _shape(i: int):
+    return gemm_input(256 * (i + 1), 64, 512)
+
+
+def _rec(inputs, *, space="gemm", cfg=None, backend="test", tflops=100.0):
+    return TuneRecord(space=space, inputs=inputs,
+                      config=dict(cfg or CFG), tflops=tflops, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# telemetry layer: export -> aggregate -> merge equivalence
+# ---------------------------------------------------------------------------
+
+def test_export_aggregate_merge_equivalence_under_concurrent_writers(
+        tmp_path):
+    """save -> dump -> aggregate must equal the in-process counts exactly,
+    even when the dumps are written while ring writers are still landing."""
+    bus = tmp_path / "telemetry"
+    replicas = [ShapeTelemetry() for _ in range(3)]
+    n_threads, n_each = 4, 200
+
+    def writer(tel, tid):
+        for j in range(n_each):
+            tel.record_buffered("gemm", _shape((tid + j) % 5))
+
+    exporters = [TelemetryExporter(tel, bus, worker_id=f"w{i}")
+                 for i, tel in enumerate(replicas)]
+    threads = [threading.Thread(target=writer, args=(tel, tid))
+               for tel in replicas for tid in range(n_threads)]
+    for th in threads:
+        th.start()
+    # export concurrently with the writers: a dump is a consistent prefix
+    for exp in exporters:
+        exp.export_once()
+    for th in threads:
+        th.join()
+    # final cumulative dump per replica now holds the complete counts
+    for exp in exporters:
+        exp.export_once()
+
+    view = FleetTelemetryView(bus, local=ShapeTelemetry(), refresh_s=0.0)
+    assert view.total() == 3 * n_threads * n_each
+    for i in range(5):
+        want = sum(tel.count("gemm", _shape(i)) for tel in replicas)
+        assert view.count("gemm", _shape(i)) == want
+
+    # the same equivalence through plain ShapeTelemetry.merge of the dumps
+    merged = ShapeTelemetry()
+    for wdir in sorted(bus.iterdir()):
+        latest = sorted(wdir.glob("*.json"))[-1]
+        merged.merge(ShapeTelemetry.load(latest))
+    assert merged.total() == view.total()
+    for i in range(5):
+        assert merged.count("gemm", _shape(i)) == view.count(
+            "gemm", _shape(i))
+
+
+def test_cumulative_dumps_never_double_count(tmp_path):
+    """Only the LATEST epoch per worker folds in: re-exporting a grown
+    telemetry must not add the old dump's counts on top."""
+    bus = tmp_path / "telemetry"
+    tel = ShapeTelemetry()
+    exp = TelemetryExporter(tel, bus, worker_id="w0", keep=2)
+    tel.record("gemm", _shape(0), n=10)
+    exp.export_once()
+    tel.record("gemm", _shape(0), n=5)
+    exp.export_once()
+    view = FleetTelemetryView(bus, local=ShapeTelemetry(), refresh_s=0.0)
+    assert view.count("gemm", _shape(0)) == 15
+    # pruning keeps the bus O(workers): `keep` newest epochs survive
+    tel.record("gemm", _shape(0), n=1)
+    exp.export_once()
+    files = sorted((bus / "w0").glob("*.json"))
+    assert len(files) == 2
+    assert [f.stem for f in files] == ["00000002", "00000003"]
+
+
+def test_torn_dump_falls_back_to_older_epoch(tmp_path):
+    bus = tmp_path / "telemetry"
+    tel = ShapeTelemetry()
+    tel.record("gemm", _shape(0), n=7)
+    exp = TelemetryExporter(tel, bus, worker_id="w0", keep=3)
+    exp.export_once()
+    tel.record("gemm", _shape(0), n=3)
+    torn = exp.export_once()
+    torn.write_text("{not json")               # simulated torn write
+    view = FleetTelemetryView(bus, local=ShapeTelemetry(), refresh_s=0.0)
+    assert view.count("gemm", _shape(0)) == 7   # older epoch served
+    prov = view.replicas()
+    assert prov["w0"]["epoch"] == 1
+
+
+def test_view_merges_local_and_excludes_own_dump(tmp_path):
+    """A process that both exports and aggregates must not fold its own
+    live counts in twice (live local + its own stale dump)."""
+    bus = tmp_path / "telemetry"
+    local = ShapeTelemetry()
+    local.record("gemm", _shape(0), n=4)
+    TelemetryExporter(local, bus, worker_id="me").export_once()
+    other = ShapeTelemetry()
+    other.record("gemm", _shape(0), n=6)
+    TelemetryExporter(other, bus, worker_id="peer").export_once()
+
+    view = FleetTelemetryView(bus, local=local, refresh_s=0.0,
+                              exclude={"me"})
+    assert view.count("gemm", _shape(0)) == 10    # 4 live + 6 peer, not 14
+    assert set(view.replicas()) == {"peer"}
+    st = view.stats()
+    assert st["scope"] == "fleet"
+    assert st["replicas"]["peer"]["calls"] == 6
+
+
+def test_coordinator_global_view_and_provenance_roundtrip(tmp_path):
+    store = RecordStore.open(tmp_path / "db.jsonl")
+    coord = Coordinator(tmp_path / "fleet", store)
+    bus = coord.fleet.telemetry_dir()
+    for i in range(3):
+        tel = ShapeTelemetry()
+        tel.record("gemm", _shape(i), n=10 * (i + 1))
+        exp = TelemetryExporter(tel, bus, worker_id=f"w{i}")
+        exp.export_once()
+        exp.export_once()                     # provenance tracks epoch 2
+    view = coord.global_telemetry()
+    assert view.total() == 60
+    prov = coord.telemetry_provenance()
+    assert set(prov) == {"w0", "w1", "w2"}
+    for i in range(3):
+        assert prov[f"w{i}"]["epoch"] == 2
+        assert prov[f"w{i}"]["calls"] == 10 * (i + 1)
+        assert prov[f"w{i}"]["age_s"] >= 0.0
+    # plan_from_telemetry defaults to the fleet-global view
+    jobs = coord.plan_from_telemetry(top_k=8)
+    assert {tuple(sorted(j.inputs.items())) for j in jobs} == {
+        tuple(sorted(_shape(i).items())) for i in range(3)}
+
+
+def test_controller_triggers_only_off_aggregated_fleet_mass(tmp_path):
+    """The tentpole's acceptance demo: three replicas each sit below
+    min_calls, so a process-local controller never triggers — the
+    fleet-global controller sees their sum and does."""
+    bus = tmp_path / "telemetry"
+    store = RecordStore()
+    install_store(store)                      # no records: all mass untuned
+    local = ShapeTelemetry()
+    cfg = RetuneConfig(min_calls=32, untuned_mass_threshold=0.5)
+
+    fleet_view = FleetTelemetryView(bus, local=local, refresh_s=0.0)
+    ctl_fleet = RetuneController(store, telemetry=fleet_view, cfg=cfg)
+    ctl_local = RetuneController(store, telemetry=local, cfg=cfg)
+    assert ctl_fleet.stats()["telemetry_scope"] == "fleet"
+    assert ctl_local.stats()["telemetry_scope"] == "process"
+
+    local.record("gemm", _shape(0), n=5)      # this replica's own window
+    for i in range(3):                        # three peers, 15 calls each
+        tel = ShapeTelemetry()
+        tel.record("gemm", _shape(0), n=15)
+        TelemetryExporter(tel, bus, worker_id=f"peer{i}").export_once()
+
+    dec_local = ctl_local.check()["gemm"]
+    assert not dec_local.trigger              # 5 < min_calls: under-informed
+    dec_fleet = ctl_fleet.check()["gemm"]
+    assert dec_fleet.window_calls == 50       # 5 local + 3*15 aggregated
+    assert dec_fleet.trigger and dec_fleet.reason in ("drift", "untuned")
+
+
+# ---------------------------------------------------------------------------
+# specialization layer: affinity classes -> per-replica plans
+# ---------------------------------------------------------------------------
+
+def test_partition_hot_shapes_balances_bucket_mass(tmp_path):
+    store = RecordStore.open(tmp_path / "db.jsonl")
+    coord = Coordinator(tmp_path / "fleet", store)
+    tel = ShapeTelemetry()
+    # two heavy log2 buckets + two light ones; same-bucket shapes must
+    # travel together, and mass must spread over both replicas
+    tel.record("gemm", gemm_input(4096, 64, 512), n=100)
+    tel.record("gemm", gemm_input(4097, 64, 512), n=80)    # same bucket
+    tel.record("gemm", gemm_input(256, 64, 512), n=90)
+    tel.record("gemm", gemm_input(16, 64, 512), n=10)
+    classes = coord.partition_hot_shapes(2, telemetry=tel, top_k=8)
+    assert sum(len(c) for c in classes) == 4
+    masses = [sum(n for _, _, n in c) for c in classes]
+    assert sorted(masses) == [100, 180]       # LPT: [4096-bucket], [rest]
+    for cls in classes:
+        buckets = {coord._shape_bucket(s, i) for s, i, _ in cls}
+        if any(i["M"] in (4096, 4097) for _, i, _ in cls):
+            assert len(buckets) == 1          # the heavy bucket stays whole
+
+
+def test_publish_replica_plans_are_small_and_specialized(tmp_path):
+    store = RecordStore.open(tmp_path / "db.jsonl")
+    shapes = [gemm_input(4096, 64, 512), gemm_input(256, 64, 512)]
+    for s in shapes:
+        store.add(_rec(s))
+    coord = Coordinator(tmp_path / "fleet", store)
+    tel = ShapeTelemetry()
+    tel.record("gemm", shapes[0], n=100)
+    tel.record("gemm", shapes[1], n=90)
+    root = tmp_path / "registries"
+    out = coord.publish_replica_plans(root, 2, telemetry=tel,
+                                      fingerprint="test")
+    assert [o["replica"] for o in out] == ["replica-0", "replica-1"]
+    assert all(o["entries"] == 1 for o in out)     # SMALL: one class each
+
+    plans = []
+    for o in out:
+        reg = PlanRegistry(o["registry"])
+        pointer = reg.current()
+        assert pointer is not None and pointer["generation"] == \
+            o["generation"]
+        plans.append(reg.pull(pointer))
+    covered = set()
+    for p in plans:
+        assert len(p) == 1
+        for s in shapes:
+            if p.lookup("gemm", shape_key(s)) is not None:
+                covered.add(tuple(sorted(s.items())))
+        # each replica plan misses the OTHER replica's class
+        assert sum(plan_coverage(p, [("gemm", s)]) for s in shapes) == 1.0
+    assert len(covered) == 2                  # together they cover the set
+
+
+# ---------------------------------------------------------------------------
+# routing layer
+# ---------------------------------------------------------------------------
+
+def _plan_for(shapes):
+    tbl = {("gemm", shape_key(s)): (dict(CFG), "exact") for s in shapes}
+    return DispatchPlan(generation=0, fingerprint="test", store_version=-1,
+                        table=tbl)
+
+
+def test_affinity_router_lands_requests_on_covering_replica():
+    r = ShapeAffinityRouter()
+    r.add_replica("a", plan=_plan_for([_shape(0)]))
+    r.add_replica("b", plan=_plan_for([_shape(1)]))
+    for _ in range(3):
+        assert r.route([("gemm", _shape(1))]).name == "b"
+        assert r.route([("gemm", _shape(0))]).name == "a"
+    st = r.stats()
+    assert st["policy"] == "affinity"
+    assert st["outcomes"] == {"affinity": 6}
+    assert {x["name"]: x["assigned"] for x in st["replicas"]} == \
+        {"a": 3, "b": 3}
+
+
+def test_affinity_router_load_bound_and_escape():
+    r = ShapeAffinityRouter(max_imbalance=2.0)
+    ra = r.add_replica("a", plan=_plan_for([_shape(0), _shape(1)]))
+    r.add_replica("b", plan=_plan_for([_shape(1)]))
+    # a fully covers the request, b half-covers it; once a is
+    # max_imbalance ahead it is ineligible and b takes the request as a
+    # "balanced" decision (partial coverage beats nothing)
+    req = [("gemm", _shape(0)), ("gemm", _shape(1))]
+    names = [r.route(req).name for _ in range(6)]
+    assert "b" in names                           # the bound kicked in
+    assert r.outcomes.get("balanced", 0) > 0
+    assert ra.assigned + names.count("b") == 6    # every request landed once
+    # a request class NO plan covers still gets served (escape hatch)
+    picked = r.route([("gemm", _shape(4))])
+    assert picked is not None
+    assert r.outcomes.get("escape", 0) == 1
+
+
+def test_router_no_starvation_under_skewed_workload():
+    """Zero starved request class: every class keeps being served even when
+    one replica covers the entire hot set."""
+    r = ShapeAffinityRouter(max_imbalance=4.0)
+    r.add_replica("hot", plan=_plan_for([_shape(i) for i in range(4)]))
+    r.add_replica("cold", plan=None)
+    served = {i: 0 for i in range(5)}             # class 4 is uncovered
+    for step in range(100):
+        cls = step % 5
+        served[cls] += 1 if r.route([("gemm", _shape(cls))]) else 0
+    assert all(v == 20 for v in served.values())
+    loads = {x.name: x.assigned for x in r.replicas}
+    assert abs(loads["hot"] - loads["cold"]) <= 4.0 + 1
+
+
+def test_baseline_routers_and_factory():
+    rr = make_router("round_robin")
+    assert isinstance(rr, RoundRobinRouter)
+    rr.add_replica("a")
+    rr.add_replica("b")
+    assert [rr.route().name for _ in range(4)] == ["a", "b", "a", "b"]
+    assert rr.stats()["outcomes"] == {"baseline": 4}
+
+    rnd = make_router("random")
+    assert isinstance(rnd, RandomRouter)
+    rnd.add_replica("a")
+    rnd.add_replica("b")
+    assert {rnd.route().name for _ in range(20)} == {"a", "b"}
+
+    assert isinstance(make_router("affinity"), ShapeAffinityRouter)
+    with pytest.raises(ValueError, match="unknown router policy"):
+        make_router("bogus")
+    with pytest.raises(RuntimeError, match="no replicas"):
+        make_router("affinity").route([])
+
+
+def test_plan_coverage_fractions():
+    plan = _plan_for([_shape(0), _shape(1)])
+    assert plan_coverage(plan, [("gemm", _shape(0))]) == 1.0
+    assert plan_coverage(plan, [("gemm", _shape(0)),
+                                ("gemm", _shape(3))]) == 0.5
+    assert plan_coverage(None, [("gemm", _shape(0))]) == 0.0
+    assert plan_coverage(plan, []) == 0.0
+
+
+def test_fleet_route_cli_picks_covering_replica(tmp_path, capsys):
+    from repro.tunedb.__main__ import main as tunedb_main
+
+    store = RecordStore.open(tmp_path / "db.jsonl")
+    shapes = [gemm_input(4096, 64, 512), gemm_input(256, 64, 512)]
+    for s in shapes:
+        store.add(_rec(s))
+    coord = Coordinator(tmp_path / "fleet", store)
+    tel = ShapeTelemetry()
+    tel.record("gemm", shapes[0], n=100)
+    tel.record("gemm", shapes[1], n=90)
+    root = tmp_path / "registries"
+    out = coord.publish_replica_plans(root, 2, telemetry=tel,
+                                      fingerprint="test")
+    covering = {o["replica"]: o for o in out}
+    assert set(covering) == {"replica-0", "replica-1"}
+
+    rc = tunedb_main(["fleet", "route", "--registry-root", str(root),
+                      "--space", "gemm", "--shape", "M=4096,N=64,K=512"])
+    assert rc == 0
+    got = json.loads(capsys.readouterr().out)
+    assert got["policy"] == "affinity"
+    assert got["outcome"] == "affinity"
+    assert got["coverage"][got["replica"]] == 1.0
+    other = next(n for n in covering if n != got["replica"])
+    assert got["coverage"][other] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# satellites: snapshot ring drain, tuned decode splits
+# ---------------------------------------------------------------------------
+
+def test_status_snapshot_drains_pending_rings():
+    """/status and `tunedb stats --json` must never under-report: counts
+    still sitting in per-thread rings are drained before serializing."""
+    tel = get_telemetry()
+    for _ in range(9):
+        tel.record_buffered("gemm", _shape(0))
+    snap = status_snapshot()
+    assert snap["telemetry"]["spaces"]["gemm"]["calls"] == 9
+
+    # same through an explicit fleet view (duck-typed drain of the local leg)
+    for _ in range(4):
+        tel.record_buffered("gemm", _shape(0))
+    view = FleetTelemetryView("/nonexistent", local=tel, refresh_s=0.0)
+    snap = status_snapshot(telemetry=view)
+    assert snap["telemetry"]["spaces"]["gemm"]["calls"] == 13
+    assert snap["telemetry"]["scope"] == "fleet"
+
+
+def test_engine_wires_export_router_and_status(tmp_path):
+    """End-to-end engine wiring: telemetry dumps land on the fleet bus, the
+    controller reads the fleet-scope view, every admitted request takes a
+    routing decision, and /status carries the router section."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models import ModelConfig, init_params
+    from repro.serve import Engine, ServeConfig
+
+    cfg = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4, n_kv=2,
+                      d_ff=128, vocab=128, dtype=jnp.float32, attn_chunk=16,
+                      logit_chunk=16, remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    RecordStore.open(tmp_path / "db.jsonl").add(_rec(_shape(0)))
+    eng = Engine(cfg, params, ServeConfig(
+        max_len=64, slots=2, retune=True, retune_interval=4,
+        tunedb=str(tmp_path / "db.jsonl"),
+        retune_fleet=str(tmp_path / "fleet"), telemetry_export_s=0.05,
+        router="affinity", status_port=0))
+    assert eng.exporter is not None and eng.router is not None
+    assert eng.controller.stats()["telemetry_scope"] == "fleet"
+
+    rng = np.random.default_rng(0)
+    outs = eng.generate([rng.integers(0, 128, 6) for _ in range(4)],
+                        max_new=6)
+    assert all(len(o) == 6 for o in outs)
+    assert eng.router.stats()["decisions"] >= 4      # one per admission
+    eng.exporter.stop()                              # final dump flushes
+    dumps = list((tmp_path / "fleet" / "telemetry"
+                  / eng.exporter.worker_id).glob("*.json"))
+    assert dumps, "engine exporter never dumped to the fleet bus"
+    snap = eng.status_server.status_json()
+    assert snap["router"]["policy"] == "affinity"
+    assert snap["router"]["replicas"][0]["name"] == "local"
+    assert snap["retune"]["telemetry_scope"] == "fleet"
+    # per-replica dump provenance surfaces in the fleet section even
+    # before any `fleet start` writes a manifest to the bus
+    assert eng.exporter.worker_id in snap["fleet"]["telemetry_replicas"]
+    eng.status_server.stop()
+
+
+def test_resolve_decode_splits_tuned_and_fallback():
+    from repro.serve.flash_decode import resolve_decode_splits
+
+    kw = dict(B=1, Hq=8, Hkv=2, Lkv=2048, D=64, dtype_bits=16)
+    # untuned process: exact prior behavior — the caller's value
+    assert resolve_decode_splits(default=8, **kw) == 8
+    # ...and the probe itself feeds telemetry (hot-shape mining sees it)
+    tel = get_telemetry()
+    tel.drain_pending()
+    assert tel.total("attention") >= 1
+
+    inputs = {"B": 1, "Hq": 8, "Hkv": 2, "Lq": 1, "Lkv": 2048, "D": 64,
+              "dtype_bits": 16, "causal": 1}
+    store = RecordStore()
+    store.add(TuneRecord(space="attention", inputs=inputs,
+                         config=dict(ATTN_CFG), tflops=50.0, backend="test"))
+    install_store(store)
+    assert serving_state().store is store
+    # tuned: n_splits = Lkv // b_kv from the resolved attention config
+    assert resolve_decode_splits(default=8, **kw) == 2048 // 512
+    # a tuned block that does not tile Lkv falls back to the caller's value
+    assert resolve_decode_splits(default=3, **dict(kw, Lkv=1000)) == 3
