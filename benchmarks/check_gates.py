@@ -235,6 +235,40 @@ GATES: List[Gate] = [
             f"(min_calls "
             f"{_get(r, 'fleet_trigger', 'min_calls', default='?')})"),
     ),
+    Gate(
+        file="trace",
+        name="tracing disabled makes zero Tracer calls on a live engine run",
+        check=lambda r: _get(r, "disabled", "instrument_calls") == 0,
+        detail=lambda r: (
+            f"{_get(r, 'disabled', 'instrument_calls', default='?')} "
+            f"Tracer calls over "
+            f"{_get(r, 'disabled', 'ticks', default='?')} decode ticks"),
+    ),
+    Gate(
+        file="trace",
+        name="<=2% median decode-tick overhead at 1% trace sampling "
+             "(+2x A/A noise)",
+        check=lambda r: _get(r, "overhead", "pass") is True,
+        detail=lambda r: (
+            f"overhead {_get(r, 'overhead', 'overhead', default=0):+.2%} "
+            f"(budget {_get(r, 'overhead', 'budget', default=0):.2%} = "
+            f"{_get(r, 'overhead', 'threshold', default=0):.0%} + 2x "
+            f"{_get(r, 'overhead', 'noise', default=0):.2%} noise), "
+            f"{_get(r, 'overhead', 'quiet_us', default=0):.0f}us -> "
+            f"{_get(r, 'overhead', 'traced_us', default=0):.0f}us/tick"),
+    ),
+    Gate(
+        file="trace",
+        name="exported trace artifact is Perfetto-loadable with the linked "
+             "span taxonomy (route/tick/dispatch-tier/measure)",
+        check=lambda r: _get(r, "artifact", "pass") is True,
+        detail=lambda r: (
+            f"{_get(r, 'artifact', 'spans', default=0)} spans "
+            f"({_get(r, 'artifact', 'linked', default=0)} parent-linked), "
+            f"tiers {_get(r, 'artifact', 'tiers', default=[])}, missing "
+            f"{_get(r, 'artifact', 'missing', default='?')}, artifact "
+            f"{_get(r, 'artifact', 'artifact', default='?')}"),
+    ),
 ]
 
 

@@ -18,6 +18,8 @@ One benchmark per paper table/figure (DESIGN.md §8 experiment index):
                  parity, 3-replica plan-following fleet (no torn/stale reads)
   E17 router   — fleet-global telemetry + shape-affinity routing: affinity
                  vs round-robin TFLOPS/hit-rate, fleet-only retune trigger
+  E18 trace    — end-to-end tracing: zero instrument calls disabled,
+                 <=2% tick overhead at 1% sampling, Perfetto artifact
 
 Gate validation: ``python -m benchmarks.check_gates`` after a run.
 """
@@ -40,7 +42,8 @@ def main() -> None:
     from . import (bench_conv, bench_dispatch, bench_fleet, bench_gemm,
                    bench_kernels, bench_mlp, bench_model, bench_obs,
                    bench_plans, bench_retune, bench_roofline, bench_router,
-                   bench_sampler, bench_selection, bench_tunedb)
+                   bench_sampler, bench_selection, bench_trace,
+                   bench_tunedb)
     suites = {
         "sampler": lambda: bench_sampler.run(fast),
         "mlp": lambda: bench_mlp.run(fast),
@@ -58,6 +61,7 @@ def main() -> None:
         "obs": lambda: bench_obs.run(fast),
         "plans": lambda: bench_plans.run(fast),
         "router": lambda: bench_router.run(fast),
+        "trace": lambda: bench_trace.run(fast),
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     t_all = time.time()

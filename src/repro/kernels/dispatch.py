@@ -99,6 +99,11 @@ def _heuristic_cfg(space_name: str, inputs: Mapping[str, int]
 # binding would cycle through repro.tunedb.store -> this module
 _GET_TUNER = None
 _SERVING_STATE = None
+# the trace module, bound on first resolution (False = unavailable).  The
+# per-call tracing probe is ONE module-attribute read (`_TRACE._TRACER`):
+# with tracing disabled that attribute is None and the resolution path is
+# byte-identical to the untraced one — the E18 zero-instrument-call gate.
+_TRACE = None
 
 
 def _dtype_bits(dtype) -> int:
@@ -148,6 +153,34 @@ def _tuned_cfg(space_name: str, inputs: Mapping[str, int]
     plan with a new store) — the plan a reader holds always belongs to the
     generation it read.
     """
+    global _TRACE
+    t = _TRACE
+    if t is None:
+        try:
+            from repro.tunedb.obs import trace as t
+        except Exception:
+            t = False
+        _TRACE = t
+    tr = t._TRACER if t else None
+    if tr is not None:
+        # tracing enabled: time the resolution under the thread's current
+        # trace (a no-op context when this thread has no sampled trace
+        # open), attributing the winning tier and shape key
+        with tr.span("dispatch.resolve", space=space_name) as sp:
+            cfg, tier = _resolve_cfg(space_name, inputs)
+            if sp is not None:
+                sp.attrs["tier"] = tier
+                sp.attrs["shape"] = ",".join(
+                    f"{k}={v}" for k, v in sorted(inputs.items()))
+        return cfg
+    return _resolve_cfg(space_name, inputs)[0]
+
+
+def _resolve_cfg(space_name: str, inputs: Mapping[str, int]
+                 ) -> tuple:
+    """The tier-resolution body of :func:`_tuned_cfg`, returning
+    ``(config, winning tier)`` — tier is one of ``tuner``/``none``/
+    ``plan``/``exact``/``model``/``nearest``/``degraded``."""
     global _GET_TUNER, _SERVING_STATE
     if _GET_TUNER is None:
         # bound once: the per-call `from x import y` module-dict round
@@ -157,12 +190,12 @@ def _tuned_cfg(space_name: str, inputs: Mapping[str, int]
         _GET_TUNER, _SERVING_STATE = get_tuner, serving_state
     tuner = _GET_TUNER(space_name)
     if tuner is not None:
-        return tuner.best_config(inputs, remeasure=False)
+        return tuner.best_config(inputs, remeasure=False), "tuner"
     state = _SERVING_STATE()
     store, models, fp = state.store, state.models, state.fingerprint
     plan = state.plan
     if store is None and models is None and plan is None:
-        return None                      # untuned process: ops defaults
+        return None, "none"              # untuned process: ops defaults
     key = None
     if plan is not None and (store is None
                              or store.version == plan.store_version):
@@ -188,7 +221,7 @@ def _tuned_cfg(space_name: str, inputs: Mapping[str, int]
                     store.misses += 1
                 if models is not None:   # duck-typed stubs may lack counters
                     models.hits = getattr(models, "hits", 0) + 1
-            return dict(cfg)
+            return dict(cfg), "plan"
         plan.misses += 1
     cfg = tier = None
     if store is not None:
@@ -207,11 +240,11 @@ def _tuned_cfg(space_name: str, inputs: Mapping[str, int]
         if key is not None and (store is None
                                 or store.version == plan.store_version):
             plan.promote(space_name, key, cfg, tier)
-        return dict(cfg)
+        return dict(cfg), tier
     _warn_once(("untuned", space_name),
                f"tunedb: no record, model, or neighbor for a {space_name} "
                f"shape {dict(inputs)}; serving on vendor heuristics")
-    return _heuristic_cfg(space_name, inputs)
+    return _heuristic_cfg(space_name, inputs), "degraded"
 
 
 def _record(space_name: str, inputs: Mapping[str, int]) -> None:

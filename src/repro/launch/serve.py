@@ -79,8 +79,20 @@ def main() -> None:
                         "its shapes (load-bounded, with a no-starvation "
                         "escape); omit to disable routing")
     p.add_argument("--status-port", type=int, default=None,
-                   help="serve /metrics, /status and /plan from inside the "
-                        "engine on this port (0 = ephemeral)")
+                   help="serve /metrics, /status, /plan and /trace from "
+                        "inside the engine on this port (0 = ephemeral)")
+    p.add_argument("--trace-sample", type=float, default=0.0,
+                   help="request-trace sampling rate (0 = tracing off, "
+                        "1.0 = every trace root); spans export via /trace, "
+                        "--trace-out, and `tunedb trace`")
+    p.add_argument("--trace-out", default=None,
+                   help="write the run's spans as Chrome trace-event JSON "
+                        "here after generation (open in Perfetto)")
+    p.add_argument("--measure", choices=["wallclock", "sim"], default=None,
+                   help="re-measure model top-k candidates on the serving "
+                        "path: 'wallclock' times real kernels on TPU "
+                        "(simulated fallback off-hardware, warns once), "
+                        "'sim' always uses the analytic backend")
     args = p.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -111,10 +123,12 @@ def main() -> None:
         retune_publish=args.retune_publish,
         telemetry_export_s=args.telemetry_export,
         router=args.router,
-        status_port=args.status_port))
+        status_port=args.status_port,
+        trace_sample=args.trace_sample,
+        measure=args.measure))
     if eng.status_server is not None:
         print(f"status endpoint: {eng.status_server.url} "
-              f"(/metrics /status /plan)")
+              f"(/metrics /status /plan /trace)")
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab, args.prompt_len)
                for _ in range(args.requests)]
@@ -144,6 +158,14 @@ def main() -> None:
         rt = eng.router.stats()
         print(f"router[{rt['policy']}]: {rt['decisions']} decision(s) "
               f"by outcome {rt['outcomes']}")
+    if eng.tracer is not None:
+        ts = eng.tracer.stats()
+        print(f"trace: {ts['sampled']} root(s) sampled, "
+              f"{ts['dropped']} dropped, {ts['spans']} span(s) retained")
+        if args.trace_out:
+            n = eng.tracer.export(args.trace_out)
+            print(f"trace: wrote {n} span(s) -> {args.trace_out} "
+                  "(open in https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

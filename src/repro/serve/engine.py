@@ -16,6 +16,7 @@ exactness is correctness, not merely efficiency, for hybrid/SSM archs.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
@@ -106,6 +107,10 @@ class ServeConfig:
     # append per-decode-tick wall seconds to Engine.tick_times (benchmarks
     # and the fleet acceptance test; off in production serving)
     record_tick_times: bool = False
+    # most recent ticks kept in Engine.tick_times (a bounded deque): a
+    # long-running serve with record_tick_times on must not grow without
+    # bound; 0 keeps every tick (short benchmark runs only)
+    tick_times_cap: int = 4096
     # -- admission policy -----------------------------------------------------
     # "fifo": admit pending requests in arrival order (the PR 1-4 behavior).
     # "store": store-aware admission — prefer requests whose prompt-length
@@ -119,6 +124,18 @@ class ServeConfig:
     # the given port; 0 binds an ephemeral port (Engine.status_server.port
     # says which), None disables the endpoint
     status_port: Optional[int] = None
+    # -- tracing + wall-clock measurement (tunedb.obs.trace / tunedb.measure) -
+    # fraction of trace roots (decode ticks, admissions) sampled into the
+    # span tracer; 0 disables tracing entirely — the hot paths then make
+    # zero instrument calls (E18).  Exported Chrome trace JSON loads in
+    # Perfetto; see docs/OBSERVABILITY.md
+    trace_sample: float = 0.0
+    # §6 re-measurement backend for the model tier's top-k candidates:
+    # "wallclock" times real kernels (falls back to the simulator with a
+    # warn-once off TPU hardware), "sim" uses the analytic simulator, None
+    # disables serving-path measurement.  Measurements are scheduled into
+    # idle decode gaps (MeasureQueue), never inline on dispatch
+    measure: Optional[str] = None
 
 
 def _ceil_div(x: int, t: int) -> int:
@@ -349,6 +366,26 @@ class StoreAwareAdmission:
         return best_i
 
 
+# shared reusable no-op context: the untraced engine loop enters this one
+# module-level object instead of allocating per tick
+_NULL_CTX = contextlib.nullcontext()
+
+
+class _TickTimes(list):
+    """Bounded tick-time buffer: a real list (slicing and iteration work
+    exactly as before) that keeps only the newest ``cap`` entries.  cap=0
+    keeps everything — short benchmark runs that want the full series."""
+
+    def __init__(self, cap: int = 0) -> None:
+        super().__init__()
+        self.cap = int(cap)
+
+    def append(self, item) -> None:
+        list.append(self, item)
+        if self.cap and len(self) > self.cap:
+            del self[: len(self) - self.cap]
+
+
 @dataclasses.dataclass
 class Request:
     prompt: np.ndarray              # (len,) int32
@@ -360,6 +397,15 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params: Any, serve_cfg: ServeConfig,
                  *, retune_tuners: Optional[Dict[str, Any]] = None):
         self.cfg, self.params, self.sc = cfg, params, serve_cfg
+        # end-to-end tracing: install (or retune the sampling of) the
+        # process-global span tracer BEFORE anything below runs, so install
+        # paths, calibration measurements, and the first prefill all land
+        # in the same trace stream.  trace_sample=0 leaves tracing exactly
+        # as it was — usually disabled, costing zero instrument calls.
+        self.tracer = None
+        if serve_cfg.trace_sample > 0:
+            from repro.tunedb.obs.trace import enable_tracing
+            self.tracer = enable_tracing(serve_cfg.trace_sample)
         # Warm start (tunedb): install the record store + model artifacts so
         # kernel dispatch resolves tuned configs from day-one traffic without
         # any tuner (or its training cost) in the serving process.  Like
@@ -448,6 +494,43 @@ class Engine:
                 # is disabled with tunedb_models="") so a previous Engine's
                 # regressors never serve another store's traffic
                 install_models(models if len(models) else None)
+        # wall-clock measurer (paper §6 re-measurement, on the real clock):
+        # the model tier's top-k candidates are re-measured by
+        # ServingMeasurer — wall clock on TPU hardware, simulator fallback
+        # (warn-once) off it — but never inline: predict() enqueues onto
+        # the MeasureQueue and the controller poll drains it in idle
+        # decode gaps (see maybe_retune).  One tiny calibration GEMM runs
+        # now, proving the backend path (and firing the off-hardware
+        # warning) before traffic arrives.
+        self.measurer = None
+        self._measure_queue = None
+        if serve_cfg.measure:
+            from repro.core.space import gemm_input
+            from repro.tunedb.measure import MeasureQueue, ServingMeasurer
+            from repro.tunedb.store import serving_state
+            self.measurer = ServingMeasurer(serve_cfg.measure)
+            self._measure_queue = MeasureQueue()
+            live_models = serving_state().models
+            if live_models is not None:
+                live_models.measurer = self.measurer
+                live_models.measure_queue = self._measure_queue
+            try:
+                self.measurer("gemm",
+                              {"bm": 128, "bn": 128, "bk": 128,
+                               "k_unroll": 1, "k_split": 1, "order": 0,
+                               "acc32": 1, "prefetch": 2},
+                              gemm_input(256, 256, 256, 16))
+            except Exception:
+                pass            # a failed calibration must not stop serving
+        # startup dispatch probe: resolve each installed shape once through
+        # the real dispatch path so the trace (and tier_latency) carries
+        # tier attribution immediately — on TPU the decode compile would do
+        # this anyway, but a CPU dev box's model path never enters the
+        # Pallas kernels, and its /trace view should still show which tier
+        # each tuned shape would serve from.
+        if self.tracer is not None and (serve_cfg.tunedb
+                                        or serve_cfg.plan_dir):
+            self._probe_dispatch()
         self.cache = init_cache(cfg, serve_cfg.slots, serve_cfg.max_len)
         self.lengths = np.zeros(serve_cfg.slots, np.int64)
         self.slot_req: List[Optional[Request]] = [None] * serve_cfg.slots
@@ -466,8 +549,11 @@ class Engine:
         # seconds) when ServeConfig.record_tick_times — the fleet bench/test
         # reads this.  Thread CPU time is the de-noised "did THIS thread do
         # the work" clock: an inline retune session lands in it, scheduler
-        # preemption and other threads' work do not.
-        self.tick_times: List[tuple] = []
+        # preemption and other threads' work do not.  Bounded: a week-long
+        # serve with recording on keeps the newest tick_times_cap entries
+        # instead of growing without limit (a real list subclass, so the
+        # bench/test read surface — slicing, iteration — is unchanged).
+        self.tick_times = _TickTimes(serve_cfg.tick_times_cap)
         # store-aware admission: reorder/group pending requests toward
         # plan-hit prefill shapes ("fifo" keeps arrival order)
         self.admission = (StoreAwareAdmission()
@@ -535,7 +621,33 @@ class Engine:
                 controller=self.controller,
                 fleet=serve_cfg.retune_fleet,
                 follower=self.follower,
-                router=self.router).start()
+                router=self.router,
+                tracer=self.tracer).start()
+
+    def _probe_dispatch(self, max_shapes: int = 8) -> None:
+        """Resolve a few installed shapes through kernel dispatch under a
+        ``dispatch.probe`` trace root (always kept — one per engine start).
+        Purely observational: configs are resolved and discarded."""
+        try:
+            from repro.kernels.dispatch import _tuned_cfg
+            from repro.tunedb.obs.trace import new_trace_id
+            from repro.tunedb.store import serving_state
+            store = serving_state().store
+            if store is None:
+                return
+            seen = set()
+            with self.tracer.root("dispatch.probe",
+                                  trace_id=new_trace_id()):
+                for rec in store.records():
+                    key = (rec.space, tuple(sorted(rec.inputs.items())))
+                    if key in seen:
+                        continue
+                    seen.add(key)
+                    _tuned_cfg(rec.space, rec.inputs)
+                    if len(seen) >= max_shapes:
+                        break
+        except Exception:
+            pass                # a probe must never stop serving
 
     def _init_controller(self, retune_tuners: Optional[Dict[str, Any]]) -> None:
         """Close the loop in-process: drift-triggered sessions + hot-swap.
@@ -562,6 +674,8 @@ class Engine:
             models_dir=self._models_dir,
             async_mode=sc.retune_async,
             fleet_dir=sc.retune_fleet,
+            measurer=self.measurer,
+            measure_queue=self._measure_queue,
             cfg=RetuneConfig(
                 drift_threshold=sc.retune_drift,
                 untuned_mass_threshold=sc.retune_untuned_mass,
@@ -585,7 +699,19 @@ class Engine:
         mode (``retune_async``/``retune_fleet``) a triggered poll only
         submits the epoch; the report surfaces on the first poll after the
         background session+merge+retrain completes its atomic swap.
+
+        This is also the idle-decode-gap measurement slot: a few pending
+        §6 re-measurements (MeasureQueue) drain here every tick — via the
+        controller when one runs, directly otherwise — so measurements
+        never sit inline on a dispatch resolution.
         """
+        q = self._measure_queue
+        if q is not None and len(q):
+            if self.controller is not None:
+                self.controller.process_measurements()
+            else:
+                from repro.tunedb.store import serving_state
+                q.process(self.measurer, models=serving_state().models)
         if self.controller is None or self.ticks < self._next_retune_tick:
             return None
         self._next_retune_tick = self.ticks + self.sc.retune_interval
@@ -638,6 +764,12 @@ class Engine:
         queue = [Request(np.asarray(p, np.int32), max_new) for p in prompts]
         pending = list(queue)
         active = 0
+        # tracing: each admission and each decode tick opens its own trace
+        # root (sampled per trace_sample); router decisions, prefill,
+        # dispatch-tier resolutions, and idle-gap measurements nest under
+        # whichever root is open on this thread.  tr None = the untraced
+        # path, byte-identical to before, zero instrument calls.
+        tr = self.tracer
 
         while pending or active:
             while pending:                       # admit into free slots
@@ -651,14 +783,19 @@ class Engine:
                                               last_len=self._last_admit_len)
                 req = pending.pop(nxt)
                 self._last_admit_len = len(req.prompt)
-                if self.router is not None:
-                    # single-process engine: the decision is recorded (and
-                    # scraped at /status) even though the only replica is
-                    # us — a front-end holding the same router object over
-                    # several engines gets real placement from this call
-                    self.router.route(
-                        self._prefill_shapes.get(len(req.prompt), []))
-                self._prefill_one(slot, req)
+                n = len(req.prompt)
+                with (tr.root("engine.admit", prompt_len=n)
+                      if tr is not None else _NULL_CTX):
+                    if self.router is not None:
+                        # single-process engine: the decision is recorded
+                        # (and scraped at /status) even though the only
+                        # replica is us — a front-end holding the same
+                        # router object over several engines gets real
+                        # placement from this call
+                        self.router.route(self._prefill_shapes.get(n, []))
+                    with (tr.span("engine.prefill", prompt_len=n)
+                          if tr is not None else _NULL_CTX):
+                        self._prefill_one(slot, req)
                 active += 1
             if active == 0:
                 break
@@ -668,27 +805,31 @@ class Engine:
             from repro.tunedb.telemetry import get_telemetry
             if sc.record_tick_times:
                 t_tick, c_tick = time.perf_counter(), time.thread_time()
-            last = np.array([
-                (r.out[-1] if r is not None and r.out else 0)
-                for r in self.slot_req], np.int32)[:, None]
-            idx = jnp.asarray(self.lengths, jnp.int32)      # per-slot position
-            if self._decode_shapes is None:
-                # compiling tick: the trace-time census IS this tick's count
-                with get_telemetry().capture() as cap:
+            with (tr.root("engine.tick", tick=self.ticks)
+                  if tr is not None else _NULL_CTX):
+                last = np.array([
+                    (r.out[-1] if r is not None and r.out else 0)
+                    for r in self.slot_req], np.int32)[:, None]
+                idx = jnp.asarray(self.lengths, jnp.int32)  # slot position
+                if self._decode_shapes is None:
+                    # compiling tick: the trace-time census IS this tick's
+                    # count
+                    with get_telemetry().capture() as cap:
+                        logits, self.cache = self._decode(
+                            self.params, jnp.asarray(last), self.cache, idx)
+                    self._decode_shapes = cap.shapes
+                else:
                     logits, self.cache = self._decode(
                         self.params, jnp.asarray(last), self.cache, idx)
-                self._decode_shapes = cap.shapes
-            else:
-                logits, self.cache = self._decode(
-                    self.params, jnp.asarray(last), self.cache, idx)
-                if self._decode_shapes:
-                    get_telemetry().record_ticks(self._decode_shapes)
-            toks = self._sample(np.asarray(logits)[:, : cfg.vocab])
-            self.ticks += 1
-            # fold this tick's lock-free telemetry rings into the counters:
-            # one batched drain per tick instead of one lock per kernel call
-            get_telemetry().drain_pending()
-            self.maybe_retune()
+                    if self._decode_shapes:
+                        get_telemetry().record_ticks(self._decode_shapes)
+                toks = self._sample(np.asarray(logits)[:, : cfg.vocab])
+                self.ticks += 1
+                # fold this tick's lock-free telemetry rings into the
+                # counters: one batched drain per tick instead of one lock
+                # per kernel call
+                get_telemetry().drain_pending()
+                self.maybe_retune()
 
             for s, req in enumerate(self.slot_req):
                 if req is None:

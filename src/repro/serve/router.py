@@ -38,11 +38,18 @@ the ``tunedb fleet route`` CLI verb; decisions feed the
 
 from __future__ import annotations
 
+import contextlib
 import random
 import threading
 from typing import Callable, Dict, Iterable, List, Optional, Tuple, Union
 
 from repro.tunedb.store import shape_key
+
+# lazily bound trace module (False = unavailable); the per-route probe is
+# one module-attribute read, so disabled tracing costs zero instrument
+# calls on the routing path
+_TRACE = None
+_NULL_CTX = contextlib.nullcontext()
 
 __all__ = [
     "ROUTER_POLICIES", "Replica", "Router", "RoundRobinRouter",
@@ -127,13 +134,27 @@ class Router:
         """Assign one pending request (its prefill/decode shapes) to a
         replica.  Every request gets a replica — policies may only bias
         the choice, never refuse it."""
-        with self._lock:
-            if not self.replicas:
-                raise RuntimeError("router has no replicas to route to")
-            replica, outcome = self._pick(list(shapes))
-            replica.assigned += 1
-            self.decisions += 1
-            self.outcomes[outcome] = self.outcomes.get(outcome, 0) + 1
+        global _TRACE
+        t = _TRACE
+        if t is None:
+            try:
+                from repro.tunedb.obs import trace as t
+            except Exception:
+                t = False
+            _TRACE = t
+        tr = t._TRACER if t else None   # None: untraced, zero instruments
+        with (tr.span("request.route", policy=self.policy)
+              if tr is not None else _NULL_CTX) as sp:
+            with self._lock:
+                if not self.replicas:
+                    raise RuntimeError("router has no replicas to route to")
+                replica, outcome = self._pick(list(shapes))
+                replica.assigned += 1
+                self.decisions += 1
+                self.outcomes[outcome] = self.outcomes.get(outcome, 0) + 1
+            if sp is not None:
+                sp.attrs["outcome"] = outcome
+                sp.attrs["replica"] = replica.name
         self._count_decision(outcome)
         return replica
 

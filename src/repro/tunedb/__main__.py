@@ -38,6 +38,10 @@ Subcommands:
                           registry directory for followers to pull
             plan follow   poll a registry and atomically hot-swap each new
                           generation into this process's serving state
+  trace   request-trace spans (docs/OBSERVABILITY.md):
+            trace export  merge span dumps (--fleet traces/ and/or --input
+                          files) into one Perfetto-loadable Chrome trace
+            trace summary per-span-name latency + dispatch-tier attribution
   stats   print store (and optional telemetry) statistics as JSON
   export  compact a store to latest-record-per-shape
   merge   fold several stores into one (newest record per shape wins)
@@ -521,10 +525,14 @@ def _cmd_fleet_worker(args: argparse.Namespace) -> int:
             epochs=args.epochs, backend=SimulatedTPUBackend(),
             seed=args.seed)
 
+    if args.trace_sample > 0:
+        from .obs.trace import enable_tracing
+        enable_tracing(args.trace_sample)
     worker = Worker(args.fleet, worker_id=args.worker_id,
                     tuner_factory=tuner_factory,
                     remeasure=not args.no_remeasure, verbose=True,
-                    telemetry_export_s=args.telemetry_export)
+                    telemetry_export_s=args.telemetry_export,
+                    trace_export=args.trace_sample > 0)
     print(f"[fleet] worker {worker.worker_id} claiming from {args.fleet}")
     report = worker.run(
         max_jobs=args.max_jobs if args.max_jobs > 0 else None,
@@ -798,6 +806,49 @@ def _cmd_stats(args: argparse.Namespace) -> int:
         if telemetry is not None:
             out["telemetry"] = telemetry.stats()
     print(json.dumps(out, indent=1, sort_keys=True, default=str))
+    return 0
+
+
+def _collect_trace_spans(args: argparse.Namespace):
+    """Spans from --fleet traces/ and/or explicit span files (JSONL dumps
+    or Chrome trace JSON) — torn files skip, never raise."""
+    from .obs.trace import collect_fleet_spans, load_span_file
+    spans = []
+    if getattr(args, "fleet", None):
+        spans.extend(collect_fleet_spans(args.fleet))
+    for path in getattr(args, "inputs", None) or []:
+        spans.extend(load_span_file(path))
+    return spans
+
+
+def _cmd_trace_export(args: argparse.Namespace) -> int:
+    from .obs.trace import chrome_trace
+    spans = _collect_trace_spans(args)
+    doc = chrome_trace(spans, pid=0)    # merged view: no one live process
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(doc))
+    print(f"[trace] wrote {len(spans)} span(s) -> {out} "
+          "(open in https://ui.perfetto.dev)")
+    return 0
+
+
+def _cmd_trace_summary(args: argparse.Namespace) -> int:
+    from .obs.trace import summarize_spans
+    spans = _collect_trace_spans(args)
+    summary = summarize_spans(spans)
+    if getattr(args, "json", False):
+        print(json.dumps(summary, indent=1, sort_keys=True, default=str))
+        return 0
+    print(f"spans: {summary['spans']}  traces: {summary['traces']}")
+    for name, ent in sorted(summary["names"].items()):
+        print(f"  {name:<20} x{int(ent['count']):<6} "
+              f"mean {ent['mean_us']:.1f}us  max {ent['max_us']:.1f}us")
+    if summary["tiers"]:
+        print("dispatch tiers:")
+        for tier, ent in sorted(summary["tiers"].items()):
+            print(f"  {tier:<20} x{int(ent['count']):<6} "
+                  f"mean {ent['mean_us']:.1f}us")
     return 0
 
 
@@ -1084,6 +1135,11 @@ def build_parser() -> argparse.ArgumentParser:
                          "fleet bus every N seconds (0 = off); the "
                          "coordinator aggregates dumps into the "
                          "fleet-global view")
+    fw.add_argument("--trace-sample", type=float, default=0.0,
+                    help="enable tracing at this root sample rate (jobs "
+                         "carrying a coordinator trace_id are always "
+                         "kept); finished spans dump to "
+                         "<fleet>/traces/<worker_id>.jsonl at exit")
     fw.set_defaults(fn=_cmd_fleet_worker)
 
     fst = fsub.add_parser("status", help="print fleet state as JSON")
@@ -1181,6 +1237,32 @@ def build_parser() -> argparse.ArgumentParser:
                     help="skip the RegressionSentry plan diff before a swap")
     pf.set_defaults(fn=_cmd_plan_follow)
 
+    tc = sub.add_parser(
+        "trace", help="request-trace spans (see docs/OBSERVABILITY.md)")
+    tsub = tc.add_subparsers(dest="trace_cmd", required=True)
+
+    def add_trace_input_args(sp):
+        sp.add_argument("--fleet", default=None,
+                        help="merge every worker span dump under "
+                             "<fleet>/traces/")
+        sp.add_argument("--input", dest="inputs", action="append",
+                        default=None, metavar="FILE",
+                        help="span JSONL dump or Chrome trace JSON "
+                             "(repeatable); torn files are skipped")
+
+    te = tsub.add_parser(
+        "export", help="merge span dumps into one Chrome trace JSON")
+    add_trace_input_args(te)
+    te.add_argument("--out", required=True,
+                    help="Chrome trace-event JSON path (Perfetto-loadable)")
+    te.set_defaults(fn=_cmd_trace_export)
+
+    tu = tsub.add_parser(
+        "summary", help="per-span-name latency + dispatch-tier attribution")
+    add_trace_input_args(tu)
+    tu.add_argument("--json", action="store_true")
+    tu.set_defaults(fn=_cmd_trace_summary)
+
     s = sub.add_parser("stats", help="print store/telemetry statistics")
     s.add_argument("--store", default=DEFAULT_STORE)
     s.add_argument("--telemetry", default=None)
@@ -1191,7 +1273,8 @@ def build_parser() -> argparse.ArgumentParser:
 
     ss = sub.add_parser(
         "serve-status",
-        help="HTTP observability endpoint: /metrics, /status, /plan")
+        help="HTTP observability endpoint: /metrics, /status, /plan, "
+             "/trace")
     ss.add_argument("--store", default=DEFAULT_STORE)
     ss.add_argument("--telemetry", default=None)
     ss.add_argument("--fleet", default=None,

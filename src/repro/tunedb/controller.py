@@ -67,6 +67,23 @@ from .telemetry import ShapeTelemetry, SpaceDrift, get_telemetry
 
 log = logging.getLogger(__name__)
 
+# lazily bound trace module (False = unavailable): the controller probes
+# one module attribute per epoch, so disabled tracing costs zero
+# instrument calls on the retune path
+_TRACE = None
+
+
+def _tracer():
+    global _TRACE
+    t = _TRACE
+    if t is None:
+        try:
+            from .obs import trace as t
+        except Exception:   # noqa: BLE001 — tracing is strictly optional
+            t = False
+        _TRACE = t
+    return t._TRACER if t else None
+
 
 def _default_tuner_factory(space_name: str):
     """Train a small input-aware tuner on demand (serving processes that
@@ -190,8 +207,15 @@ class RetuneController:
                  fleet_lease_timeout_s: float = 30.0,
                  fleet_timeout_s: float = 600.0,
                  fleet_poll_s: float = 0.25,
+                 measurer=None,
+                 measure_queue=None,
                  verbose: bool = False):
         self.store = store
+        # deferred §6 re-measurement plumbing (tunedb.measure): the engine
+        # hands in its ServingMeasurer + MeasureQueue so the controller
+        # poll drains re-measurements in idle decode gaps
+        self.measurer = measurer
+        self.measure_queue = measure_queue
         self.telemetry = telemetry if telemetry is not None else get_telemetry()
         self.cfg = cfg or RetuneConfig()
         self.models_dir = models_dir
@@ -380,6 +404,17 @@ class RetuneController:
         if tick is not None:
             self._last_retune_tick = tick
 
+    # -- deferred measurements ------------------------------------------------
+    def process_measurements(self, max_items: int = 2) -> int:
+        """Drain a few deferred §6 top-k re-measurements (the engine calls
+        this from idle decode gaps, via ``maybe_retune``'s poll).  Returns
+        shapes processed; 0 when no queue/measurer is attached."""
+        q, m = self.measure_queue, self.measurer
+        if q is None or m is None or not len(q):
+            return 0
+        return q.process(m, models=serving_state().models,
+                         max_items=max_items)
+
     # -- async plumbing -------------------------------------------------------
     def async_active(self) -> bool:
         """True while a submitted background epoch is still running."""
@@ -426,13 +461,29 @@ class RetuneController:
         self.async_done_t = None
         window = [self.async_submit_t, None]
         self.async_windows.append(window)
+        # the submit→swap window as ONE detached span: begun here on the
+        # submitting (decode) thread — adopting its live trace when one is
+        # open, minting an always-kept id otherwise so epochs never vanish
+        # from traces — and ended by the background thread at swap time
+        tr = _tracer()
+        epoch_span = None
+        trace_id = ""
+        if tr is not None:
+            trace_id = tr.current_trace_id() or _TRACE.new_trace_id()
+            epoch_span = tr.begin(
+                "retune.epoch", trace_id=trace_id,
+                spaces=",".join(sorted(triggered)),
+                mode="fleet" if fleet_dir is not None else "async")
 
         def body():
             try:
                 with self._lock:
                     if fleet_dir is not None:
                         self._async_report = self._retune_fleet(
-                            decisions, triggered, t0, fleet_dir)
+                            decisions, triggered, t0, fleet_dir,
+                            trace_id=trace_id,
+                            parent_id=(epoch_span.span_id
+                                       if epoch_span is not None else ""))
                     else:
                         report = self._retune(decisions, triggered, t0)
                         report.mode = "async"
@@ -442,6 +493,11 @@ class RetuneController:
                 self._async_report = None
             finally:
                 self.async_done_t = window[1] = time.perf_counter()
+                if tr is not None:
+                    rep = self._async_report
+                    tr.end(epoch_span,
+                           outcome="failed" if rep is None else "swapped",
+                           tuned=0 if rep is None else rep.tuned)
 
         th = threading.Thread(target=body, name="tunedb-retune", daemon=True)
         self._async = th
@@ -541,7 +597,8 @@ class RetuneController:
 
     def _retune_fleet(self, decisions: Dict[str, SpaceDecision],
                       triggered: Dict[str, SpaceDecision], t0: float,
-                      fleet_dir) -> RetuneReport:
+                      fleet_dir, trace_id: str = "",
+                      parent_id: str = "") -> RetuneReport:
         """Run one triggered epoch through the fleet bus.
 
         Jobs are published as lease files for external worker processes;
@@ -566,9 +623,12 @@ class RetuneController:
             for inputs in dec.novel_shapes:
                 # the telemetry count rides in the job file so workers can
                 # claim the hottest shapes first (priority-aware claiming)
+                # trace_id rides in the job JSON: the worker opens its
+                # tuning-session root with it, so its spans link back to
+                # this coordinator epoch in the merged trace
                 jobs.append(FleetJob(space=space, inputs=dict(inputs),
                                      count=self.telemetry.count(space, inputs),
-                                     source="retune"))
+                                     source="retune", trace_id=trace_id))
                 self._attempted.add((space, input_key(space, inputs)))
         published = coord.publish(jobs)
         if self.verbose:
@@ -593,7 +653,13 @@ class RetuneController:
                 if name not in done_now and name not in fail_now:
                     self._attempted.discard(
                         (job.space, input_key(job.space, job.inputs)))
+        tr = _tracer()
+        merge_span = (tr.begin("fleet.merge", trace_id=trace_id,
+                               parent_id=parent_id, jobs=published)
+                      if tr is not None and trace_id else None)
         coord.poll()                     # final merge after the last worker
+        if merge_span is not None:
+            tr.end(merge_span, outstanding=coord.outstanding())
         if (state.fingerprint is not None and coord.affected
                 and all(b != state.fingerprint for _, b in coord.affected)
                 and ("fleet", state.fingerprint) not in self._warned_pins):
@@ -780,6 +846,11 @@ class RetuneController:
             "history": list(self.history),
             "generation": serving_state().generation,
             "config": dataclasses.asdict(self.cfg),
+            "measure": (None if self.measurer is None else {
+                **self.measurer.stats(),
+                "queue": (None if self.measure_queue is None
+                          else self.measure_queue.stats()),
+            }),
             "async": {
                 "enabled": self.async_mode,
                 "fleet_dir": (None if self.fleet_dir is None

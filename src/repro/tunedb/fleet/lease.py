@@ -70,6 +70,11 @@ class FleetJob:
     source: str = "fleet"               # what the committed record's tag says
     attempts: int = 0                   # times this job was leased so far
     created_at: float = 0.0
+    # trace id of the coordinator epoch that published this job ("" = not
+    # traced): a worker adopts it for its tuning-session spans, so the
+    # merged trace links worker tuning back to the submit→swap window.
+    # from_json filters unknown fields, so old/new job files interoperate.
+    trace_id: str = ""
 
     @property
     def job_id(self) -> str:

@@ -26,10 +26,17 @@ import time
 import uuid
 from typing import Callable, Dict, List, Mapping, Optional
 
+import contextlib
+
 from ..session import record_from_search
 from ..store import RecordStore, SAMPLE_SOURCE, TuneRecord
 from ..telemetry import TelemetryExporter, get_telemetry
 from .lease import FleetDir, FleetJob
+
+# lazily bound trace module (False = unavailable): the per-job probe is
+# one module-attribute read, so untraced workers pay zero instrument calls
+_TRACE = None
+_NULL_CTX = contextlib.nullcontext()
 
 
 def default_worker_id() -> str:
@@ -69,6 +76,7 @@ class Worker:
                  heartbeat_s: float = 2.0, poll_s: float = 0.2,
                  remeasure: bool = True, collect_samples: bool = True,
                  telemetry_export_s: float = 0.0,
+                 trace_export: bool = False,
                  verbose: bool = False):
         self.fleet = FleetDir(fleet_dir)
         self.worker_id = worker_id or default_worker_id()
@@ -81,6 +89,12 @@ class Worker:
         # fleet-global aggregation — see Coordinator.global_telemetry
         self.telemetry_export_s = float(telemetry_export_s)
         self.exporter: Optional[TelemetryExporter] = None
+        # True (the `fleet worker` CLI, i.e. process workers): dump this
+        # process's finished spans to ``<fleet>/traces/<worker_id>.jsonl``
+        # at end of run, for collect_fleet_spans / `tunedb trace` to merge.
+        # Thread workers must leave it False — they SHARE the process
+        # tracer, and the dump clears retention out from under its owner.
+        self.trace_export = trace_export
         self.verbose = verbose
         self._tuners: Dict[str, object] = dict(tuners or {})
         self._tuner_factory = tuner_factory or _default_tuner_factory
@@ -157,20 +171,43 @@ class Worker:
         job, lease_path = claimed
         self.report.claimed += 1
         t0 = time.time()
-        try:
-            rec = self._tune_job(job, lease_path)
-        except Exception as e:   # noqa: BLE001 — job isolation is the point
-            err = f"{type(e).__name__}: {e}"
-            outcome = self.fleet.fail(
-                job, lease_path, err,
-                max_attempts=int(self._manifest.get("max_attempts", 3)))
-            self.report.failed += 1
-            self.report.errors.append(f"{job.job_id}: {err} ({outcome})")
-            self._count_outcome("failed")
-            return False
+        global _TRACE
+        t = _TRACE
+        if t is None:
+            try:
+                from ..obs import trace as t
+            except Exception:
+                t = False
+            _TRACE = t
+        tr = t._TRACER if t else None   # None: untraced, zero instruments
+        # adopt the coordinator's trace id from the job file — the tuning
+        # session then shows up linked under its submit→swap window in the
+        # merged fleet trace; an id-less job falls back to local sampling
+        ctx = (tr.root("fleet.job", trace_id=job.trace_id or None,
+                       space=job.space, job=job.job_id,
+                       worker=self.worker_id)
+               if tr is not None else _NULL_CTX)
+        with ctx as sp:
+            try:
+                rec = self._tune_job(job, lease_path)
+            except Exception as e:  # noqa: BLE001 — job isolation is the point
+                err = f"{type(e).__name__}: {e}"
+                outcome = self.fleet.fail(
+                    job, lease_path, err,
+                    max_attempts=int(self._manifest.get("max_attempts", 3)))
+                self.report.failed += 1
+                self.report.errors.append(f"{job.job_id}: {err} ({outcome})")
+                self._count_outcome("failed")
+                if sp is not None:
+                    sp.attrs["outcome"] = "failed"
+                return False
+            if sp is not None:
+                sp.attrs["outcome"] = "tuned"
+                sp.attrs["tflops"] = round(float(rec.tflops), 3)
         ok = self.fleet.complete(job, lease_path, {
             "worker_id": self.worker_id, "tflops": rec.tflops,
-            "backend": rec.backend, "wall_s": round(time.time() - t0, 4)})
+            "backend": rec.backend, "wall_s": round(time.time() - t0, 4),
+            "trace_id": job.trace_id})
         if ok:
             self.report.tuned += 1
             if self.verbose:
@@ -226,5 +263,23 @@ class Worker:
         if self.exporter is not None:
             self.exporter.stop()         # final dump: the window's tail lands
             self.exporter = None
+        if self.trace_export:
+            self._export_spans()
         self.report.wall_s = time.time() - t0
         return self.report
+
+    def _export_spans(self) -> int:
+        """Dump this process's finished spans onto the bus (JSONL, append,
+        torn-tolerant on the reading side)."""
+        tr = _TRACE._TRACER if _TRACE else None
+        if tr is None:
+            try:
+                from ..obs import trace as t
+            except Exception:
+                return 0
+            tr = t._TRACER
+        if tr is None:
+            return 0
+        from ..obs.trace import FLEET_TRACE_DIR
+        return tr.export_jsonl(
+            self.fleet.root / FLEET_TRACE_DIR / f"{self.worker_id}.jsonl")

@@ -327,6 +327,11 @@ class ModelSet:
                  max_feature_z: float = 0.0) -> None:
         self.models: Dict[Tuple[str, str], PerfModel] = {}
         self.measurer = measurer
+        # deferred-measurement mode (serving): with a MeasureQueue attached,
+        # predict() serves the model argmax immediately and enqueues the
+        # top-k for idle-decode-gap re-measurement (tunedb.measure) instead
+        # of paying the measurements inline on the dispatch path
+        self.measure_queue = None
         self.remeasure_top_k = remeasure_top_k
         self.margin_threshold = margin_threshold
         self.max_feature_z = max_feature_z
@@ -344,6 +349,15 @@ class ModelSet:
         """Drop per-shape resolutions (called on serving-state installs)."""
         self._memo.clear()
 
+    def apply_measurement(self, space: str, backend: Optional[str],
+                          inputs: Mapping[str, int], cfg: Mapping[str, int],
+                          tflops: float) -> None:
+        """Commit a deferred re-measurement's winner: later resolutions of
+        this shape serve the measured config, not the model argmax."""
+        inputs = normalize_inputs(inputs)
+        memo_key = (space, backend, tuple(sorted(inputs.items())))
+        self._memo[memo_key] = (normalize_config(cfg), float(tflops))
+
     def merged_with(self, newer: "ModelSet") -> "ModelSet":
         """A fresh ModelSet carrying this set's models overridden by
         ``newer``'s — the retrain hot-swap: untouched (space, backend)
@@ -355,6 +369,7 @@ class ModelSet:
                        remeasure_top_k=self.remeasure_top_k,
                        margin_threshold=self.margin_threshold,
                        max_feature_z=self.max_feature_z)
+        out.measure_queue = self.measure_queue or newer.measure_queue
         out.models.update(self.models)
         out.models.update(newer.models)
         return out
@@ -433,6 +448,17 @@ class ModelSet:
                             gated = True
                     if gated:
                         pass
+                    elif self.measurer is not None and len(res.top_k) > 1 \
+                            and self.measure_queue is not None:
+                        # serving: answer with the argmax NOW, schedule the
+                        # §6 re-measurement for an idle decode gap — the
+                        # measured winner later upgrades the memo and the
+                        # plan-overlay entry (MeasureQueue.process)
+                        self.measure_queue.push(
+                            space, backend, inputs,
+                            [dict(c) for c, _ in res.top_k])
+                        out = (normalize_config(res.best),
+                               float(res.predicted_tflops))
                     elif self.measurer is not None and len(res.top_k) > 1:
                         measured = [(cfg,
                                      float(self.measurer(space, cfg, inputs)))

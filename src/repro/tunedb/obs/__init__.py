@@ -25,6 +25,12 @@ reads out of:
     ``install_serving``, ``Coordinator`` merge, and the ``tunedb diff``
     CLI: a record slower than the one it replaces beyond the noise margin
     is reported and refused, never silently frozen into the next plan.
+
+``trace``
+    :class:`Tracer` — span-based end-to-end request tracing with
+    deterministic sampling and Chrome trace-event (Perfetto) export;
+    enabled via ``ServeConfig(trace_sample=...)`` / ``enable_tracing``,
+    surfaced at ``/trace`` and ``tunedb trace {export,summary}``.
 """
 
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
@@ -33,6 +39,9 @@ from .sentry import (DEFAULT_NOISE_MARGIN, Regression, RegressionSentry,
                      SentryReport, last_report)
 from .server import StatusServer
 from .snapshot import plan_snapshot, status_snapshot
+from .trace import (Span, Tracer, chrome_trace, collect_fleet_spans,
+                    enable_tracing, get_tracer, load_span_file,
+                    new_trace_id, reset_tracing, summarize_spans)
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
@@ -41,4 +50,7 @@ __all__ = [
     "last_report",
     "StatusServer",
     "plan_snapshot", "status_snapshot",
+    "Span", "Tracer", "chrome_trace", "collect_fleet_spans",
+    "enable_tracing", "get_tracer", "load_span_file", "new_trace_id",
+    "reset_tracing", "summarize_spans",
 ]

@@ -7,6 +7,9 @@ Three routes, all read-only:
 * ``/plan``    — the active :class:`DispatchPlan` table
   (:func:`~.snapshot.plan_snapshot`), save-able and diffable with
   ``tunedb diff``.
+* ``/trace``   — the tracer's retained spans as Chrome trace-event JSON
+  (:func:`~.trace.chrome_trace`): save the body to a file and open it in
+  Perfetto.  404 while tracing is disabled.
 * ``/healthz`` — liveness probe, always ``ok``.
 
 The server is a ``ThreadingHTTPServer`` on a daemon thread: scrapes ride
@@ -47,7 +50,7 @@ class StatusServer:
     def __init__(self, *, host: str = "127.0.0.1", port: int = 0,
                  controller=None, fleet: Optional[str] = None,
                  store=None, telemetry=None, models=None,
-                 follower=None, router=None) -> None:
+                 follower=None, router=None, tracer=None) -> None:
         self.host = host
         self.port = port
         self.controller = controller
@@ -57,6 +60,7 @@ class StatusServer:
         self.models = models
         self.follower = follower
         self.router = router
+        self.tracer = tracer
         self._httpd: Optional[ThreadingHTTPServer] = None
         self._thread: Optional[threading.Thread] = None
 
@@ -68,10 +72,19 @@ class StatusServer:
         return status_snapshot(store=self.store, telemetry=self.telemetry,
                                controller=self.controller, fleet=self.fleet,
                                models=self.models, follower=self.follower,
-                               router=self.router)
+                               router=self.router, tracer=self.tracer)
 
     def plan_json(self) -> dict:
         return plan_snapshot()
+
+    def trace_json(self) -> Optional[dict]:
+        """Retained spans as a Chrome trace-event document, or None while
+        tracing is disabled (the route turns that into a 404)."""
+        from .trace import chrome_trace, get_tracer
+        tracer = self.tracer if self.tracer is not None else get_tracer()
+        if tracer is None:
+            return None
+        return chrome_trace(tracer.spans())
 
     # -- lifecycle ---------------------------------------------------------
     def start(self) -> "StatusServer":
@@ -95,6 +108,13 @@ class StatusServer:
                         body = (json.dumps(server.plan_json(), indent=1,
                                            sort_keys=True, default=str)
                                 + "\n").encode()
+                        ctype = "application/json"
+                    elif path == "/trace":
+                        doc = server.trace_json()
+                        if doc is None:
+                            self.send_error(404, "tracing disabled")
+                            return
+                        body = (json.dumps(doc) + "\n").encode()
                         ctype = "application/json"
                     elif path == "/healthz":
                         body, ctype = b"ok\n", "text/plain"

@@ -18,6 +18,8 @@ Schema (version 1)::
       "fleet":    {FleetDir.status() + "report"} | null,
       "follower": PlanFollower.stats() | null,
       "router":   Router.stats() | null,
+      "trace":    Tracer.stats() (sampled/dropped/buffered counts +
+                  per-tier dispatch latency attribution) | null,
       "metrics":  MetricsRegistry.snapshot(),
     }
 """
@@ -36,7 +38,7 @@ PLAN_SNAPSHOT_CAP = 2000    # /plan entry cap: a plan can hold thousands
 def status_snapshot(*, store=None, telemetry=None, controller=None,
                     fleet: Optional[str] = None, models=None,
                     registry=None, follower=None,
-                    router=None) -> Dict[str, object]:
+                    router=None, tracer=None) -> Dict[str, object]:
     """Build the shared status document.
 
     With no arguments, reads the process's live serving state (what the
@@ -71,6 +73,9 @@ def status_snapshot(*, store=None, telemetry=None, controller=None,
         from ..plans import active_followers
         live = active_followers()
         follower = live[0] if live else None
+    if tracer is None:
+        from .trace import get_tracer
+        tracer = get_tracer()
 
     # flush pending lock-free ring buffers before serializing: without this
     # a snapshot taken between drains under-reports shapes recorded via
@@ -94,6 +99,7 @@ def status_snapshot(*, store=None, telemetry=None, controller=None,
         "fleet": _fleet_section(fleet) if fleet else None,
         "follower": follower.stats() if follower is not None else None,
         "router": router.stats() if router is not None else None,
+        "trace": tracer.stats() if tracer is not None else None,
         "metrics": registry.snapshot(),
     }
     return snapshot

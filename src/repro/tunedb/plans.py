@@ -77,6 +77,11 @@ __all__ = [
 
 PLAN_SCHEMA_VERSION = 1
 
+# lazily bound trace module (False = unavailable): follower install
+# attempts probe one module attribute, so disabled tracing costs zero
+# instrument calls on the plan-follow path
+_TRACE = None
+
 MANIFEST_NAME = "manifest.json"
 ENTRIES_NAME = "entries.jsonl"
 CURRENT_NAME = "CURRENT.json"
@@ -548,37 +553,60 @@ class PlanFollower:
             if gen < self.generation:
                 self.refused_stale += 1     # rollback: refuse, keep serving
             return None
+        # a new candidate generation: the pull→verify→install attempt is
+        # rare (one per publish), so its span is always kept when tracing
+        # is on — the probe itself is one module-attribute read
+        global _TRACE
+        t = _TRACE
+        if t is None:
+            try:
+                from .obs import trace as t
+            except Exception:
+                t = False
+            _TRACE = t
+        tr = t._TRACER if t else None
+        sp = (tr.begin("plan.install", trace_id=t.new_trace_id(),
+                       follower=self.name, generation=gen)
+              if tr is not None else None)
+        outcome = "installed"
         try:
-            plan = self.registry.pull(pointer)
-        except PlanArtifactError:
-            self.refused_digest += 1        # torn pull: retry next poll
-            return None
-        if self.sentry is not None:
-            cur = self._current_plan()
-            if cur is not None:
-                from .obs.snapshot import plan_snapshot
-                report = self.sentry.diff_plans(plan_snapshot(cur),
-                                                plan_snapshot(plan))
-                if not report.ok:
-                    self.refused_sentry += 1
-                    import warnings
-                    warnings.warn(
-                        f"plan follower {self.name} refused generation "
-                        f"{gen}: {len(report.regressions)} planned shape(s) "
-                        "lose coverage vs the serving plan; keeping "
-                        f"generation {self.generation}",
-                        RuntimeWarning, stacklevel=2)
-                    return None
-        if not self._install(plan, pointer):
-            self.errors += 1
-            return None
-        self.generation = gen
-        self.installs += 1
-        self.installed_at = time.time()
-        published = pointer.get("published_at")
-        if isinstance(published, (int, float)) and published > 0:
-            self.lag_s = max(self.installed_at - float(published), 0.0)
-        return dict(pointer)
+            try:
+                plan = self.registry.pull(pointer)
+            except PlanArtifactError:
+                self.refused_digest += 1    # torn pull: retry next poll
+                outcome = "refused_digest"
+                return None
+            if self.sentry is not None:
+                cur = self._current_plan()
+                if cur is not None:
+                    from .obs.snapshot import plan_snapshot
+                    report = self.sentry.diff_plans(plan_snapshot(cur),
+                                                    plan_snapshot(plan))
+                    if not report.ok:
+                        self.refused_sentry += 1
+                        outcome = "refused_sentry"
+                        import warnings
+                        warnings.warn(
+                            f"plan follower {self.name} refused generation "
+                            f"{gen}: {len(report.regressions)} planned "
+                            "shape(s) lose coverage vs the serving plan; "
+                            f"keeping generation {self.generation}",
+                            RuntimeWarning, stacklevel=2)
+                        return None
+            if not self._install(plan, pointer):
+                self.errors += 1
+                outcome = "error"
+                return None
+            self.generation = gen
+            self.installs += 1
+            self.installed_at = time.time()
+            published = pointer.get("published_at")
+            if isinstance(published, (int, float)) and published > 0:
+                self.lag_s = max(self.installed_at - float(published), 0.0)
+            return dict(pointer)
+        finally:
+            if sp is not None:
+                tr.end(sp, outcome=outcome)
 
     # -- daemon loop ---------------------------------------------------------
     def start(self) -> "PlanFollower":

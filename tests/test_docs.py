@@ -72,6 +72,19 @@ def test_readme_architecture_map_names_every_package():
     assert not missing, f"README architecture map misses: {missing}"
 
 
+def test_tracing_docs_cover_the_surface():
+    """The tracing section must name the CLI verbs, the endpoint route,
+    the config knobs, and the span taxonomy's load-bearing names."""
+    obs = (REPO / "docs" / "OBSERVABILITY.md").read_text(encoding="utf-8")
+    for needle in ("trace export", "trace summary", "/trace",
+                   "trace_sample", "measure", "Perfetto",
+                   "dispatch.resolve", "engine.tick", "request.route",
+                   "retune.epoch", "fleet.job", "plan.install",
+                   "measure.wallclock",
+                   "tunedb_measurements_total"):
+        assert needle in obs, f"OBSERVABILITY.md lost mention of {needle!r}"
+
+
 def test_docs_crosslink_each_other():
     obs = (REPO / "docs" / "OBSERVABILITY.md").read_text(encoding="utf-8")
     arch = (REPO / "docs" / "ARCHITECTURE.md").read_text(encoding="utf-8")
