@@ -1,0 +1,489 @@
+"""E19 — chaos: the tunedb bus under deterministic fault injection.
+
+The robustness claim (docs/ROBUSTNESS.md) is that every filesystem-bus
+protocol *absorbs* the faults a real filesystem produces instead of
+losing work or serving damage.  Four gates:
+
+  1. DISARMED — with no fault plan armed, the chaos shim makes ZERO
+     calls on the frozen-plan dispatch hot path, the store append/load,
+     the lease lifecycle, and plan export/load (monkeypatch-trapped, the
+     same proof style as E15's zero-instrumentation gate).
+
+  2. STORE-CRASH — an appender process is SIGKILLed mid-flight after N
+     acknowledged (fsync-then-print) appends: a fresh open recovers
+     every acknowledged record, and ``tunedb fsck`` verifies/repairs the
+     surviving store (exit 0 after ``--repair``).
+
+  3. FLEET — a 3-worker fleet runs a seeded ``FaultPlan`` (torn shard
+     appends at >= 1%, >= 2 worker kill-points, EIO bursts on the lease
+     protocol, torn/stale plan pulls against 2 plan followers).  Gate:
+     every published job reaches done/failed exactly once, every done
+     job's record is in the merged store (zero lost acknowledged
+     records), and the followers install zero torn and zero stale plan
+     generations while converging to the final publish.
+
+  4. SERVING — while that same fault plan is armed, a serving engine
+     with deadlines + shedding completes its admitted requests without
+     an exception and reports healthy once the backlog drains (the bus
+     burning must never take the request path down).
+
+The surviving store + fleet bus are copied to
+``results/bench/chaos-store/`` so CI can re-run ``tunedb fsck`` against
+them as an independent step.
+"""
+
+from __future__ import annotations
+
+import errno
+import shutil
+import signal
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+import warnings
+from pathlib import Path
+
+from repro.core.backend import SimulatedTPUBackend
+from repro.core.search import SearchResult
+from repro.core.space import gemm_input
+from repro.core.tuner import clear_tuners
+from repro.kernels import dispatch
+from repro.tunedb import (DispatchPlan, RecordStore, TuneRecord, chaos,
+                          clear_store, clear_telemetry, install_serving,
+                          shape_key)
+from repro.tunedb.__main__ import main as tunedb_main
+from repro.tunedb.chaos import FaultPlan, FaultRule, KillPoint
+from repro.tunedb.fleet import Coordinator, FleetJob, Worker
+from repro.tunedb.model import clear_models
+from repro.tunedb.plans import PlanFollower, PlanRegistry, export_plan, \
+    load_plan
+
+from .common import RESULTS, save, table
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+SEED = 23
+N_WORKERS = 3
+FOLLOWERS = 2
+
+CFG = {"bm": 64, "bn": 128, "bk": 128, "k_unroll": 1, "k_split": 1,
+       "order": 0, "acc32": 1, "prefetch": 2}
+
+# every FaultyIO entry point a disarmed run must never reach
+_SHIM_METHODS = ("probe", "read_text", "read_bytes", "write_text",
+                 "write_bytes", "file_write", "replace", "rename",
+                 "fsync", "utime", "unlink")
+
+
+def _reset() -> None:
+    clear_tuners()
+    clear_store()
+    clear_models()
+    clear_telemetry()
+
+
+class _StubTuner:
+    """Instant deterministic tuner: E19 measures the bus, not the search."""
+
+    space = None
+    backend = SimulatedTPUBackend(noise=0.0)
+
+    def search(self, inputs, remeasure=True):
+        tf = float(self.backend.measure("gemm", CFG, inputs))
+        return SearchResult(best=dict(CFG), predicted_tflops=tf,
+                            measured_tflops=tf, top_k=[(dict(CFG), tf)],
+                            n_candidates=1, measured=[(dict(CFG), tf)])
+
+
+def _rec(i: int) -> TuneRecord:
+    return TuneRecord(space="gemm", inputs=gemm_input(128 * (i + 1), 64, 512),
+                      config=dict(CFG), tflops=100.0, backend="sim")
+
+
+# ---------------------------------------------------------------------------
+# 1. disarmed: the shim is invisible on the hot path and the bus
+# ---------------------------------------------------------------------------
+
+def _bench_disarmed(fast: bool, tmp: Path) -> dict:
+    chaos.disarm()
+    store = RecordStore(tmp / "disarmed.jsonl")
+    hot = [gemm_input(256 * (i + 1), 64, 1024) for i in range(8)]
+    for inputs in hot:
+        store.add(TuneRecord(space="gemm", inputs=inputs, config=CFG,
+                             tflops=100.0, backend="sim"))
+    install_serving(store=store)
+
+    hits = {"n": 0}
+
+    def trap(self, *a, **kw):
+        hits["n"] += 1
+        raise AssertionError("disarmed path touched the chaos shim")
+
+    saved = {name: getattr(chaos.FaultyIO, name) for name in _SHIM_METHODS}
+    for name in _SHIM_METHODS:
+        setattr(chaos.FaultyIO, name, trap)
+    iters = 2000 if fast else 20000
+    try:
+        for inputs in hot:                       # warm every memo
+            dispatch._tuned_cfg("gemm", inputs)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            for inputs in hot:
+                dispatch._tuned_cfg("gemm", inputs)
+        t_resolve = (time.perf_counter() - t0) / (iters * len(hot))
+        # the bus surfaces the shim also guards, all disarmed
+        store.add(_rec(98))
+        RecordStore.open(tmp / "disarmed.jsonl")
+        coord = Coordinator(tmp / "disarmed-fleet", store, lease_timeout_s=5.0)
+        coord.publish([FleetJob(space="gemm",
+                                inputs=gemm_input(128, 64, 512))])
+        job, lp = coord.fleet.claim()
+        coord.fleet.heartbeat(lp)
+        coord.fleet.complete(job, lp, {"worker_id": "bench"})
+        plan = DispatchPlan(generation=0, fingerprint="sim", store_version=-1,
+                            table={("gemm", shape_key(hot[0])):
+                                   (dict(CFG), "exact")})
+        load_plan(export_plan(plan, tmp / "disarmed-plan"))
+    finally:
+        for name, fn in saved.items():
+            setattr(chaos.FaultyIO, name, fn)
+        _reset()
+
+    n = iters * len(hot)
+    print(f"disarmed: {hits['n']} shim calls over {n} hot-path resolutions "
+          f"({t_resolve*1e6:.2f} us/call) + store/lease/plan round-trips")
+    return {"shim_calls": hits["n"], "resolutions": n,
+            "resolve_us": t_resolve * 1e6, "pass": hits["n"] == 0}
+
+
+# ---------------------------------------------------------------------------
+# 2. SIGKILL mid-append: acknowledged records survive, fsck repairs
+# ---------------------------------------------------------------------------
+
+_CHILD = """
+import sys
+sys.path.insert(0, {src!r})
+from repro.tunedb.store import RecordStore, TuneRecord
+s = RecordStore({path!r}, fsync=True)
+i = 0
+while True:
+    s.add(TuneRecord(space="gemm", inputs={{"M": i, "N": 64, "K": 512}},
+                     config={{"bm": 32}}, tflops=1.0, backend="sim"))
+    print(i, flush=True)        # ACK: durable before this line prints
+    i += 1
+"""
+
+
+def _bench_store_crash(fast: bool, tmp: Path) -> dict:
+    path = str(tmp / "crash.jsonl")
+    n_ack = 16 if fast else 64
+    proc = subprocess.Popen(
+        [sys.executable, "-c", _CHILD.format(src=SRC, path=path)],
+        stdout=subprocess.PIPE, stderr=subprocess.DEVNULL, text=True)
+    acked = []
+    try:
+        for line in proc.stdout:
+            acked.append(int(line))
+            if len(acked) >= n_ack:
+                proc.send_signal(signal.SIGKILL)    # no cleanup, mid-flight
+                break
+    finally:
+        proc.kill()
+        proc.wait(timeout=30)
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")             # a torn tail may warn
+        store = RecordStore.open(path)
+        recovered = {r.inputs["M"] for r in store.records()}
+        lost = sorted(set(acked) - recovered)
+        torn_tail = store.n_skipped
+        # fsck quarantines whatever the crash tore, then verifies clean
+        fsck_repair = tunedb_main(["fsck", path, "--repair"])
+    fsck_clean = tunedb_main(["fsck", path])
+
+    print(f"store-crash: SIGKILL after {len(acked)} acked appends -> "
+          f"{len(recovered)} recovered, {len(lost)} lost, "
+          f"{torn_tail} torn line(s) quarantined; fsck --repair exit "
+          f"{fsck_repair}, re-check exit {fsck_clean}")
+    return {"acked": len(acked), "recovered": len(recovered),
+            "lost": len(lost), "torn_lines": torn_tail,
+            "fsck_repair_exit": fsck_repair, "fsck_clean_exit": fsck_clean,
+            "pass": bool(not lost and fsck_repair == 0 and fsck_clean == 0)}
+
+
+# ---------------------------------------------------------------------------
+# 3. the fleet + plan followers under a seeded fault plan
+# ---------------------------------------------------------------------------
+
+class _Replica:
+    """A follower's private install target with torn/stale read checks
+    (the E16 harness shape: one atomically-swapped plan reference)."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.installed = None
+        self.torn = 0
+        self.stale = 0
+        self._last_gen = 0
+
+    def install(self, plan, pointer) -> bool:
+        self.installed = (plan, int(pointer["generation"]))
+        return True
+
+    def current_plan(self):
+        got = self.installed
+        return got[0] if got else None
+
+    def read(self, shapes) -> None:
+        got = self.installed
+        if got is None:
+            return
+        plan, gen = got
+        if gen < self._last_gen:
+            self.stale += 1
+        self._last_gen = max(self._last_gen, gen)
+        markers = {entry[0]["g"] for i in shapes
+                   for entry in [plan.lookup("gemm", shape_key(i))]
+                   if entry is not None}
+        if len(markers) > 1:            # mixed generations in one plan read
+            self.torn += 1
+
+
+def _marked_plan(gen: int, shapes) -> DispatchPlan:
+    tbl = {("gemm", shape_key(i)): (dict(CFG, g=gen), "exact")
+           for i in shapes}
+    return DispatchPlan(generation=0, fingerprint="sim", store_version=-1,
+                        table=tbl)
+
+
+def _fault_plan() -> FaultPlan:
+    return FaultPlan(seed=SEED, rules=[
+        # >= 1% torn shard appends (the crashed-writer fault)
+        FaultRule(site="store.append", kind="torn_write", p=0.05,
+                  max_count=2),
+        # >= 2 worker kill-points: crashes between protocol steps
+        FaultRule(site="worker.*", kind="kill", p=0.25, max_count=2),
+        # EIO bursts on the lease protocol (claims, heartbeats, completes)
+        FaultRule(site="lease.*", kind="errno", p=0.08, errno=errno.EIO,
+                  max_count=8),
+        # torn + stale + unreadable plan pulls against the followers
+        FaultRule(site="plan.pull.entries", kind="truncated_read", p=0.25,
+                  max_count=4),
+        FaultRule(site="plan.pull.manifest", kind="errno", p=0.15,
+                  errno=errno.EIO, max_count=3),
+        FaultRule(site="plan.registry.current", kind="stale_read", p=0.15,
+                  max_count=3),
+    ])
+
+
+def _bench_fleet_chaos(fast: bool, tmp: Path) -> dict:
+    n_jobs = 10 if fast else 24
+    generations = 5 if fast else 10
+    store = RecordStore(tmp / "fleet.jsonl")
+    coord = Coordinator(tmp / "fleet", store, lease_timeout_s=0.3)
+    jobs = [FleetJob(space="gemm", inputs=gemm_input(128 * (i + 1), 64, 512))
+            for i in range(n_jobs)]
+    assert coord.publish(jobs) == n_jobs
+
+    shapes = [gemm_input(128 * (i + 1), 64, 512) for i in range(8)]
+    registry = PlanRegistry(tmp / "registry")
+    replicas = [_Replica(f"replica-{i}") for i in range(FOLLOWERS)]
+    followers = [PlanFollower(registry, poll_s=0.01, name=r.name,
+                              install=r.install, current_plan=r.current_plan)
+                 for r in replicas]
+    stop = threading.Event()
+
+    def reader(replica):
+        while not stop.is_set():
+            replica.read(shapes)
+            time.sleep(0.001)
+
+    def run_worker(wid):
+        w = Worker(tmp / "fleet", worker_id=wid,
+                   tuners={"gemm": _StubTuner()}, poll_s=0.01,
+                   heartbeat_s=0.05)
+        try:
+            w.run(max_jobs=n_jobs, idle_timeout_s=0.5)
+        except KillPoint:
+            pass                         # simulated crash: the thread dies
+
+    fplan = _fault_plan()
+    t0 = time.perf_counter()
+    with chaos.armed(fplan) as io:
+        for f in followers:
+            f.start()
+        readers = [threading.Thread(target=reader, args=(r,), daemon=True)
+                   for r in replicas]
+        for t in readers:
+            t.start()
+        workers = [threading.Thread(target=run_worker, args=(f"w{i}",))
+                   for i in range(N_WORKERS)]
+        for t in workers:
+            t.start()
+        for gen in range(1, generations + 1):   # publish while jobs burn
+            registry.publish(_marked_plan(gen, shapes))
+            time.sleep(0.05)
+        for t in workers:
+            t.join(timeout=60)
+        report = io.report()
+
+    # recovery, faults off: requeue expired leases, drain the remainder
+    deadline = time.time() + 60
+    while time.time() < deadline:
+        time.sleep(0.31)
+        coord.fleet.reclaim_expired(lease_timeout_s=0.3, max_attempts=10)
+        c = coord.fleet.counts()
+        if c["leases"] == 0 and c["queue"] == 0:
+            break
+        Worker(tmp / "fleet", worker_id=f"sweep-{time.monotonic_ns()}",
+               tuners={"gemm": _StubTuner()}, poll_s=0.01,
+               heartbeat_s=0.05).run(max_jobs=n_jobs, idle_timeout_s=0.2)
+    # one clean publish; every follower must converge to it
+    final_gen = registry.publish(
+        _marked_plan(generations + 1, shapes)).generation
+    deadline = time.time() + 30
+    while time.time() < deadline and any(
+            f.generation < final_gen for f in followers):
+        time.sleep(0.01)
+    wall_s = time.perf_counter() - t0
+    stop.set()
+    for f in followers:
+        f.stop()
+
+    counts = coord.fleet.counts()
+    done = {p.stem for p in coord.fleet.done.glob("*.json")}
+    failed = {p.stem for p in coord.fleet.failed.glob("*.json")}
+    exactly_once = (done | failed == {j.job_id for j in jobs}
+                    and not (done & failed))
+    coord.poll()                         # final merge over torn shards
+    merged = {tuple(sorted(r.inputs.items()))
+              for r in store.records() if r.source == "fleet"}
+    lost_acked = [j.job_id for j in jobs if j.job_id in done
+                  and tuple(sorted(j.inputs.items())) not in merged]
+    converged = all(f.generation == final_gen for f in followers)
+    torn_installs = sum(r.torn for r in replicas)
+    stale_installs = sum(r.stale for r in replicas)
+    refused = sum(f.refused_digest for f in followers)
+
+    by_kind = report.get("by_kind", {})
+    engaged = (by_kind.get("kill", 0) >= 2 and by_kind.get("errno", 0) >= 1
+               and report["injected_total"] >= 3)
+
+    rows = [
+        {"invariant": "jobs done/failed exactly once",
+         "value": f"{len(done)} done + {len(failed)} failed / {n_jobs}",
+         "ok": exactly_once},
+        {"invariant": "acknowledged records lost",
+         "value": len(lost_acked), "ok": not lost_acked},
+        {"invariant": "bus drained (queue/leases)",
+         "value": f"{counts['queue']}/{counts['leases']}",
+         "ok": counts["queue"] == 0 and counts["leases"] == 0},
+        {"invariant": "torn plan installs", "value": torn_installs,
+         "ok": torn_installs == 0},
+        {"invariant": "stale plan installs", "value": stale_installs,
+         "ok": stale_installs == 0},
+        {"invariant": f"followers at generation {final_gen}",
+         "value": [f.generation for f in followers], "ok": converged},
+    ]
+    print(table(rows, ["invariant", "value", "ok"],
+                f"E19 — {N_WORKERS}-worker fleet under seeded chaos "
+                f"(seed {SEED})"))
+    print(f"\nfaults injected: {report['injected_total']} "
+          f"({dict(sorted(by_kind.items()))}) over {report['calls']} shim "
+          f"calls in {wall_s:.2f}s; followers refused "
+          f"{refused} torn pull(s)")
+
+    ok = bool(exactly_once and not lost_acked and counts["queue"] == 0
+              and counts["leases"] == 0 and torn_installs == 0
+              and stale_installs == 0 and converged and engaged)
+
+    # persist the surviving store + bus for the CI fsck step
+    ci_dir = RESULTS / "chaos-store"
+    shutil.rmtree(ci_dir, ignore_errors=True)
+    ci_dir.mkdir(parents=True)
+    shutil.copy2(tmp / "fleet.jsonl", ci_dir / "db.jsonl")
+    shutil.copytree(tmp / "fleet", ci_dir / "fleet")
+    fsck_exit = tunedb_main(["fsck", str(ci_dir / "db.jsonl"),
+                             "--fleet", str(ci_dir / "fleet")])
+    print(f"fsck over the surviving store + bus: exit {fsck_exit} "
+          f"(artifact {ci_dir})")
+
+    return {"jobs": n_jobs, "workers": N_WORKERS, "wall_s": wall_s,
+            "done": len(done), "failed": len(failed),
+            "exactly_once": exactly_once, "lost_acked": len(lost_acked),
+            "queue": counts["queue"], "leases": counts["leases"],
+            "torn_installs": torn_installs, "stale_installs": stale_installs,
+            "refused_digest": refused, "converged": converged,
+            "injected": report["injected_total"],
+            "by_kind": by_kind, "fsck_exit": fsck_exit,
+            "pass": ok and fsck_exit == 0}
+
+
+# ---------------------------------------------------------------------------
+# 4. serving keeps answering while the bus burns
+# ---------------------------------------------------------------------------
+
+def _bench_serving(fast: bool) -> dict:
+    import jax
+    import numpy as np
+    from repro.models import ModelConfig, init_params
+    from repro.serve import Engine, ServeConfig
+
+    cfg = ModelConfig(name="t", n_layers=1, d_model=32, n_heads=2, n_kv=1,
+                      d_ff=64, vocab=128, dtype=jax.numpy.float32,
+                      attn_chunk=16, logit_chunk=16, remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 128, 5) for _ in range(8)]
+
+    eng = Engine(cfg, params, ServeConfig(
+        max_len=64, slots=2, shed_threshold=6, request_deadline_s=30.0))
+    exception = None
+    with chaos.armed(_fault_plan()):    # the bus faults are armed; the
+        try:                            # request path must not notice
+            outs = eng.generate(prompts, max_new=4)
+        except Exception as e:          # noqa: BLE001 - the gate itself
+            exception = repr(e)
+            outs = []
+    served = sum(1 for o in outs if o)
+    complete = served and all(len(o) == 4 for o in outs if o)
+    healthy = eng._health() is True
+
+    print(f"serving under armed chaos: {served} served / "
+          f"{eng.shed_requests} shed of {len(prompts)}, "
+          f"deadline-retired {eng.deadline_retired}, healthy-after-drain "
+          f"{healthy}, exception {exception or 'none'}")
+    ok = bool(exception is None and complete
+              and served + eng.shed_requests == len(prompts)
+              and eng.deadline_retired == 0 and healthy)
+    return {"requests": len(prompts), "served": served,
+            "shed": eng.shed_requests,
+            "deadline_retired": eng.deadline_retired,
+            "healthy_after_drain": healthy, "exception": exception,
+            "pass": ok}
+
+
+def run(fast: bool = True) -> dict:
+    tmp = Path(tempfile.mkdtemp(prefix="bench_chaos_"))
+    try:
+        chaos.disarm()
+        disarmed = _bench_disarmed(fast, tmp)
+        store_crash = _bench_store_crash(fast, tmp)
+        fleet = _bench_fleet_chaos(fast, tmp)
+        serving = _bench_serving(fast)
+    finally:
+        chaos.disarm()
+        _reset()
+        shutil.rmtree(tmp, ignore_errors=True)
+    out = {"disarmed": disarmed, "store_crash": store_crash, "fleet": fleet,
+           "serving": serving,
+           "pass": bool(disarmed["pass"] and store_crash["pass"]
+                        and fleet["pass"] and serving["pass"])}
+    save("chaos", out)
+    print(f"\nE19 verdict: {'PASS' if out['pass'] else 'FAIL'}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -258,6 +258,58 @@ GATES: List[Gate] = [
             f"{_get(r, 'overhead', 'traced_us', default=0):.0f}us/tick"),
     ),
     Gate(
+        file="chaos",
+        name="chaos shim disarmed makes zero calls on the dispatch hot path",
+        check=lambda r: _get(r, "disarmed", "shim_calls") == 0,
+        detail=lambda r: (
+            f"{_get(r, 'disarmed', 'shim_calls', default='?')} shim calls "
+            f"over {_get(r, 'disarmed', 'resolutions', default='?')} "
+            f"resolutions "
+            f"({_get(r, 'disarmed', 'resolve_us', default=0):.2f} us/call)"),
+    ),
+    Gate(
+        file="chaos",
+        name="SIGKILLed appender loses zero acknowledged records; fsck "
+             "repairs the survivor",
+        check=lambda r: _get(r, "store_crash", "pass") is True,
+        detail=lambda r: (
+            f"{_get(r, 'store_crash', 'lost', default='?')} lost of "
+            f"{_get(r, 'store_crash', 'acked', default='?')} acked, "
+            f"{_get(r, 'store_crash', 'torn_lines', default='?')} torn "
+            f"line(s), fsck exits "
+            f"{_get(r, 'store_crash', 'fsck_repair_exit', default='?')}/"
+            f"{_get(r, 'store_crash', 'fsck_clean_exit', default='?')}"),
+    ),
+    Gate(
+        file="chaos",
+        name="3-worker fleet under seeded faults: every job exactly once, "
+             "zero lost acks, zero torn/stale plan installs",
+        check=lambda r: _get(r, "fleet", "pass") is True,
+        detail=lambda r: (
+            f"{_get(r, 'fleet', 'done', default='?')} done + "
+            f"{_get(r, 'fleet', 'failed', default='?')} failed of "
+            f"{_get(r, 'fleet', 'jobs', default='?')} jobs, lost "
+            f"{_get(r, 'fleet', 'lost_acked', default='?')}, torn/stale "
+            f"installs {_get(r, 'fleet', 'torn_installs', default='?')}/"
+            f"{_get(r, 'fleet', 'stale_installs', default='?')}, "
+            f"{_get(r, 'fleet', 'injected', default='?')} faults injected "
+            f"({_get(r, 'fleet', 'by_kind', default={})}), fsck exit "
+            f"{_get(r, 'fleet', 'fsck_exit', default='?')}"),
+    ),
+    Gate(
+        file="chaos",
+        name="serving completes its requests with chaos armed (deadlines + "
+             "shedding, healthy after drain)",
+        check=lambda r: _get(r, "serving", "pass") is True,
+        detail=lambda r: (
+            f"{_get(r, 'serving', 'served', default='?')} served + "
+            f"{_get(r, 'serving', 'shed', default='?')} shed of "
+            f"{_get(r, 'serving', 'requests', default='?')}, retired "
+            f"{_get(r, 'serving', 'deadline_retired', default='?')}, "
+            f"healthy={_get(r, 'serving', 'healthy_after_drain')}, "
+            f"exception={_get(r, 'serving', 'exception')}"),
+    ),
+    Gate(
         file="trace",
         name="exported trace artifact is Perfetto-loadable with the linked "
              "span taxonomy (route/tick/dispatch-tier/measure)",

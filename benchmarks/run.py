@@ -20,6 +20,10 @@ One benchmark per paper table/figure (DESIGN.md §8 experiment index):
                  vs round-robin TFLOPS/hit-rate, fleet-only retune trigger
   E18 trace    — end-to-end tracing: zero instrument calls disabled,
                  <=2% tick overhead at 1% sampling, Perfetto artifact
+  E19 chaos    — deterministic fault injection: zero shim calls disarmed,
+                 SIGKILL-safe store, fleet + plan followers under a seeded
+                 FaultPlan (no lost acks, no torn/stale installs), serving
+                 stays up under armed chaos
 
 Gate validation: ``python -m benchmarks.check_gates`` after a run.
 """
@@ -39,11 +43,11 @@ def main() -> None:
     args = p.parse_args()
     fast = not args.full
 
-    from . import (bench_conv, bench_dispatch, bench_fleet, bench_gemm,
-                   bench_kernels, bench_mlp, bench_model, bench_obs,
-                   bench_plans, bench_retune, bench_roofline, bench_router,
-                   bench_sampler, bench_selection, bench_trace,
-                   bench_tunedb)
+    from . import (bench_chaos, bench_conv, bench_dispatch, bench_fleet,
+                   bench_gemm, bench_kernels, bench_mlp, bench_model,
+                   bench_obs, bench_plans, bench_retune, bench_roofline,
+                   bench_router, bench_sampler, bench_selection,
+                   bench_trace, bench_tunedb)
     suites = {
         "sampler": lambda: bench_sampler.run(fast),
         "mlp": lambda: bench_mlp.run(fast),
@@ -62,6 +66,7 @@ def main() -> None:
         "plans": lambda: bench_plans.run(fast),
         "router": lambda: bench_router.run(fast),
         "trace": lambda: bench_trace.run(fast),
+        "chaos": lambda: bench_chaos.run(fast),
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     t_all = time.time()

@@ -88,6 +88,15 @@ def main() -> None:
     p.add_argument("--trace-out", default=None,
                    help="write the run's spans as Chrome trace-event JSON "
                         "here after generation (open in Perfetto)")
+    p.add_argument("--request-deadline", type=float, default=None,
+                   help="per-request wall-clock deadline in seconds, "
+                        "enforced at decode-tick boundaries: overdue "
+                        "pending requests are rejected unserved, overdue "
+                        "active ones retire with the tokens they have")
+    p.add_argument("--shed-threshold", type=int, default=None,
+                   help="admission backlog cap: while active+pending "
+                        "exceeds it the newest arrivals are shed and "
+                        "/healthz answers 503 until the backlog drains")
     p.add_argument("--measure", choices=["wallclock", "sim"], default=None,
                    help="re-measure model top-k candidates on the serving "
                         "path: 'wallclock' times real kernels on TPU "
@@ -125,10 +134,12 @@ def main() -> None:
         router=args.router,
         status_port=args.status_port,
         trace_sample=args.trace_sample,
+        request_deadline_s=args.request_deadline,
+        shed_threshold=args.shed_threshold,
         measure=args.measure))
     if eng.status_server is not None:
         print(f"status endpoint: {eng.status_server.url} "
-              f"(/metrics /status /plan /trace)")
+              f"(/metrics /status /plan /trace /healthz)")
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab, args.prompt_len)
                for _ in range(args.requests)]
@@ -140,6 +151,9 @@ def main() -> None:
     print(f"{len(outs)} requests, {total} tokens in {dt:.2f}s "
           f"({total/dt:.1f} tok/s, {eng.ticks} decode ticks, "
           f"{total/max(eng.ticks,1):.2f} tokens/tick)")
+    if args.shed_threshold is not None or args.request_deadline is not None:
+        print(f"degradation: {eng.shed_requests} request(s) shed, "
+              f"{eng.deadline_retired} deadline-retired")
     if eng.controller is not None:
         if eng.controller.async_active():
             print("waiting for the in-flight async retune to land...")

@@ -111,6 +111,15 @@ class ServeConfig:
     # long-running serve with record_tick_times on must not grow without
     # bound; 0 keeps every tick (short benchmark runs only)
     tick_times_cap: int = 4096
+    # -- graceful degradation (docs/ROBUSTNESS.md) ----------------------------
+    # per-request wall-clock deadline, enforced at decode-tick boundaries:
+    # a request older than this retires with whatever tokens it has (active
+    # slots) or is rejected unserved (still pending).  None disables.
+    request_deadline_s: Optional[float] = None
+    # admission backlog cap: while active + pending exceeds this, the
+    # NEWEST pending requests are shed (rejected unserved, counted in
+    # tunedb_requests_shed_total, /healthz answers 503).  None disables.
+    shed_threshold: Optional[int] = None
     # -- admission policy -----------------------------------------------------
     # "fifo": admit pending requests in arrival order (the PR 1-4 behavior).
     # "store": store-aware admission — prefer requests whose prompt-length
@@ -391,6 +400,9 @@ class Request:
     prompt: np.ndarray              # (len,) int32
     max_new: int
     out: List[int] = dataclasses.field(default_factory=list)
+    arrived_at: float = 0.0         # time.monotonic() at admission-queue entry
+    shed: bool = False              # rejected unserved by load shedding
+    deadline_exceeded: bool = False  # cut short / rejected by the deadline
 
 
 class Engine:
@@ -559,6 +571,12 @@ class Engine:
         self.admission = (StoreAwareAdmission()
                           if serve_cfg.admission == "store" else None)
         self._last_admit_len: Optional[int] = None
+        # graceful degradation counters (request_deadline_s/shed_threshold):
+        # shedding flips while the backlog is over the cap and feeds the
+        # /healthz probe, so balancers stop routing to a drowning replica
+        self.shed_requests = 0
+        self.deadline_retired = 0
+        self.shedding = False
         # fleet-global telemetry: export this engine's counters to the bus
         # and aggregate every replica's dumps into one global view the
         # retune controller reads (drift/untuned-mass off FLEET-wide
@@ -622,7 +640,33 @@ class Engine:
                 fleet=serve_cfg.retune_fleet,
                 follower=self.follower,
                 router=self.router,
-                tracer=self.tracer).start()
+                tracer=self.tracer,
+                health=self._health).start()
+
+    def _health(self):
+        """/healthz readiness: 503 while this replica is shedding load."""
+        if self.shedding:
+            return (False, "shedding load: admission backlog over "
+                           "shed_threshold")
+        return True
+
+    @staticmethod
+    def _count_degraded(kind: str, n: int = 1) -> None:
+        try:
+            from repro.tunedb.obs.metrics import get_registry
+            reg = get_registry()
+            if kind == "shed":
+                reg.counter(
+                    "tunedb_requests_shed_total",
+                    "requests rejected unserved by admission load shedding",
+                ).inc(n)
+            else:
+                reg.counter(
+                    "tunedb_request_deadline_exceeded_total",
+                    "requests cut short or rejected by request_deadline_s",
+                ).inc(n, state=kind)
+        except Exception:       # metrics must never break serving
+            pass
 
     def _probe_dispatch(self, max_shapes: int = 8) -> None:
         """Resolve a few installed shapes through kernel dispatch under a
@@ -761,7 +805,9 @@ class Engine:
                  ) -> List[List[int]]:
         """Continuous-batching loop: admit -> decode tick -> retire."""
         cfg, sc = self.cfg, self.sc
-        queue = [Request(np.asarray(p, np.int32), max_new) for p in prompts]
+        t_arrive = time.monotonic()
+        queue = [Request(np.asarray(p, np.int32), max_new,
+                         arrived_at=t_arrive) for p in prompts]
         pending = list(queue)
         active = 0
         # tracing: each admission and each decode tick opens its own trace
@@ -772,6 +818,34 @@ class Engine:
         tr = self.tracer
 
         while pending or active:
+            # graceful degradation, both checks at tick/admit boundaries:
+            # overdue PENDING requests are rejected unserved (their slot
+            # time is already lost), and while the backlog is over
+            # shed_threshold the NEWEST arrivals are shed so the oldest
+            # still meet their deadlines.  A shed/expired request keeps
+            # whatever tokens it has; its flags say why it stopped.
+            if sc.request_deadline_s is not None and pending:
+                now = time.monotonic()
+                expired = [r for r in pending
+                           if now - r.arrived_at > sc.request_deadline_s]
+                if expired:
+                    for req in expired:
+                        req.deadline_exceeded = True
+                    pending = [r for r in pending if not r.deadline_exceeded]
+                    self.deadline_retired += len(expired)
+                    self._count_degraded("rejected", len(expired))
+            if sc.shed_threshold is not None:
+                shed_now = 0
+                while active + len(pending) > sc.shed_threshold:
+                    req = pending.pop()          # newest arrival goes first
+                    req.shed = True
+                    shed_now += 1
+                if shed_now:
+                    self.shed_requests += shed_now
+                    self.shedding = True
+                    self._count_degraded("shed", shed_now)
+                elif active + len(pending) < sc.shed_threshold:
+                    self.shedding = False        # backlog drained: healthy
             while pending:                       # admit into free slots
                 slot = next((i for i, r in enumerate(self.slot_req)
                              if r is None), None)
@@ -831,13 +905,24 @@ class Engine:
                 get_telemetry().drain_pending()
                 self.maybe_retune()
 
+            now = (time.monotonic()
+                   if sc.request_deadline_s is not None else 0.0)
             for s, req in enumerate(self.slot_req):
                 if req is None:
                     continue
                 self.lengths[s] += 1
                 tok = int(toks[s])
                 req.out.append(tok)
-                if (tok == sc.eos_token or len(req.out) >= req.max_new
+                overdue = (sc.request_deadline_s is not None
+                           and now - req.arrived_at > sc.request_deadline_s)
+                if overdue:
+                    # deadline at the tick boundary: the request retires
+                    # with the tokens it has instead of starving the queue
+                    req.deadline_exceeded = True
+                    self.deadline_retired += 1
+                    self._count_degraded("retired", 1)
+                if (overdue or tok == sc.eos_token
+                        or len(req.out) >= req.max_new
                         or self.lengths[s] + 1 >= sc.max_len):
                     self.slot_req[s] = None
                     self.lengths[s] = 0

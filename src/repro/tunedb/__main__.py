@@ -952,6 +952,161 @@ def _cmd_merge(args: argparse.Namespace) -> int:
     return 0
 
 
+def _cmd_fsck(args: argparse.Namespace) -> int:
+    """Integrity-check a store (+ optional plan registry / fleet bus).
+
+    Exit 0: everything verified (or every piece of damage was quarantined
+    by ``--repair``).  Exit 1: damage present and unrepaired, or
+    unrecoverable loss (a registry CURRENT pointing at an artifact that
+    cannot be digest-verified — recompile and republish is the only fix).
+    """
+    from .store import TuneRecord
+
+    report: dict = {"store": None, "plans": None, "fleet": None}
+    damaged = 0          # findings --repair can (and did, if set) quarantine
+    unrecoverable = 0    # findings no repair can undo
+
+    # -- store: line + CRC scan (raw read: no load side effects) ------------
+    store_path = pathlib.Path(args.store)
+    bad_lines: List[int] = []
+    n_lines = 0
+    if store_path.exists():
+        raw = store_path.read_text(encoding="utf-8")
+        lines = raw.splitlines()
+        torn_tail = bool(raw) and not raw.endswith("\n")
+        for i, line in enumerate(lines, 1):
+            if not line.strip():
+                continue
+            n_lines += 1
+            try:
+                TuneRecord.from_json(line)
+            except ValueError:
+                bad_lines.append(i)
+        damaged += len(bad_lines)
+        repaired = None
+        if bad_lines and args.repair:
+            store = RecordStore.open(store_path)   # load quarantines copies
+            repaired = store.repair()              # rewrite drops bad lines
+            qdir = store.quarantine_dir()
+            print(f"[fsck] store {store_path}: quarantined "
+                  f"{repaired['quarantined']} line(s) -> {qdir}, "
+                  f"kept {repaired['kept']}")
+        report["store"] = {
+            "path": str(store_path), "lines": n_lines,
+            "bad_lines": bad_lines, "torn_tail": torn_tail,
+            "repaired": repaired}
+        status = "clean" if not bad_lines else (
+            "repaired" if args.repair else "DAMAGED")
+        print(f"[fsck] store {store_path}: {n_lines} line(s), "
+              f"{len(bad_lines)} bad ({status})")
+    else:
+        print(f"[fsck] store {store_path}: missing (nothing to check)")
+
+    # -- plan artifacts: digest-verify every generation ---------------------
+    from .plans import (CURRENT_NAME, GENERATIONS, MANIFEST_NAME,
+                        PlanArtifactError, default_plan_dir, load_plan)
+    plans_dir = pathlib.Path(args.plans) if args.plans else None
+    if plans_dir is None and default_plan_dir(store_path).is_dir():
+        plans_dir = default_plan_dir(store_path)
+    if plans_dir is not None:
+        gen_root = plans_dir / GENERATIONS
+        targets = (sorted(d for d in gen_root.iterdir() if d.is_dir())
+                   if gen_root.is_dir() else
+                   [plans_dir] if (plans_dir / MANIFEST_NAME).exists()
+                   else [])
+        current_gen = None
+        if (plans_dir / CURRENT_NAME).exists():
+            try:
+                current_gen = int(json.loads(
+                    (plans_dir / CURRENT_NAME).read_text())["generation"])
+            except (ValueError, KeyError, TypeError, OSError):
+                print(f"[fsck] plans {plans_dir}: CURRENT pointer "
+                      "unreadable (UNRECOVERABLE: republish)")
+                unrecoverable += 1
+        bad_gens: List[str] = []
+        for gdir in targets:
+            try:
+                load_plan(gdir)
+            except PlanArtifactError as e:
+                bad_gens.append(gdir.name)
+                is_current = (current_gen is not None
+                              and gdir.name == f"{current_gen:08d}")
+                if is_current:
+                    # the pointer's own artifact is torn: followers cannot
+                    # pull it and quarantining would orphan the pointer
+                    print(f"[fsck] plans {plans_dir}: CURRENT generation "
+                          f"{gdir.name} failed verification "
+                          f"(UNRECOVERABLE: {e})")
+                    unrecoverable += 1
+                else:
+                    damaged += 1
+                    if args.repair:
+                        qdir = plans_dir / "quarantine"
+                        qdir.mkdir(parents=True, exist_ok=True)
+                        os.replace(gdir, qdir / gdir.name)
+                        print(f"[fsck] plans {plans_dir}: quarantined torn "
+                              f"generation {gdir.name} -> {qdir}")
+        report["plans"] = {"path": str(plans_dir),
+                           "generations": len(targets),
+                           "bad": bad_gens, "current": current_gen}
+        status = "clean" if not bad_gens and not unrecoverable else (
+            "repaired" if args.repair and not unrecoverable else "DAMAGED")
+        print(f"[fsck] plans {plans_dir}: {len(targets)} artifact(s), "
+              f"{len(bad_gens)} bad ({status})")
+
+    # -- fleet bus invariants ----------------------------------------------
+    if args.fleet:
+        from .fleet import FleetDir
+        from .fleet.lease import FleetJob
+        fd = FleetDir(args.fleet)
+        orphans: List[str] = []      # lease or queue entry behind a marker
+        garbage: List[str] = []      # unparseable protocol files
+        for kind, d in (("queue", fd.queue), ("lease", fd.leases)):
+            if not d.is_dir():
+                continue
+            for p in sorted(d.glob("*.json")):
+                try:
+                    FleetJob.from_json(p.read_text(encoding="utf-8"))
+                except (ValueError, KeyError, TypeError):
+                    garbage.append(f"{kind}:{p.name}")
+                    damaged += 1
+                    if args.repair:
+                        qdir = fd.root / "quarantine"
+                        qdir.mkdir(parents=True, exist_ok=True)
+                        os.replace(p, qdir / f"{kind}-{p.name}")
+                    continue
+                done = (fd.done / p.name).exists()
+                if done:
+                    # done-marker is the durable truth: a leftover lease or
+                    # re-queued duplicate of a finished job is an orphan
+                    orphans.append(f"{kind}:{p.name}")
+                    damaged += 1
+                    if args.repair:
+                        p.unlink(missing_ok=True)
+        if args.repair and (orphans or garbage):
+            print(f"[fsck] fleet {fd.root}: removed {len(orphans)} "
+                  f"orphan(s), quarantined {len(garbage)} garbage file(s)")
+        report["fleet"] = {"path": str(fd.root), "orphans": orphans,
+                           "garbage": garbage, "counts": fd.counts()}
+        status = "clean" if not orphans and not garbage else (
+            "repaired" if args.repair else "DAMAGED")
+        print(f"[fsck] fleet {fd.root}: {len(orphans)} orphan(s), "
+              f"{len(garbage)} garbage file(s) ({status})")
+
+    if args.json:
+        print(json.dumps(report, indent=1, sort_keys=True))
+    if unrecoverable:
+        print(f"[fsck] verdict: UNRECOVERABLE ({unrecoverable} finding(s))")
+        return 1
+    if damaged and not args.repair:
+        print(f"[fsck] verdict: {damaged} finding(s) "
+              "(re-run with --repair to quarantine)")
+        return 1
+    print("[fsck] verdict: OK" if not damaged
+          else f"[fsck] verdict: OK ({damaged} finding(s) repaired)")
+    return 0
+
+
 def build_parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser(prog="python -m repro.tunedb",
                                 description=__doc__.splitlines()[0])
@@ -1306,6 +1461,24 @@ def build_parser() -> argparse.ArgumentParser:
     m.add_argument("stores", nargs="+")
     m.add_argument("--out", required=True)
     m.set_defaults(fn=_cmd_merge)
+
+    f = sub.add_parser(
+        "fsck", help="verify store/plan/fleet integrity; --repair "
+                     "quarantines damage")
+    f.add_argument("store", nargs="?", default=DEFAULT_STORE,
+                   help="record store to scan (line + CRC integrity)")
+    f.add_argument("--plans", default=None,
+                   help="plan registry or artifact dir to digest-verify "
+                        "(default: <store>.plan when present)")
+    f.add_argument("--fleet", default=None,
+                   help="fleet bus dir to check for orphan leases, "
+                        "done-marker duplicates, and garbage files")
+    f.add_argument("--repair", action="store_true",
+                   help="quarantine damaged lines/artifacts and remove "
+                        "orphaned bus entries")
+    f.add_argument("--json", action="store_true",
+                   help="print the full finding report as JSON")
+    f.set_defaults(fn=_cmd_fsck)
     return p
 
 

@@ -247,6 +247,11 @@ class RetuneController:
         # every background epoch's [submit, done] perf_counter window —
         # observability for "did any tick overlap a session" analyses
         self.async_windows: List[List[Optional[float]]] = []
+        # watchdog: a background epoch still running session_window_s after
+        # submit is cancelled (the fleet wait observes this event) so a hung
+        # fleet can never wedge the engine's only in-flight epoch slot
+        self._async_cancel = threading.Event()
+        self.watchdog_cancels = 0
         # epoch budget state
         self._last_retune_tick: Optional[int] = None
         self._session_starts: List[float] = []
@@ -459,6 +464,7 @@ class RetuneController:
         # perf_counter stamps (the engine's per-tick times)
         self.async_submit_t = time.perf_counter()
         self.async_done_t = None
+        self._async_cancel.clear()       # fresh epoch, fresh watchdog
         window = [self.async_submit_t, None]
         self.async_windows.append(window)
         # the submit→swap window as ONE detached span: begun here on the
@@ -520,6 +526,27 @@ class RetuneController:
         """
         if self.async_mode:
             if self.async_active():
+                # watchdog: an epoch older than the session window is hung
+                # (a stalled fleet, a wedged worker) — cancel its wait so
+                # the thread publishes what landed and frees the slot
+                if (self.async_submit_t is not None
+                        and not self._async_cancel.is_set()
+                        and time.perf_counter() - self.async_submit_t
+                        > self.cfg.session_window_s):
+                    self._async_cancel.set()
+                    self.watchdog_cancels += 1
+                    log.warning(
+                        "retune watchdog: background epoch exceeded "
+                        "session_window_s=%.0fs, cancelling its fleet wait",
+                        self.cfg.session_window_s)
+                    try:
+                        from .obs.metrics import get_registry
+                        get_registry().counter(
+                            "tunedb_retune_watchdog_cancels_total",
+                            "async retune epochs cancelled for exceeding "
+                            "session_window_s").inc()
+                    except Exception:
+                        pass
                 return None              # one in-flight epoch at a time
             done = self.wait_async()
             if done is not None:
@@ -636,7 +663,8 @@ class RetuneController:
                   f"-> {fleet_dir}")
         finished = coord.wait(timeout_s=self.fleet_timeout_s,
                               poll_s=self.fleet_poll_s,
-                              verbose=self.verbose)
+                              verbose=self.verbose,
+                              cancel=self._async_cancel)
         if not finished:
             warnings.warn(
                 f"fleet retune timed out after {self.fleet_timeout_s:.0f}s "
@@ -857,6 +885,7 @@ class RetuneController:
                               else str(self.fleet_dir)),
                 "submits": self.async_submits,
                 "in_flight": self.async_active(),
+                "watchdog_cancels": self.watchdog_cancels,
             },
             "last": None if self.last_report is None else {
                 "epoch": self.last_report.epoch,

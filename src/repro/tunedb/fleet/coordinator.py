@@ -30,6 +30,8 @@ import pathlib
 import time
 from typing import Dict, Iterable, List, Mapping, Optional, Set, Tuple
 
+from .. import chaos
+from ..chaos import retry_io
 from ..store import (DispatchPlan, RecordStore, SAMPLE_SOURCE, TuneRecord,
                      shape_key)
 from ..telemetry import FleetTelemetryView, ShapeTelemetry
@@ -320,9 +322,11 @@ class Coordinator:
             return 0, 0
 
     def _save_cursor(self, worker_id: str, merged: int, offset: int) -> None:
-        _atomic_write(self._merged_dir / f"{worker_id}.json",
-                      json.dumps({"merged": merged, "offset": offset,
-                                  "updated_at": time.time()}))
+        retry_io(lambda: _atomic_write(
+            self._merged_dir / f"{worker_id}.json",
+            json.dumps({"merged": merged, "offset": offset,
+                        "updated_at": time.time()}),
+            site="coord.cursor"), site="coord.cursor")
 
     def merge_completed(self) -> Tuple[int, int]:
         """Fold every shard's NEW records into the parent store.
@@ -378,6 +382,7 @@ class Coordinator:
 
     def _merge_pass(self, shard_dir) -> Tuple[int, int]:
         n_recs = n_samples = 0
+        io = chaos._IO
         for shard_path in sorted(shard_dir.glob("*.jsonl")):
             worker_id = shard_path.stem
             try:
@@ -393,9 +398,17 @@ class Coordinator:
             # run).  A pre-offset cursor (older format, offset<0) pays one
             # full parse and skips the already-merged record count.
             start, skip = (offset, 0) if offset >= 0 else (0, count)
-            with shard_path.open("rb") as fh:
-                fh.seek(start)
-                chunk = fh.read()
+            try:
+                if io is not None:
+                    io.probe("coord.merge.read")
+                with shard_path.open("rb") as fh:
+                    fh.seek(start)
+                    chunk = fh.read()
+            except FileNotFoundError:
+                continue                 # compacted under us
+            except OSError:
+                continue                 # transient: size entry stays stale,
+                                         # so the next poll re-reads the shard
             upto = chunk.rfind(b"\n")    # only COMPLETE lines are consumable
             if upto < 0:
                 self._shard_sizes[worker_id] = size
@@ -496,12 +509,19 @@ class Coordinator:
         return self.fleet.outstanding()
 
     def wait(self, *, timeout_s: Optional[float] = None,
-             poll_s: float = 0.25, verbose: bool = False) -> bool:
+             poll_s: float = 0.25, verbose: bool = False,
+             cancel=None) -> bool:
         """Poll until every published job is done or failed (True), or the
         deadline passes (False).  Merging happens as shards fill, not at
-        the end — a long fleet's records serve as soon as they land."""
+        the end — a long fleet's records serve as soon as they land.
+
+        ``cancel`` (a ``threading.Event``) aborts the wait early: the
+        retune controller's watchdog sets it when an async epoch outlives
+        its window, so a wedged fleet never pins the submitting process."""
         deadline = None if timeout_s is None else time.time() + timeout_s
         while True:
+            if cancel is not None and cancel.is_set():
+                return False
             status = self.poll()
             left = self.outstanding()
             if verbose:

@@ -47,6 +47,8 @@ import pathlib
 import time
 from typing import Dict, List, Mapping, Optional, Tuple
 
+from .. import chaos
+from ..chaos import retry_io
 from ..store import input_key, normalize_inputs
 
 FLEET_SCHEMA_VERSION = 1
@@ -99,10 +101,16 @@ class FleetJob:
         return cls(**d)
 
 
-def _atomic_write(path: pathlib.Path, text: str) -> None:
+def _atomic_write(path: pathlib.Path, text: str, *,
+                  site: str = "fleet.write") -> None:
+    io = chaos._IO
     tmp = path.with_name(path.name + ".tmp")
-    tmp.write_text(text, encoding="utf-8")
-    os.replace(tmp, path)
+    if io is None:
+        tmp.write_text(text, encoding="utf-8")
+        os.replace(tmp, path)
+    else:
+        io.write_text(tmp, text, site)
+        io.replace(tmp, path, site + ".replace")
 
 
 class FleetDir:
@@ -195,7 +203,9 @@ class FleetDir:
                 marker.unlink(missing_ok=True)
         if job.created_at <= 0:
             job = dataclasses.replace(job, created_at=time.time())
-        _atomic_write(self.queue / f"{jid}.json", job.to_json())
+        retry_io(lambda: _atomic_write(self.queue / f"{jid}.json",
+                                       job.to_json(), site="lease.publish"),
+                 site="lease.publish")
         return True
 
     # -- claim / heartbeat (worker side) --------------------------------------
@@ -237,6 +247,7 @@ class FleetDir:
                 entries.append((-cached[1], p.name))
         except FileNotFoundError:
             return None
+        io = chaos._IO
         for _, name in sorted(entries):
             src, dst = self.queue / name, self.leases / name
             try:
@@ -244,26 +255,64 @@ class FleetDir:
                 # job that sat queued longer than the lease timeout must
                 # not be born expired (reclaimed out of the claimant's
                 # hands before it can heartbeat)
-                os.utime(src)
-                os.rename(src, dst)
+                if io is None:
+                    os.utime(src)
+                    os.rename(src, dst)
+                else:
+                    retry_io(lambda: io.utime(src, "lease.claim.utime"),
+                             site="lease.claim.utime")
+                    retry_io(lambda: io.rename(src, dst, "lease.claim"),
+                             site="lease.claim")
             except FileNotFoundError:
                 continue                # lost the race for this entry
+            except OSError:
+                continue                # still failing after retries: next
+            # a transient read error must NOT be treated as "job vanished":
+            # only a parse failure proves garbage.  On a persistent read
+            # error the lease is LEFT IN PLACE — never unlinked — so lease
+            # expiry requeues the job instead of dropping it on the floor.
             try:
-                job = FleetJob.from_json(dst.read_text())
-            except (ValueError, OSError):
+                reader = (dst.read_text if io is None
+                          else lambda: io.read_text(dst, "lease.claim.read"))
+                job = FleetJob.from_json(retry_io(reader,
+                                                  site="lease.claim.read"))
+            except ValueError:
                 dst.unlink(missing_ok=True)      # foreign garbage: drop it
                 continue
-            os.utime(dst)               # the claim is the first heartbeat
+            except FileNotFoundError:
+                continue                # reclaimed/completed under us
+            except OSError:
+                continue                # transient burst: expiry requeues it
+            try:
+                # the claim is the first heartbeat; a transient failure here
+                # is survivable — the heartbeat loop retries momentarily
+                if io is None:
+                    os.utime(dst)
+                else:
+                    io.utime(dst, "lease.claim.heartbeat")
+            except OSError:
+                pass
             return job, dst
         return None
 
     def heartbeat(self, lease_path: pathlib.Path) -> bool:
-        """Refresh the lease mtime; False means the lease was reclaimed."""
+        """Refresh the lease mtime; False means the lease was reclaimed.
+
+        Only a VANISHED lease reports False (the job was reclaimed); a
+        transient I/O error is retried and, if it persists, reported True —
+        the lease file still exists, and claiming "reclaimed" would make
+        the worker abandon work that lease expiry may never actually take
+        away."""
+        io = chaos._IO
         try:
-            os.utime(lease_path)
+            op = ((lambda: os.utime(lease_path)) if io is None
+                  else (lambda: io.utime(lease_path, "lease.heartbeat")))
+            retry_io(op, site="lease.heartbeat")
             return True
         except FileNotFoundError:
             return False
+        except OSError:
+            return lease_path.exists()
 
     # -- completion / failure (worker side) ------------------------------------
     def complete(self, job: FleetJob, lease_path: pathlib.Path,
@@ -283,8 +332,18 @@ class FleetDir:
             payload = dict(meta)
             payload.update(job_id=job.job_id, space=job.space,
                            inputs=job.inputs, finished_at=time.time())
-            _atomic_write(marker, json.dumps(payload, sort_keys=True))
-        lease_path.unlink(missing_ok=True)
+            retry_io(lambda: _atomic_write(
+                marker, json.dumps(payload, sort_keys=True),
+                site="lease.complete"), site="lease.complete")
+        try:
+            io = chaos._IO
+            if io is None:
+                lease_path.unlink(missing_ok=True)
+            else:
+                io.unlink(lease_path, "lease.complete.release",
+                          missing_ok=True)
+        except OSError:
+            pass        # marker already durable: the sweeper drops the lease
         return not already
 
     def fail(self, job: FleetJob, lease_path: pathlib.Path, error: str, *,
@@ -295,14 +354,17 @@ class FleetDir:
         """
         attempts = job.attempts + 1
         if attempts >= max_attempts:
-            _atomic_write(self.failed / f"{job.job_id}.json", json.dumps({
-                "job": json.loads(job.to_json()), "attempts": attempts,
-                "error": error, "failed_at": time.time()}, sort_keys=True))
+            retry_io(lambda: _atomic_write(
+                self.failed / f"{job.job_id}.json", json.dumps({
+                    "job": json.loads(job.to_json()), "attempts": attempts,
+                    "error": error, "failed_at": time.time()},
+                    sort_keys=True), site="lease.fail"), site="lease.fail")
             outcome = "failed"
         else:
             requeued = dataclasses.replace(job, attempts=attempts)
-            _atomic_write(self.queue / f"{job.job_id}.json",
-                          requeued.to_json())
+            retry_io(lambda: _atomic_write(
+                self.queue / f"{job.job_id}.json", requeued.to_json(),
+                site="lease.requeue"), site="lease.requeue")
             outcome = "requeued"
         lease_path.unlink(missing_ok=True)
         return outcome
@@ -318,6 +380,7 @@ class FleetDir:
         """
         now = time.time()
         touched: List[str] = []
+        io = chaos._IO
         for lease in sorted(self.leases.glob("*.json")):
             jid = lease.stem
             if (self.done / lease.name).exists():
@@ -329,11 +392,23 @@ class FleetDir:
                 continue                           # released under us
             if age <= lease_timeout_s:
                 continue
+            # transient read errors are retried, and a persistent one LEAVES
+            # the lease for the next pass — only a parse failure (genuine
+            # garbage) unlinks, so an EIO burst cannot silently destroy a
+            # queued job
             try:
-                job = FleetJob.from_json(lease.read_text())
-            except (ValueError, OSError):
-                lease.unlink(missing_ok=True)
+                reader = (lease.read_text if io is None
+                          else lambda: io.read_text(lease,
+                                                    "lease.reclaim.read"))
+                job = FleetJob.from_json(retry_io(reader,
+                                                  site="lease.reclaim.read"))
+            except ValueError:
+                lease.unlink(missing_ok=True)      # unparseable: job lost
                 continue
+            except FileNotFoundError:
+                continue                           # released under us
+            except OSError:
+                continue                           # retry on the next pass
             self.fail(job, lease, f"lease expired after {age:.1f}s",
                       max_attempts=max_attempts)
             touched.append(jid)

@@ -28,6 +28,7 @@ from typing import Callable, Dict, List, Mapping, Optional
 
 import contextlib
 
+from .. import chaos
 from ..session import record_from_search
 from ..store import RecordStore, SAMPLE_SOURCE, TuneRecord
 from ..telemetry import TelemetryExporter, get_telemetry
@@ -148,7 +149,16 @@ class Worker:
             t.join()
         rec = record_from_search(job.space, job.inputs, result,
                                  tuner.backend, source=job.source)
+        # kill-point: tuned but nothing durable yet — a crash here loses
+        # only work the lease expiry requeues
+        io = chaos._IO
+        if io is not None:
+            io.probe("worker.tuned")
         self.shard.add(rec)
+        if io is not None:
+            # kill-point: the record is in the shard but no done marker —
+            # the job re-runs and the merge's newest-wins index absorbs it
+            io.probe("worker.appended")
         if self.collect_samples and result.measured:
             for cfg, tflops in result.measured:
                 if cfg == result.best:
@@ -170,6 +180,11 @@ class Worker:
             return None
         job, lease_path = claimed
         self.report.claimed += 1
+        # kill-point: claimed but untouched — classic crashed-worker case,
+        # recovered by lease expiry + requeue
+        io = chaos._IO
+        if io is not None:
+            io.probe("worker.claimed")
         t0 = time.time()
         global _TRACE
         t = _TRACE
@@ -204,6 +219,10 @@ class Worker:
             if sp is not None:
                 sp.attrs["outcome"] = "tuned"
                 sp.attrs["tflops"] = round(float(rec.tflops), 3)
+        if io is not None:
+            # kill-point: between shard append and done marker — the
+            # re-run-not-lost window the E19 invariant pins down
+            io.probe("worker.complete")
         ok = self.fleet.complete(job, lease_path, {
             "worker_id": self.worker_id, "tflops": rec.tflops,
             "backend": rec.backend, "wall_s": round(time.time() - t0, 4),

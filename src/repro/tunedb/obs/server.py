@@ -10,7 +10,10 @@ Three routes, all read-only:
 * ``/trace``   — the tracer's retained spans as Chrome trace-event JSON
   (:func:`~.trace.chrome_trace`): save the body to a file and open it in
   Perfetto.  404 while tracing is disabled.
-* ``/healthz`` — liveness probe, always ``ok``.
+* ``/healthz`` — liveness/readiness probe.  Without a ``health`` callable
+  it always answers ``200 ok``; with one (the Engine passes its shedding
+  state) it answers ``503`` plus the reason while the process is degraded,
+  so load balancers stop routing to a replica that is shedding requests.
 
 The server is a ``ThreadingHTTPServer`` on a daemon thread: scrapes ride
 their own threads and never block serving, and an abandoned server dies
@@ -50,7 +53,8 @@ class StatusServer:
     def __init__(self, *, host: str = "127.0.0.1", port: int = 0,
                  controller=None, fleet: Optional[str] = None,
                  store=None, telemetry=None, models=None,
-                 follower=None, router=None, tracer=None) -> None:
+                 follower=None, router=None, tracer=None,
+                 health=None) -> None:
         self.host = host
         self.port = port
         self.controller = controller
@@ -61,6 +65,9 @@ class StatusServer:
         self.follower = follower
         self.router = router
         self.tracer = tracer
+        # health() -> truthy (healthy) | falsy | (False, "reason"); exceptions
+        # count as unhealthy — a probe must never report ok by accident
+        self.health = health
         self._httpd: Optional[ThreadingHTTPServer] = None
         self._thread: Optional[threading.Thread] = None
 
@@ -76,6 +83,20 @@ class StatusServer:
 
     def plan_json(self) -> dict:
         return plan_snapshot()
+
+    def health_check(self) -> tuple:
+        """(ok, reason) from the ``health`` callable; no callable = ok."""
+        if self.health is None:
+            return True, "ok"
+        try:
+            out = self.health()
+        except Exception as exc:
+            return False, f"health probe failed: {exc}"
+        if isinstance(out, tuple):
+            ok = bool(out[0])
+            reason = str(out[1]) if len(out) > 1 else "degraded"
+            return ok, reason
+        return (True, "ok") if out else (False, "degraded")
 
     def trace_json(self) -> Optional[dict]:
         """Retained spans as a Chrome trace-event document, or None while
@@ -117,6 +138,10 @@ class StatusServer:
                         body = (json.dumps(doc) + "\n").encode()
                         ctype = "application/json"
                     elif path == "/healthz":
+                        ok, reason = server.health_check()
+                        if not ok:
+                            self.send_error(503, reason)
+                            return
                         body, ctype = b"ok\n", "text/plain"
                     else:
                         self.send_error(404, "unknown route")

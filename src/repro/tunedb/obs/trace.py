@@ -404,8 +404,14 @@ class Tracer:
         path = pathlib.Path(path)
         path.parent.mkdir(parents=True, exist_ok=True)
         buf = "".join(json.dumps(sp.to_json()) + "\n" for sp in spans)
+        from .. import chaos               # obs is imported by tunedb: lazy
+        io = chaos._IO
         with open(path, "a") as f:
-            f.write(buf)
+            if io is None:
+                f.write(buf)
+            else:                          # torn dump = torn final line,
+                io.file_write(f, buf, "trace.export")  # readers tolerate it
+
         with self._lock:
             self._spans.clear()
         return len(spans)

@@ -65,6 +65,7 @@ import threading
 import time
 from typing import Callable, Dict, List, Mapping, Optional, Tuple
 
+from . import chaos
 from .store import (DispatchPlan, RecordStore, normalize_config,
                     normalize_inputs, shape_key)
 
@@ -217,11 +218,20 @@ def _write_artifact(plan: DispatchPlan, dest: pathlib.Path, *,
     dest.parent.mkdir(parents=True, exist_ok=True)
     tmp = dest.parent / f".tmp-{dest.name}-{os.getpid()}-{id(plan) & 0xffff}"
     tmp.mkdir(parents=True, exist_ok=True)
+    io = chaos._IO
     try:
-        (tmp / ENTRIES_NAME).write_bytes(blob)
-        (tmp / MANIFEST_NAME).write_text(
-            json.dumps(manifest.to_dict(), sort_keys=True), encoding="utf-8")
-        os.rename(tmp, dest)            # atomic: whole artifact or nothing
+        if io is None:
+            (tmp / ENTRIES_NAME).write_bytes(blob)
+            (tmp / MANIFEST_NAME).write_text(
+                json.dumps(manifest.to_dict(), sort_keys=True),
+                encoding="utf-8")
+            os.rename(tmp, dest)        # atomic: whole artifact or nothing
+        else:
+            io.write_bytes(tmp / ENTRIES_NAME, blob, "plan.export.entries")
+            io.write_text(tmp / MANIFEST_NAME,
+                          json.dumps(manifest.to_dict(), sort_keys=True),
+                          "plan.export.manifest")
+            io.rename(tmp, dest, "plan.export.rename")
     except BaseException:
         for p in (tmp / ENTRIES_NAME, tmp / MANIFEST_NAME):
             p.unlink(missing_ok=True)
@@ -274,8 +284,11 @@ def export_plan(plan: DispatchPlan, out_dir: os.PathLike, *,
 def read_manifest(plan_dir: os.PathLike) -> PlanManifest:
     """Parse + schema-gate a plan directory's manifest (no entry read)."""
     path = pathlib.Path(plan_dir) / MANIFEST_NAME
+    io = chaos._IO
     try:
-        doc = json.loads(path.read_text(encoding="utf-8"))
+        text = (path.read_text(encoding="utf-8") if io is None
+                else io.read_text(path, "plan.pull.manifest"))
+        doc = json.loads(text)
     except FileNotFoundError:
         raise PlanArtifactError(f"{path}: not a plan artifact (no manifest)")
     except (OSError, ValueError) as e:
@@ -297,8 +310,10 @@ def load_plan(plan_dir: os.PathLike) -> DispatchPlan:
     plan_dir = pathlib.Path(plan_dir)
     manifest = read_manifest(plan_dir)
     entries_path = plan_dir / ENTRIES_NAME
+    io = chaos._IO
     try:
-        blob = entries_path.read_bytes()
+        blob = (entries_path.read_bytes() if io is None
+                else io.read_bytes(entries_path, "plan.pull.entries"))
     except OSError as e:
         raise PlanArtifactError(f"{entries_path}: unreadable entries ({e})")
     digest = plan_digest(blob)
@@ -359,10 +374,16 @@ def check_freshness(manifest: PlanManifest,
 # registry: publish/follow over a shared directory
 # ---------------------------------------------------------------------------
 
-def _atomic_write(path: pathlib.Path, text: str) -> None:
+def _atomic_write(path: pathlib.Path, text: str, *,
+                  site: str = "plan.registry.write") -> None:
+    io = chaos._IO
     tmp = path.with_name(path.name + f".tmp-{os.getpid()}")
-    tmp.write_text(text, encoding="utf-8")
-    os.replace(tmp, path)
+    if io is None:
+        tmp.write_text(text, encoding="utf-8")
+        os.replace(tmp, path)
+    else:
+        io.write_text(tmp, text, site)
+        io.replace(tmp, path, site + ".replace")
 
 
 class PlanRegistry:
@@ -418,9 +439,12 @@ class PlanRegistry:
         """The published pointer, or None (no publish yet / torn write on a
         filesystem without atomic replace — indistinguishable, and both
         mean "try again next poll")."""
+        io = chaos._IO
         try:
-            doc = json.loads((self.root / CURRENT_NAME).read_text(
-                encoding="utf-8"))
+            path = self.root / CURRENT_NAME
+            text = (path.read_text(encoding="utf-8") if io is None
+                    else io.read_text(path, "plan.registry.current"))
+            doc = json.loads(text)
         except (OSError, ValueError):
             return None
         if not isinstance(doc, dict) or "generation" not in doc:

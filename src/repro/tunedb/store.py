@@ -35,11 +35,19 @@ import os
 import pathlib
 import threading
 import time
+import warnings
+import zlib
 from typing import Deque, Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
+from . import chaos
+
 SCHEMA_VERSION = 1
+
+# store paths already warned about quarantined lines (warn once per path
+# per process; the metric keeps the full count)
+_QUARANTINE_WARNED: set = set()
 
 # records whose source is this string are training data for the performance
 # model (model.py), not serving candidates — they stay out of the index.
@@ -109,6 +117,12 @@ class TuneRecord:
         d = dataclasses.asdict(self)
         if d["merged_from"] is None:        # keep un-merged lines lean
             del d["merged_from"]
+        # per-line integrity: crc32 over the canonical record JSON.  The
+        # field is ADDITIVE — older readers drop unknown fields, so v1
+        # stores without it (and v1 readers seeing it) both keep working;
+        # readers that know the field verify it (see from_json / fsck).
+        d["crc"] = zlib.crc32(
+            json.dumps(d, sort_keys=True).encode("utf-8"))
         return json.dumps(d, sort_keys=True)
 
     @classmethod
@@ -120,6 +134,13 @@ class TuneRecord:
             # a newer writer's semantics are unknown; skip, don't misread
             raise ValueError(
                 f"record schema v{d['schema_version']} > v{SCHEMA_VERSION}")
+        crc = d.pop("crc", None)
+        if crc is not None:
+            want = zlib.crc32(json.dumps(d, sort_keys=True).encode("utf-8"))
+            if int(crc) != want:
+                raise ValueError(
+                    f"record CRC mismatch (line says {crc}, content "
+                    f"recomputes {want}) — corrupt in place, not torn")
         known = {f.name for f in dataclasses.fields(cls)}
         d = {k: v for k, v in d.items() if k in known}
         d["inputs"] = normalize_inputs(d.get("inputs", {}))
@@ -217,6 +238,10 @@ class RecordStore:
         return cls(path)
 
     def _load(self) -> None:
+        io = chaos._IO
+        if io is not None:
+            io.probe("store.load")
+        bad: List[str] = []
         with self.path.open("r", encoding="utf-8") as fh:
             for line in fh:
                 line = line.strip()
@@ -226,6 +251,7 @@ class RecordStore:
                     rec = TuneRecord.from_json(line)
                 except (ValueError, TypeError, KeyError):
                     self.n_skipped += 1        # torn tail / foreign garbage
+                    bad.append(line)
                     continue
                 self.n_lines += 1
                 self._admit(rec)
@@ -234,6 +260,78 @@ class RecordStore:
             if fh.tell():
                 fh.seek(-1, os.SEEK_END)
                 self._needs_newline = fh.read(1) != b"\n"
+        if bad:
+            self._quarantine(bad, reason="load")
+
+    def quarantine_dir(self) -> Optional[pathlib.Path]:
+        if self.path is None:
+            return None
+        return self.path.with_name(self.path.name + ".quarantine")
+
+    def _quarantine(self, lines: List[str], *, reason: str
+                    ) -> Optional[pathlib.Path]:
+        """Preserve unparseable lines in ``<store>.quarantine/`` so a torn
+        tail or corrupt record is never silently discarded — an operator
+        (or ``tunedb fsck``) can inspect and recover them later.  Best
+        effort by design: a quarantine failure must never block a load."""
+        if self.path is None or not lines:
+            return None
+        try:
+            qdir = self.quarantine_dir()
+            qdir.mkdir(parents=True, exist_ok=True)
+            dest = qdir / f"{int(time.time() * 1000):013d}-{reason}.jsonl"
+            with dest.open("a", encoding="utf-8") as fh:
+                fh.write("".join(line + "\n" for line in lines))
+        except OSError:
+            return None
+        try:
+            from .obs.metrics import get_registry
+            get_registry().counter(
+                "tunedb_store_quarantined_lines_total",
+                "torn/corrupt store lines moved to quarantine").inc(
+                    len(lines))
+        except Exception:
+            pass        # observability never blocks recovery
+        key = str(self.path)
+        if key not in _QUARANTINE_WARNED:
+            _QUARANTINE_WARNED.add(key)
+            warnings.warn(
+                f"tunedb store {self.path}: quarantined {len(lines)} "
+                f"unparseable line(s) to {dest}; parsed records keep "
+                "serving (run `tunedb fsck --repair` to rewrite the file)",
+                RuntimeWarning, stacklevel=2)
+        return dest
+
+    def repair(self) -> Dict[str, int]:
+        """Rewrite the store file keeping only verifiably-parseable lines;
+        everything else moves to the quarantine dir.  The fsck ``--repair``
+        path.  Returns ``{"kept": n, "quarantined": m}``."""
+        if self.path is None or not self.path.exists():
+            return {"kept": 0, "quarantined": 0}
+        good: List[str] = []
+        bad: List[str] = []
+        with self._lock:
+            with self.path.open("r", encoding="utf-8") as fh:
+                for line in fh:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        TuneRecord.from_json(line)
+                    except (ValueError, TypeError, KeyError):
+                        bad.append(line)
+                    else:
+                        good.append(line)
+            if bad:
+                self._quarantine(bad, reason="repair")
+                tmp = self.path.with_name(self.path.name + ".repair-tmp")
+                with tmp.open("w", encoding="utf-8") as fh:
+                    fh.write("".join(line + "\n" for line in good))
+                    fh.flush()
+                    os.fsync(fh.fileno())
+                os.replace(tmp, self.path)
+                self._needs_newline = False
+        return {"kept": len(good), "quarantined": len(bad)}
 
     def _admit(self, rec: TuneRecord) -> Optional[TuneRecord]:
         """Index one record; returns the serving record it replaced, if any."""
@@ -271,14 +369,22 @@ class RecordStore:
             self.version += 1
             if self.path is not None:
                 self.path.parent.mkdir(parents=True, exist_ok=True)
+                io = chaos._IO
                 with self.path.open("a", encoding="utf-8") as fh:
                     if self._needs_newline:     # seal a torn tail line first
                         fh.write("\n")
                         self._needs_newline = False
-                    fh.write(rec.to_json() + "\n")
+                    line = rec.to_json() + "\n"
+                    if io is None:
+                        fh.write(line)
+                    else:
+                        io.file_write(fh, line, "store.append")
                     fh.flush()
                     if self.fsync:
-                        os.fsync(fh.fileno())
+                        if io is None:
+                            os.fsync(fh.fileno())
+                        else:
+                            io.fsync(fh, "store.append.fsync")
                 self.n_lines += 1
             replaced = self._admit(rec)
             if replaced is not None:
@@ -294,8 +400,12 @@ class RecordStore:
         story is lease expiry + requeue, not power-loss durability."""
         if self.path is None or not self.path.exists():
             return
+        io = chaos._IO
         with self.path.open("rb") as fh:
-            os.fsync(fh.fileno())
+            if io is None:
+                os.fsync(fh.fileno())
+            else:
+                io.fsync(fh, "store.sync")
 
     # -- lookup --------------------------------------------------------------
     def _exact(self, space: str, inputs: Mapping[str, int],
@@ -550,12 +660,23 @@ class RecordStore:
         path.parent.mkdir(parents=True, exist_ok=True)
         recs = self.records()
         tmp = path.with_name(path.name + ".tmp")
+        io = chaos._IO
         with tmp.open("w", encoding="utf-8") as fh:
-            for rec in reversed(recs):           # chronological order
-                fh.write(rec.to_json() + "\n")
+            blob = "".join(rec.to_json() + "\n"
+                           for rec in reversed(recs))   # chronological order
+            if io is None:
+                fh.write(blob)
+            else:
+                io.file_write(fh, blob, "store.export")
             fh.flush()
-            os.fsync(fh.fileno())
-        os.replace(tmp, path)
+            if io is None:
+                os.fsync(fh.fileno())
+            else:
+                io.fsync(fh, "store.export.fsync")
+        if io is None:
+            os.replace(tmp, path)
+        else:
+            io.replace(tmp, path, "store.export.replace")
         return len(recs)
 
     # -- reporting -----------------------------------------------------------

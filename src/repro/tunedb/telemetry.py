@@ -55,6 +55,8 @@ import pathlib
 import threading
 from typing import Dict, Iterable, List, Mapping, Optional, Tuple
 
+from . import chaos
+from .chaos import retry_io
 from .store import normalize_inputs
 
 TELEMETRY_VERSION = 1
@@ -370,16 +372,31 @@ class ShapeTelemetry:
                 "ticks": dict(self._ticks),
             }
         tmp = path.with_name(path.name + ".tmp")
-        with tmp.open("w", encoding="utf-8") as fh:
-            fh.write(json.dumps(payload, sort_keys=True))
-            fh.flush()
-            os.fsync(fh.fileno())
-        os.replace(tmp, path)
+        io = chaos._IO
+        if io is None:
+            with tmp.open("w", encoding="utf-8") as fh:
+                fh.write(json.dumps(payload, sort_keys=True))
+                fh.flush()
+                os.fsync(fh.fileno())
+            os.replace(tmp, path)
+        else:
+            with tmp.open("w", encoding="utf-8") as fh:
+                io.file_write(fh, json.dumps(payload, sort_keys=True),
+                              "telemetry.save")
+                fh.flush()
+                io.fsync(fh, "telemetry.save.fsync")
+            io.replace(tmp, path, "telemetry.save.replace")
 
     @classmethod
     def load(cls, path: os.PathLike) -> "ShapeTelemetry":
         t = cls()
-        payload = json.loads(pathlib.Path(path).read_text())
+        path = pathlib.Path(path)
+        io = chaos._IO
+        # stale_read / truncated_read faults here exercise the view's
+        # "torn mid-read: try an older epoch" fallback in _merge_worker
+        text = (path.read_text() if io is None
+                else io.read_text(path, "telemetry.load"))
+        payload = json.loads(text)
         for space, entries in payload.get("counts", {}).items():
             for e in entries:
                 t.record(space, e["inputs"], n=int(e["count"]))
@@ -481,8 +498,11 @@ class TelemetryExporter:
         def loop() -> None:
             while not self._stop.wait(self.interval_s):
                 try:
-                    self.export_once()
-                except OSError:              # bus unavailable: retry next tick
+                    # transient EIO/EAGAIN retried in-tick (counted in
+                    # tunedb_io_retries_total); a persistent outage waits
+                    # for the next interval instead of killing the thread
+                    retry_io(self.export_once, site="telemetry.export")
+                except OSError:
                     pass
 
         self._thread = threading.Thread(
@@ -497,8 +517,8 @@ class TelemetryExporter:
             self._thread.join(timeout=5.0)
             self._thread = None
         if final_export:
-            try:
-                self.export_once()           # flush the tail of the window
+            try:                             # flush the tail of the window
+                retry_io(self.export_once, site="telemetry.export")
             except OSError:
                 pass
 

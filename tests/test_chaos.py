@@ -1,0 +1,537 @@
+"""Deterministic fault injection + crash-safe tunedb (PR 10).
+
+Pins the robustness contracts: the chaos shim is zero-cost and invisible
+while disarmed (monkeypatch-proven); per-line CRCs catch silent corruption
+and old CRC-less stores still load; torn/garbage lines are quarantined —
+never served, never lost; a SIGKILLed appender loses nothing it
+acknowledged; the lease protocol under seeded fault plans still finishes
+every job exactly once; ``retry_io`` retries transient errno, never
+genuine races; ``tunedb fsck`` detects and repairs each damage class; and
+the serving layer degrades gracefully (deadlines, shedding, /healthz 503,
+retune watchdog) instead of wedging.
+"""
+
+import errno
+import json
+import pathlib
+import signal
+import subprocess
+import sys
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.core.backend import SimulatedTPUBackend
+from repro.core.search import SearchResult
+from repro.core.space import gemm_input
+from repro.tunedb import chaos
+from repro.tunedb.__main__ import main as tunedb_main
+from repro.tunedb.chaos import (FaultPlan, FaultRule, KillPoint, retry_io,
+                                TRANSIENT_ERRNOS)
+from repro.tunedb.fleet import Coordinator, FleetJob, Worker
+from repro.tunedb.store import RecordStore, TuneRecord
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+CFG = {"bm": 64, "bn": 128, "bk": 128, "k_unroll": 1, "k_split": 1,
+       "order": 0, "acc32": 1, "prefetch": 2}
+
+
+@pytest.fixture(autouse=True)
+def _disarmed():
+    """Chaos must never leak across tests (the shim is process-global)."""
+    chaos.disarm()
+    yield
+    chaos.disarm()
+
+
+def _rec(i: int = 0, tflops: float = 1.0) -> TuneRecord:
+    return TuneRecord(space="gemm", inputs=gemm_input(128 * (i + 1), 64, 512),
+                      config=dict(CFG), tflops=tflops, backend="sim")
+
+
+class StubTuner:
+    """Instant deterministic tuner: chaos tests are about I/O, not search."""
+
+    space = None
+    backend = SimulatedTPUBackend(noise=0.0)
+
+    def search(self, inputs, remeasure=True):
+        tf = float(self.backend.measure("gemm", CFG, inputs))
+        return SearchResult(best=dict(CFG), predicted_tflops=tf,
+                            measured_tflops=tf, top_k=[(dict(CFG), tf)],
+                            n_candidates=1, measured=[(dict(CFG), tf)])
+
+
+# ---------------------------------------------------------------------------
+# CRC + quarantine + repair (crash-safe RecordStore)
+# ---------------------------------------------------------------------------
+
+def test_crc_roundtrip_and_mismatch():
+    rec = _rec()
+    line = rec.to_json()
+    assert json.loads(line)["crc"]
+    assert TuneRecord.from_json(line).tflops == rec.tflops
+    doc = json.loads(line)
+    doc["tflops"] = 99.0                    # bit-flip after the CRC stamp
+    with pytest.raises(ValueError, match="CRC"):
+        TuneRecord.from_json(json.dumps(doc))
+
+
+def test_crcless_legacy_line_still_loads(tmp_path):
+    """Schema stays additive: stores written before the crc field load."""
+    doc = json.loads(_rec().to_json())
+    doc.pop("crc")
+    legacy = tmp_path / "old.jsonl"
+    legacy.write_text(json.dumps(doc) + "\n")
+    s = RecordStore.open(legacy)
+    assert len(s) == 1 and s.n_skipped == 0
+
+
+def test_load_quarantines_garbage_and_repair_rewrites(tmp_path):
+    path = tmp_path / "db.jsonl"
+    s = RecordStore(path)
+    s.add(_rec(0))
+    s.add(_rec(1))
+    with path.open("a", encoding="utf-8") as fh:
+        fh.write('{"torn half-line\n')
+        fh.write(_rec(2).to_json() + "\n")
+    with pytest.warns(RuntimeWarning, match="quarantined"):
+        s2 = RecordStore.open(path)
+    assert len(s2) == 3 and s2.n_skipped == 1
+    qdir = s2.quarantine_dir()
+    assert qdir.is_dir()
+    quarantined = list(qdir.glob("*-load.jsonl"))
+    assert len(quarantined) == 1
+    assert "torn half-line" in quarantined[0].read_text()
+    # repair rewrites the file: the next load is clean, nothing lost
+    out = s2.repair()
+    assert out == {"kept": 3, "quarantined": 1}
+    s3 = RecordStore.open(path)
+    assert len(s3) == 3 and s3.n_skipped == 0
+    # the rewritten store appends correctly (newline bookkeeping intact)
+    s3.add(_rec(3))
+    assert len(RecordStore.open(path)) == 4
+
+
+def test_quarantine_warns_once_per_store(tmp_path):
+    import warnings as _w
+    path = tmp_path / "db.jsonl"
+    RecordStore(path).add(_rec())
+    with path.open("a") as fh:
+        fh.write("garbage\n")
+    with pytest.warns(RuntimeWarning):
+        RecordStore.open(path)
+    with path.open("a") as fh:
+        fh.write("more garbage\n")
+    with _w.catch_warnings():
+        _w.simplefilter("error")            # second load: silent
+        RecordStore.open(path)
+
+
+# ---------------------------------------------------------------------------
+# retry_io policy
+# ---------------------------------------------------------------------------
+
+def test_retry_io_retries_transient_errno():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError(errno.EIO, "injected")
+        return "ok"
+
+    assert retry_io(flaky, site="t", base_delay_s=0.0) == "ok"
+    assert calls["n"] == 3
+
+
+def test_retry_io_gives_up_after_budget():
+    def always():
+        raise OSError(errno.EIO, "injected")
+
+    with pytest.raises(OSError):
+        retry_io(always, site="t", attempts=3, base_delay_s=0.0)
+
+
+@pytest.mark.parametrize("exc", [
+    FileNotFoundError(errno.ENOENT, "lost race"),
+    OSError(errno.ENOSPC, "disk full"),
+])
+def test_retry_io_never_retries_nontransient(exc):
+    """A lost rename race or a full disk is not transient: fail fast so
+    the protocol-level recovery (requeue, degrade) runs instead."""
+    calls = {"n": 0}
+
+    def fn():
+        calls["n"] += 1
+        raise exc
+
+    with pytest.raises(type(exc)):
+        retry_io(fn, site="t", base_delay_s=0.0)
+    assert calls["n"] == 1
+    assert exc.errno not in TRANSIENT_ERRNOS or isinstance(
+        exc, FileNotFoundError)
+
+
+# ---------------------------------------------------------------------------
+# the shim is invisible while disarmed (E19's zero-cost criterion)
+# ---------------------------------------------------------------------------
+
+def test_zero_shim_calls_while_disarmed(tmp_path, monkeypatch):
+    """Monkeypatch-proven: with no plan armed, the store append/load, the
+    full lease lifecycle, and plan export/load make ZERO FaultyIO calls."""
+    hits = {"n": 0}
+
+    def trap(self, *a, **kw):
+        hits["n"] += 1
+        raise AssertionError("disarmed path touched the chaos shim")
+
+    for name in ("probe", "read_text", "read_bytes", "write_text",
+                 "write_bytes", "file_write", "replace", "rename",
+                 "fsync", "utime", "unlink"):
+        monkeypatch.setattr(chaos.FaultyIO, name, trap)
+    assert chaos._IO is None
+
+    store = RecordStore(tmp_path / "db.jsonl")
+    store.add(_rec())
+    RecordStore.open(tmp_path / "db.jsonl")
+    coord = Coordinator(tmp_path / "fleet", store, lease_timeout_s=5.0)
+    coord.publish([FleetJob(space="gemm", inputs=gemm_input(128, 64, 512))])
+    fd = coord.fleet
+    job, lp = fd.claim()
+    fd.heartbeat(lp)
+    fd.complete(job, lp, {"worker_id": "w"})
+    from repro.tunedb.plans import export_plan, load_plan
+    from repro.tunedb.store import DispatchPlan
+    plan = DispatchPlan(generation=0, fingerprint="sim", store_version=-1,
+                        table={("gemm", (("M", 128),)): (dict(CFG), "exact")})
+    load_plan(export_plan(plan, tmp_path / "plan"))
+    assert hits["n"] == 0
+
+
+# ---------------------------------------------------------------------------
+# determinism + kill-points
+# ---------------------------------------------------------------------------
+
+def test_same_seed_same_faults(tmp_path):
+    def run(seed):
+        plan = FaultPlan(seed=seed, rules=[
+            FaultRule(site="store.append", kind="errno", p=0.5,
+                      errno=errno.EIO)])
+        path = tmp_path / f"s{seed}-{time.monotonic_ns()}.jsonl"
+        s = RecordStore(path)
+        outcomes = []
+        with chaos.armed(plan) as io:
+            for i in range(20):
+                try:
+                    s.add(_rec(i))
+                    outcomes.append("ok")
+                except OSError:
+                    outcomes.append("eio")
+        return outcomes, io.report()
+
+    a_out, a_rep = run(7)
+    b_out, b_rep = run(7)
+    c_out, _ = run(8)
+    assert a_out == b_out and a_rep["injected_total"] == b_rep[
+        "injected_total"]
+    assert "eio" in a_out and "ok" in a_out     # p=0.5 actually mixes
+    assert a_out != c_out                        # different seed differs
+
+
+def test_kill_point_is_not_swallowed_by_job_isolation(tmp_path):
+    """KillPoint derives from BaseException: the worker's `except
+    Exception` job isolation must NOT absorb a simulated crash."""
+    store = RecordStore(tmp_path / "db.jsonl")
+    coord = Coordinator(tmp_path / "fleet", store, lease_timeout_s=0.2)
+    coord.publish([FleetJob(space="gemm", inputs=gemm_input(128, 64, 512))])
+    w = Worker(tmp_path / "fleet", worker_id="doomed",
+               tuners={"gemm": StubTuner()}, poll_s=0.01, heartbeat_s=0.05)
+    plan = FaultPlan(seed=0, rules=[
+        FaultRule(site="worker.tuned", kind="kill", p=1.0, max_count=1)])
+    with chaos.armed(plan):
+        with pytest.raises(KillPoint):
+            w.run_one()
+    # the lease the dead worker held expires and the job requeues
+    time.sleep(0.25)
+    assert coord.fleet.reclaim_expired(
+        lease_timeout_s=0.2, max_attempts=3)
+    assert coord.fleet.counts()["queue"] == 1
+
+
+def test_torn_append_quarantined_on_reload(tmp_path):
+    path = tmp_path / "db.jsonl"
+    s = RecordStore(path, fsync=True)
+    s.add(_rec(0))
+    plan = FaultPlan(seed=0, rules=[
+        FaultRule(site="store.append", kind="torn_write", p=1.0,
+                  max_count=1)])
+    with chaos.armed(plan):
+        with pytest.raises(KillPoint):
+            s.add(_rec(1))
+    # the "crashed" process's file has a torn tail; a fresh open serves
+    # every complete record and quarantines the fragment
+    with pytest.warns(RuntimeWarning, match="quarantined"):
+        s2 = RecordStore.open(path)
+    assert len(s2) == 1
+    assert s2.records()[0].inputs == _rec(0).inputs
+    # and the store keeps working after the crash
+    s2.add(_rec(2))
+    assert len(RecordStore.open(path)) == 2
+
+
+# ---------------------------------------------------------------------------
+# SIGKILL mid-append: nothing acknowledged is ever lost
+# ---------------------------------------------------------------------------
+
+_CHILD = """
+import sys
+sys.path.insert(0, {src!r})
+from repro.tunedb.store import RecordStore, TuneRecord
+s = RecordStore({path!r}, fsync=True)
+i = 0
+while True:
+    s.add(TuneRecord(space="gemm", inputs={{"M": i, "N": 64, "K": 512}},
+                     config={{"bm": 32}}, tflops=1.0, backend="sim"))
+    print(i, flush=True)        # ACK: durable before this line prints
+    i += 1
+"""
+
+
+def test_sigkill_mid_append_recovers_all_acked(tmp_path):
+    path = str(tmp_path / "db.jsonl")
+    proc = subprocess.Popen(
+        [sys.executable, "-c", _CHILD.format(src=SRC, path=path)],
+        stdout=subprocess.PIPE, stderr=subprocess.DEVNULL, text=True)
+    acked = []
+    try:
+        for line in proc.stdout:
+            acked.append(int(line))
+            if len(acked) >= 12:
+                proc.send_signal(signal.SIGKILL)   # mid-flight, no cleanup
+                break
+    finally:
+        proc.kill()
+        proc.wait(timeout=30)
+    assert len(acked) >= 12
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("ignore")       # a torn tail line may warn
+        s = RecordStore.open(path)
+    recovered = {r.inputs["M"] for r in s.records()}
+    missing = set(acked) - recovered
+    assert not missing, f"acked records lost after SIGKILL: {missing}"
+
+
+# ---------------------------------------------------------------------------
+# seeded chaos property test: the lease protocol finishes every job once
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [11, 23, 47])
+def test_lease_protocol_survives_seeded_chaos(tmp_path, seed):
+    store = RecordStore(tmp_path / "db.jsonl")
+    coord = Coordinator(tmp_path / "fleet", store, lease_timeout_s=0.3)
+    jobs = [FleetJob(space="gemm", inputs=gemm_input(128 * (i + 1), 64, 512))
+            for i in range(6)]
+    assert coord.publish(jobs) == 6
+    plan = FaultPlan(seed=seed, rules=[
+        FaultRule(site="worker.*", kind="kill", p=0.15, max_count=2),
+        FaultRule(site="lease.*", kind="errno", p=0.10, errno=errno.EIO,
+                  max_count=6),
+        FaultRule(site="store.append", kind="torn_write", p=0.05,
+                  max_count=1),
+    ])
+
+    def run_worker(wid):
+        w = Worker(tmp_path / "fleet", worker_id=wid,
+                   tuners={"gemm": StubTuner()}, poll_s=0.01,
+                   heartbeat_s=0.05)
+        try:
+            w.run(max_jobs=8, idle_timeout_s=0.5)
+        except KillPoint:
+            pass                             # simulated crash: thread dies
+
+    with chaos.armed(plan) as io:
+        threads = [threading.Thread(target=run_worker, args=(f"w{i}",))
+                   for i in range(3)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=30)
+    assert io.calls > 0                      # the plan actually engaged
+
+    # recovery phase, faults off: requeue expired leases, drain the rest
+    deadline = time.time() + 30
+    while time.time() < deadline:
+        time.sleep(0.31)
+        coord.fleet.reclaim_expired(lease_timeout_s=0.3, max_attempts=10)
+        c = coord.fleet.counts()
+        if c["leases"] == 0 and c["queue"] == 0:
+            break
+        Worker(tmp_path / "fleet", worker_id=f"sweep-{time.monotonic_ns()}",
+               tuners={"gemm": StubTuner()}, poll_s=0.01,
+               heartbeat_s=0.05).run(max_jobs=8, idle_timeout_s=0.2)
+    c = coord.fleet.counts()
+    assert c["queue"] == 0 and c["leases"] == 0, c
+    # the invariant: every published job reached done/failed EXACTLY once
+    done = {p.stem for p in coord.fleet.done.glob("*.json")}
+    failed = {p.stem for p in coord.fleet.failed.glob("*.json")}
+    assert done | failed == {j.job_id for j in jobs}
+    assert not (done & failed)
+    # and the merge serves every done job's record despite torn shards
+    coord.poll()
+    merged = {tuple(sorted(r.inputs.items()))
+              for r in store.records() if r.source == "fleet"}
+    for j in jobs:
+        if j.job_id in done:
+            assert tuple(sorted(j.inputs.items())) in merged
+
+
+# ---------------------------------------------------------------------------
+# fsck CLI
+# ---------------------------------------------------------------------------
+
+def test_fsck_clean_store_exits_zero(tmp_path, capsys):
+    path = tmp_path / "db.jsonl"
+    RecordStore(path).add(_rec())
+    assert tunedb_main(["fsck", str(path)]) == 0
+    assert "verdict: OK" in capsys.readouterr().out
+
+
+def test_fsck_detects_then_repairs_damage(tmp_path, capsys):
+    path = tmp_path / "db.jsonl"
+    s = RecordStore(path)
+    s.add(_rec(0))
+    with path.open("a") as fh:
+        fh.write('{"bad\n')
+    assert tunedb_main(["fsck", str(path)]) == 1
+    with pytest.warns(RuntimeWarning):
+        assert tunedb_main(["fsck", str(path), "--repair", "--json"]) == 0
+    out = capsys.readouterr().out
+    assert "repaired" in out
+    assert tunedb_main(["fsck", str(path)]) == 0
+    assert len(RecordStore.open(path)) == 1
+
+
+def test_fsck_fleet_invariants(tmp_path, capsys):
+    path = tmp_path / "db.jsonl"
+    store = RecordStore(path)
+    store.add(_rec())
+    coord = Coordinator(tmp_path / "fleet", store)
+    coord.publish([FleetJob(space="gemm", inputs=gemm_input(128, 64, 512))])
+    fd = coord.fleet
+    job, lp = fd.claim()
+    fd.complete(job, lp, {"worker_id": "w"})
+    # orphan lease behind the done marker + a garbage queue file
+    (fd.leases / f"{job.job_id}.json").write_text(job.to_json())
+    (fd.queue / "junk.json").write_text("not a job")
+    args = ["fsck", str(path), "--fleet", str(tmp_path / "fleet")]
+    assert tunedb_main(args) == 1
+    assert tunedb_main(args + ["--repair"]) == 0
+    assert tunedb_main(args) == 0
+    capsys.readouterr()
+
+
+# ---------------------------------------------------------------------------
+# serving degradation: deadlines, shedding, /healthz, retune watchdog
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_model():
+    import jax
+    import jax.numpy as jnp
+    from repro.models import ModelConfig, init_params
+    cfg = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4, n_kv=2,
+                      d_ff=128, vocab=128, dtype=jnp.float32, attn_chunk=16,
+                      logit_chunk=16, remat=False)
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+def test_shed_threshold_rejects_newest_overflow(small_model):
+    import numpy as np
+    from repro.serve import Engine, ServeConfig
+    cfg, params = small_model
+    rng = np.random.default_rng(0)
+    eng = Engine(cfg, params, ServeConfig(max_len=64, slots=2,
+                                          shed_threshold=3))
+    outs = eng.generate([rng.integers(0, 128, 5) for _ in range(6)],
+                        max_new=4)
+    assert eng.shed_requests == 3
+    assert sum(1 for o in outs if not o) == 3
+    # the OLDEST arrivals were served; the newest were shed
+    assert all(len(o) == 4 for o in outs[:3])
+    assert all(not o for o in outs[3:])
+    assert not eng.shedding                   # backlog drained: healthy
+    assert eng._health() is True
+
+
+def test_request_deadline_rejects_and_retires(small_model):
+    import numpy as np
+    from repro.serve import Engine, ServeConfig
+    cfg, params = small_model
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 128, 5) for _ in range(3)]
+    # an already-expired deadline: every request is rejected unserved
+    eng = Engine(cfg, params, ServeConfig(max_len=64, slots=2,
+                                          request_deadline_s=0.0))
+    outs = eng.generate(prompts, max_new=4)
+    assert all(not o for o in outs)
+    assert eng.deadline_retired == 3
+    # a generous deadline changes nothing
+    eng2 = Engine(cfg, params, ServeConfig(max_len=64, slots=2,
+                                           request_deadline_s=3600.0))
+    ref = Engine(cfg, params, ServeConfig(max_len=64, slots=2))
+    assert eng2.generate(prompts, max_new=4) == ref.generate(prompts,
+                                                             max_new=4)
+    assert eng2.deadline_retired == 0
+
+
+def test_healthz_degrades_to_503():
+    from repro.tunedb.obs import StatusServer
+    state = {"ok": True}
+    with StatusServer(port=0, health=lambda: (state["ok"], "shedding")) as s:
+        assert urllib.request.urlopen(
+            f"{s.url}/healthz", timeout=5).status == 200
+        state["ok"] = False
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            urllib.request.urlopen(f"{s.url}/healthz", timeout=5)
+        assert exc.value.code == 503
+        state["ok"] = True
+        assert urllib.request.urlopen(
+            f"{s.url}/healthz", timeout=5).status == 200
+
+
+def test_retune_watchdog_cancels_hung_epoch(tmp_path):
+    from repro.tunedb.controller import RetuneConfig, RetuneController
+    store = RecordStore(tmp_path / "db.jsonl")
+    ctl = RetuneController(store, async_mode=True,
+                           cfg=RetuneConfig(session_window_s=0.1))
+    # simulate a hung background epoch: alive thread, stale submit stamp
+    release = threading.Event()
+    th = threading.Thread(target=release.wait, daemon=True)
+    th.start()
+    ctl._async = th
+    ctl.async_submit_t = time.perf_counter() - 1.0
+    try:
+        assert ctl.maybe_retune() is None
+        assert ctl.watchdog_cancels == 1
+        assert ctl._async_cancel.is_set()
+        assert ctl.stats()["async"]["watchdog_cancels"] == 1
+        # the cancel event short-circuits a fleet wait immediately
+        coord = Coordinator(tmp_path / "fleet", store)
+        coord.publish(
+            [FleetJob(space="gemm", inputs=gemm_input(128, 64, 512))])
+        t0 = time.perf_counter()
+        assert coord.wait(timeout_s=30.0, poll_s=0.05,
+                          cancel=ctl._async_cancel) is False
+        assert time.perf_counter() - t0 < 5.0
+        # second poll while still hung: no double count
+        assert ctl.maybe_retune() is None
+        assert ctl.watchdog_cancels == 1
+    finally:
+        release.set()
+        th.join(timeout=5)

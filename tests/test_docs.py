@@ -31,7 +31,7 @@ def _subcommands(parser: argparse.ArgumentParser):
 
 def test_docs_exist():
     for name in ("README.md", "docs/PLANS.md", "docs/ARCHITECTURE.md",
-                 "docs/OBSERVABILITY.md"):
+                 "docs/OBSERVABILITY.md", "docs/ROBUSTNESS.md"):
         assert (REPO / name).is_file(), f"{name} is missing"
 
 
@@ -88,5 +88,22 @@ def test_tracing_docs_cover_the_surface():
 def test_docs_crosslink_each_other():
     obs = (REPO / "docs" / "OBSERVABILITY.md").read_text(encoding="utf-8")
     arch = (REPO / "docs" / "ARCHITECTURE.md").read_text(encoding="utf-8")
+    rob = (REPO / "docs" / "ROBUSTNESS.md").read_text(encoding="utf-8")
     assert "PLANS.md" in obs and "ARCHITECTURE.md" in obs
     assert "PLANS.md" in arch and "OBSERVABILITY.md" in arch
+    assert "ROBUSTNESS.md" in arch
+    assert "ARCHITECTURE.md" in rob and "OBSERVABILITY.md" in rob
+
+
+def test_robustness_docs_cover_the_surface():
+    """The robustness page must name the chaos harness surface, the
+    failure-mode machinery, and the degradation knobs."""
+    rob = (REPO / "docs" / "ROBUSTNESS.md").read_text(encoding="utf-8")
+    for needle in ("FaultPlan", "FaultRule", "KillPoint", "torn_write",
+                   "retry_io", "fsck", "--repair", "quarantine",
+                   "request_deadline_s", "shed_threshold", "/healthz",
+                   "retune_window_s", "bench_chaos",
+                   "tunedb_io_retries_total",
+                   "tunedb_store_quarantined_lines_total",
+                   "tunedb_requests_shed_total"):
+        assert needle in rob, f"ROBUSTNESS.md lost mention of {needle!r}"
